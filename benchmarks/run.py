@@ -1,0 +1,86 @@
+"""Benchmark aggregator — one function per paper table plus the roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract:
+* name: table row identifier
+* us_per_call: per-round (train tables) or per-step time in microseconds
+* derived: the table's own headline metric(s)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--tables 1,2,...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer rounds per table")
+    ap.add_argument("--tables", default="1,2,3,4,5,roofline")
+    ap.add_argument("--out", default="results/benchmarks.json")
+    args = ap.parse_args(argv)
+
+    from benchmarks import tables
+    if args.quick:
+        tables.ROUNDS.update({"emnist": 6, "cifar": 3, "so": 8, "dp": 6})
+
+    want = set(args.tables.split(","))
+    all_rows = []
+
+    def run_table(key, fn):
+        if key not in want:
+            return
+        t0 = time.time()
+        rows = fn()
+        all_rows.extend(rows)
+        for r in rows:
+            us = float(r.get("sec_per_round", 0.0)) * 1e6
+            derived = ";".join(
+                f"{k}={v}" for k, v in r.items()
+                if k not in ("table", "variant", "sec_per_round"))
+            _emit(f"table{r['table']}/{r['variant']}", us, derived)
+        print(f"# table {key} done in {time.time()-t0:.0f}s", file=sys.stderr)
+
+    run_table("1", tables.table1_emnist)
+    run_table("2", tables.table2_cifar)
+    run_table("3", tables.table3_stackoverflow)
+    run_table("4", tables.table4_memory)
+    run_table("5", tables.table5_dp)
+
+    if "roofline" in want:
+        dry = "results/dryrun_single_pod.json"
+        if os.path.exists(dry):
+            from benchmarks import roofline
+            rows = roofline.build_table(dry)
+            all_rows.extend(rows)
+            for r in rows:
+                if "compute_s" in r:
+                    _emit(f"roofline/{r['arch']}/{r['shape']}",
+                          max(r['compute_s'], r['memory_s'],
+                              r['collective_s']) * 1e6,
+                          f"dominant={r['dominant']};"
+                          f"useful={r['useful_fraction']:.2f};"
+                          f"peak_gib={r['peak_gib']:.2f}")
+                else:
+                    _emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                          f"status={r.get('status')}")
+        else:
+            print(f"# {dry} missing — run launch/dryrun.py first",
+                  file=sys.stderr)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+    print(f"# wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Summarize results/benchmarks.json into the EXPERIMENTS.md §Tables
+section (run after `python -m benchmarks.run`)."""
+import json
+import sys
+
+
+def main(path="results/benchmarks.json"):
+    rows = json.load(open(path))
+    tables = {}
+    for r in rows:
+        t = r.get("table")
+        if t:
+            tables.setdefault(t, []).append(r)
+    out = ["\n## §Tables — paper-table reproductions (synthetic data)\n"]
+    for t in sorted(tables):
+        out.append(f"### Table {t}\n")
+        keys = [k for k in tables[t][0] if k != "table"]
+        out.append("| " + " | ".join(keys) + " |")
+        out.append("|" + "---|" * len(keys))
+        for r in tables[t]:
+            out.append("| " + " | ".join(
+                f"{r.get(k):.4f}" if isinstance(r.get(k), float)
+                else str(r.get(k)) for k in keys) + " |")
+        out.append("")
+    text = "\n".join(out)
+    with open("EXPERIMENTS.md", "a") as f:
+        f.write(text)
+    print(text)
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,62 @@
+"""Checkpointing.
+
+A FedPT checkpoint stores only the *trainable* tree, the scalar seed, the
+freeze-spec and the server optimizer state — the frozen side regenerates
+from the seed on restore, so checkpoints shrink by the frozen fraction
+(the same 46x as the communication path, for the CIFAR-10 2.16% row).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.nn import basic
+
+
+def _flat_np(tree):
+    return {k: np.asarray(v) for k, v in basic.flatten_params(tree)}
+
+
+def save(path: str, trainable, seed: int, freeze_spec, server_state=None,
+         round_num: int = 0, extra: Optional[Dict[str, Any]] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = {f"y/{k}": v for k, v in _flat_np(trainable).items()}
+    if server_state is not None:
+        leaves, treedef = jax.tree_util.tree_flatten(server_state)
+        for i, l in enumerate(leaves):
+            arrays[f"s/{i}"] = np.asarray(l)
+        meta_state = str(treedef)
+    else:
+        meta_state = ""
+    meta = {"seed": int(seed), "freeze_spec": list(freeze_spec),
+            "round": int(round_num), "server_state_treedef": meta_state,
+            "extra": extra or {}}
+    np.savez(path, __meta__=json.dumps(meta), **arrays)
+
+
+def load(path: str, server_state_template=None):
+    """Returns (trainable, seed, freeze_spec, server_state, round, extra)."""
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        flat = {k[2:]: z[k] for k in z.files if k.startswith("y/")}
+        trainable = basic.unflatten_params(flat)
+        server_state = None
+        if server_state_template is not None:
+            leaves, treedef = jax.tree_util.tree_flatten(server_state_template)
+            loaded = [z[f"s/{i}"] for i in range(len(leaves))]
+            server_state = jax.tree_util.tree_unflatten(treedef, loaded)
+    return (trainable, meta["seed"], tuple(meta["freeze_spec"]),
+            server_state, meta["round"], meta["extra"])
+
+
+def restore_full_model(path: str, init_fn):
+    """Restore the complete model: trainable from the file, frozen
+    regenerated from the stored seed."""
+    from repro.core import partition as part
+    trainable, seed, freeze_spec, _, rnd, _ = load(path)
+    frozen = part.partition(init_fn(seed), freeze_spec)[1]
+    return part.merge(trainable, frozen), rnd

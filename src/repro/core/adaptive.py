@@ -1,0 +1,122 @@
+"""Adaptive (tiered) partial training — the paper's §5 future work:
+"selectively freeze more parameters for devices with smaller bandwidth
+and/or computational capacity, while training more parameters on devices
+that do not suffer such limitations."
+
+Design: tiers are ordered freeze specs (tier 0 = most capable = fewest
+frozen blocks; higher tiers freeze supersets). The server keeps ONE
+trainable tree y = the union (tier-0 trainable set). Each client gets a
+per-leaf 0/1 mask for its tier; masked leaves receive zero local updates
+(mask applied to the gradients each local step — exact freezing under
+SGD-family ClientOpts) and are excluded from that client's upload.
+Aggregation is per-leaf mask-weighted:  Δ[l] = Σ_i w_i m_i[l] Δ_i[l] /
+Σ_i w_i m_i[l]  — leaves nobody trained this round keep Δ=0.
+
+Communication: client i uploads only its tier's trainable bytes —
+`tier_comm_report` gives the per-tier ledger.
+"""
+from __future__ import annotations
+
+import re
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+import repro.core.partition as part
+from repro.core import comm, fedpt
+from repro.nn import basic
+from repro.optim import optimizers as opt_lib
+
+
+def tier_masks(y_tree, tier_specs: Sequence[tuple]):
+    """Per-tier 0/1 leaf masks over the union trainable tree.
+
+    tier_specs[t] is the *additional* freeze spec of tier t relative to
+    the union trainable set (tier 0 usually ()).
+    """
+    flat = dict(basic.flatten_params(y_tree))
+    masks = []
+    for spec in tier_specs:
+        m = {p: jnp.asarray(0.0 if any(re.search(s, p) for s in spec)
+                            else 1.0, jnp.float32)
+             for p in flat}
+        masks.append(basic.unflatten_params(m))
+    return masks
+
+
+def make_tiered_round_fn(loss_fn: Callable, rc: fedpt.RoundConfig,
+                         tier_specs: Sequence[tuple],
+                         server_opt: Optional[opt_lib.Optimizer] = None):
+    """round_step(y, sstate, frozen, batch, weights, tiers, rng).
+
+    tiers: (clients,) int32 — tier index per sampled client.
+    """
+    client_opt = opt_lib.get_optimizer(rc.client_opt, rc.client_lr)
+    if server_opt is None:
+        server_opt = opt_lib.get_optimizer(rc.server_opt, rc.server_lr)
+    n_tiers = len(tier_specs)
+
+    def round_step(y, server_state, frozen, batch, weights, tiers, rng):
+        masks_all = tier_masks(y, tier_specs)
+        # stack masks: leaf -> (n_tiers,)
+        stacked = jax.tree_util.tree_map(
+            lambda *ms: jnp.stack(ms), *masks_all)
+
+        def client_update(client_batch, tier):
+            mask = jax.tree_util.tree_map(lambda s: s[tier], stacked)
+            opt_state = client_opt.init(y)
+
+            def local_step(carry, mb):
+                yy, st = carry
+                def loss_of_y(yv):
+                    full = part.merge(yv, jax.tree_util.tree_map(
+                        jax.lax.stop_gradient, frozen))
+                    out = loss_fn(full, mb)
+                    return out[0] if not isinstance(out, tuple) else out[0]
+                grads = jax.grad(loss_of_y)(yy)
+                grads = jax.tree_util.tree_map(
+                    lambda g, m: g * m.astype(g.dtype), grads, mask)
+                yy, st = client_opt.update(yy, grads, st)
+                return (yy, st), None
+
+            (y_fin, _), _ = jax.lax.scan(local_step, (y, opt_state),
+                                         client_batch)
+            delta = opt_lib.tree_sub(y_fin, y)
+            # belt & braces: mask the upload too
+            delta = jax.tree_util.tree_map(
+                lambda d, m: d * m.astype(d.dtype), delta, mask)
+            return delta, mask
+
+        deltas, masks = jax.vmap(client_update)(batch, tiers)
+        w = weights.astype(jnp.float32)
+        num = jax.tree_util.tree_map(
+            lambda d, m: jnp.tensordot(w * m.astype(jnp.float32),
+                                       d.astype(jnp.float32), axes=1),
+            deltas, masks)
+        den = jax.tree_util.tree_map(
+            lambda m: jnp.maximum(jnp.sum(w * m.astype(jnp.float32)), 1e-12),
+            masks)
+        delta = jax.tree_util.tree_map(lambda n, d: n / d, num, den)
+        neg = jax.tree_util.tree_map(lambda d: -d, delta)
+        y_new, server_state = server_opt.update(y, neg, server_state)
+        return y_new, server_state, {
+            "delta_norm": opt_lib.tree_global_norm(delta)}
+
+    return round_step, server_opt
+
+
+def tier_comm_report(y_tree, frozen_tree, tier_specs) -> List[comm.CommReport]:
+    """Per-tier communication ledger: tier t uploads only its unmasked
+    leaves (plus the shared seed downstream)."""
+    masks = tier_masks(y_tree, tier_specs)
+    full_bytes = basic.tree_bytes(y_tree) + basic.tree_bytes(frozen_tree)
+    reports = []
+    for m in masks:
+        flat_y = dict(basic.flatten_params(y_tree))
+        flat_m = dict(basic.flatten_params(m))
+        byt = sum(v.size * v.dtype.itemsize for p, v in flat_y.items()
+                  if float(flat_m[p]) > 0)
+        reports.append(comm.CommReport(full_bytes=full_bytes,
+                                       trainable_bytes=byt))
+    return reports

@@ -1,0 +1,48 @@
+"""Adaptive (quantile-based) clipping for DP-FedAvg / DP-FTRL
+(Andrew et al. 2021, "Differentially Private Learning with Adaptive
+Clipping" — the production companion to the paper's fixed clip_norm 0.3).
+
+The clip norm C_t tracks a target quantile gamma of client update norms
+via geometric updates:  C_{t+1} = C_t * exp(-eta_C (b_t - gamma)), where
+b_t is the (noised, for DP) fraction of clients whose update fit inside
+C_t. With FedPT the norms live in the trainable subspace only, so the
+estimator adapts to the reduced dimension automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveClipConfig:
+    initial_clip: float = 0.1
+    target_quantile: float = 0.5
+    lr: float = 0.2               # eta_C
+    fraction_noise_std: float = 0.0  # sigma_b for DP on the count
+
+
+def init_state(cfg: AdaptiveClipConfig):
+    return {"clip": jnp.asarray(cfg.initial_clip, jnp.float32),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def update_state(cfg: AdaptiveClipConfig, state, norms, rng=None):
+    """norms: (clients,) pre-clip update norms. Returns (new_state, clip)."""
+    clip = state["clip"]
+    b = jnp.mean((norms <= clip).astype(jnp.float32))
+    if cfg.fraction_noise_std > 0 and rng is not None:
+        b = b + cfg.fraction_noise_std * jax.random.normal(rng, ())
+    new_clip = clip * jnp.exp(-cfg.lr * (b - cfg.target_quantile))
+    return {"clip": new_clip, "t": state["t"] + 1}, clip
+
+
+def clipped_mean(deltas, norms, clip):
+    """Clip each client delta to `clip` and average (uniform weights)."""
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda d: jnp.mean(d * scale.reshape((-1,) + (1,) * (d.ndim - 1)),
+                           axis=0), deltas)

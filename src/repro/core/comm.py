@@ -1,0 +1,73 @@
+"""Communication-cost accounting (the paper's Tables 1-3 'Reduction in
+Communication' column).
+
+Per round, generalized FedAvg moves:
+  download:  full model                    -> FedPT: trainable y + 8B seed
+  upload:    full model update             -> FedPT: trainable delta
+so the per-round reduction is 2*|x| / (2*|y| + seed). The uplink-only
+reduction (|x|/|y|) is also reported since uplink is the scarcer resource
+(0.25MB/s vs 0.75MB/s; Wang et al. 2021b).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.nn import basic
+
+SEED_BYTES = 8
+
+
+@dataclasses.dataclass
+class CommReport:
+    full_bytes: int
+    trainable_bytes: int
+    rounds: int = 1
+
+    @property
+    def download_full(self) -> int:
+        return self.full_bytes * self.rounds
+
+    @property
+    def download_fedpt(self) -> int:
+        return (self.trainable_bytes + SEED_BYTES) * self.rounds
+
+    @property
+    def upload_full(self) -> int:
+        return self.full_bytes * self.rounds
+
+    @property
+    def upload_fedpt(self) -> int:
+        return self.trainable_bytes * self.rounds
+
+    @property
+    def reduction(self) -> float:
+        return (self.download_full + self.upload_full) / max(
+            self.download_fedpt + self.upload_fedpt, 1)
+
+    @property
+    def uplink_reduction(self) -> float:
+        return self.upload_full / max(self.upload_fedpt, 1)
+
+    def per_client_round_mb(self) -> Dict[str, float]:
+        mb = 1024.0 * 1024.0
+        return {
+            "full_down_mb": self.full_bytes / mb,
+            "full_up_mb": self.full_bytes / mb,
+            "fedpt_down_mb": (self.trainable_bytes + SEED_BYTES) / mb,
+            "fedpt_up_mb": self.trainable_bytes / mb,
+        }
+
+    # estimated wall-clock on the measured cross-device links
+    # (download 0.75 MB/s, upload 0.25 MB/s; Wang et al. 2021b)
+    def transfer_seconds(self, fedpt: bool = True) -> float:
+        mb = 1024.0 * 1024.0
+        down = (self.download_fedpt if fedpt else self.download_full) / mb
+        up = (self.upload_fedpt if fedpt else self.upload_full) / mb
+        return down / 0.75 + up / 0.25
+
+
+def report_for(trainable, frozen, rounds: int = 1) -> CommReport:
+    by = basic.tree_bytes(trainable)
+    bz = basic.tree_bytes(frozen)
+    return CommReport(full_bytes=by + bz, trainable_bytes=by, rounds=rounds)

@@ -1,0 +1,176 @@
+"""FedPT round engine — Algorithm 1 of the paper, as a single jitted
+mesh program.
+
+One federated round:
+  1. server "sends" (y_t, z): under datacenter simulation the trainable
+     tree y is broadcast along the client (data) mesh axis and the frozen
+     tree is regenerated from the seed (never communicated);
+  2. every sampled client runs tau local ClientOpt steps with gradients
+     flowing only into y (the frozen side is a constant input -> XLA
+     allocates no grad buffers or optimizer state for it);
+  3. client deltas are clipped (optionally, for DP) and weighted-mean
+     aggregated — on the mesh this is the cross-client psum whose payload
+     FedPT shrinks by |frozen|/|full|;
+  4. ServerOpt treats -delta as a pseudo-gradient.
+
+The engine is model-agnostic: it takes any ``loss_fn(params, batch)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+import repro.core.partition as part
+from repro.optim import optimizers as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundConfig:
+    clients_per_round: int
+    local_steps: int            # tau
+    local_batch: int
+    client_opt: str = "sgd"
+    client_lr: float = 0.05
+    server_opt: str = "sgd"
+    server_lr: float = 1.0
+    server_momentum: float = 0.9
+    # DP (DP-FedAvg clip/noise; DP-FTRL lives in core/dp.py ServerOpt)
+    dp_clip_norm: float = 0.0   # 0 = off
+    dp_noise_multiplier: float = 0.0
+    uniform_weights: bool = False  # DP requires fixed (uniform) weighting
+    # lossy uplink compression of client deltas (0 = off); complementary
+    # to FedPT per the paper's §2/§5
+    uplink_bits: int = 0
+
+
+def make_client_update(loss_fn: Callable, client_opt: opt_lib.Optimizer,
+                       local_steps: int):
+    """Returns f(y, frozen, client_batch) -> (delta, metrics).
+
+    client_batch: pytree with leading axis tau (one microbatch per local
+    step). Gradients are taken wrt y only.
+    """
+
+    def client_update(y0, frozen, client_batch):
+        opt_state = client_opt.init(y0)
+
+        def local_step(carry, mb):
+            y, st = carry
+            def loss_of_y(yy):
+                full = part.merge(yy, jax.tree_util.tree_map(
+                    jax.lax.stop_gradient, frozen))
+                out = loss_fn(full, mb)
+                return (out[0], out[1]) if isinstance(out, tuple) else (out, {})
+            (loss, _aux), grads = jax.value_and_grad(loss_of_y,
+                                                     has_aux=True)(y)
+            y, st = client_opt.update(y, grads, st)
+            return (y, st), loss
+
+        (y_fin, _), losses = jax.lax.scan(local_step, (y0, opt_state),
+                                          client_batch)
+        delta = opt_lib.tree_sub(y_fin, y0)
+        return delta, {"client_loss": jnp.mean(losses)}
+
+    return client_update
+
+
+def clip_delta(delta, clip_norm: float):
+    """Per-client L2 clipping: delta * min(1, C/||delta||)."""
+    nrm = opt_lib.tree_global_norm(delta)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(nrm, 1e-12))
+    return jax.tree_util.tree_map(lambda d: d * scale.astype(d.dtype), delta), nrm
+
+
+def make_round_fn(loss_fn: Callable, rc: RoundConfig,
+                  server_opt: Optional[opt_lib.Optimizer] = None,
+                  donate: bool = True, constrain_fn: Optional[Callable] = None):
+    """Builds round_step(y, server_state, frozen, batch, weights, rng).
+
+    batch: pytree, leaves (clients, tau, local_batch, ...).
+    weights: (clients,) float — e.g. #examples per client (paper's p_i).
+    rng: PRNG key for DP noise (ignored when DP is off).
+    constrain_fn(tree, clients: bool): optional sharding-constraint hook
+    used on the mesh — pins the per-client trainable copies to the data
+    axis so GSPMD never replicates C copies of y per device.
+    """
+    client_opt = opt_lib.get_optimizer(rc.client_opt, rc.client_lr)
+    if server_opt is None:
+        if rc.server_opt == "sgdm":
+            server_opt = opt_lib.sgdm(rc.server_lr, rc.server_momentum)
+        else:
+            server_opt = opt_lib.get_optimizer(rc.server_opt, rc.server_lr)
+    client_update = make_client_update(loss_fn, client_opt, rc.local_steps)
+
+    def round_step(y, server_state, frozen, batch, weights, rng):
+        # --- local training on every sampled client (vmapped over the
+        # client axis; under pjit that axis is sharded over `data`) -----
+        if constrain_fn is not None:
+            C = weights.shape[0]
+            yb = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), y)
+            yb = constrain_fn(yb, clients=True)
+            deltas, metrics = jax.vmap(
+                lambda y0, cb: client_update(y0, frozen, cb))(yb, batch)
+            deltas = constrain_fn(deltas, clients=True)
+        else:
+            deltas, metrics = jax.vmap(
+                lambda cb: client_update(y, frozen, cb))(batch)
+
+        # --- optional lossy uplink (int-k quantization per client) ------
+        if rc.uplink_bits:
+            from repro.core import compress
+            deltas = jax.vmap(
+                lambda d: compress.fake_quantize_tree(d, rc.uplink_bits)
+            )(deltas)
+
+        # --- optional per-client clipping (DP-FedAvg / DP-FTRL) --------
+        if rc.dp_clip_norm > 0:
+            deltas, norms = jax.vmap(
+                lambda d: clip_delta(d, rc.dp_clip_norm))(deltas)
+            metrics = dict(metrics, update_norm=jnp.mean(norms))
+
+        # --- aggregation: weighted mean over clients --------------------
+        if rc.uniform_weights or rc.dp_clip_norm > 0:
+            w = jnp.ones_like(weights)
+        else:
+            w = weights
+        wsum = jnp.maximum(jnp.sum(w), 1e-12)
+        delta = jax.tree_util.tree_map(
+            lambda d: jnp.tensordot(w.astype(jnp.float32),
+                                    d.astype(jnp.float32), axes=1) / wsum,
+            deltas)
+        if constrain_fn is not None:
+            delta = constrain_fn(delta, clients=False)
+
+        # --- central Gaussian noise (sensitivity C / n under clipping) --
+        if rc.dp_clip_norm > 0 and rc.dp_noise_multiplier > 0:
+            sigma = rc.dp_noise_multiplier * rc.dp_clip_norm / rc.clients_per_round
+            leaves, treedef = jax.tree_util.tree_flatten(delta)
+            keys = jax.random.split(rng, len(leaves))
+            noisy = [l + sigma * jax.random.normal(k, l.shape, jnp.float32)
+                     for l, k in zip(leaves, keys)]
+            delta = jax.tree_util.tree_unflatten(treedef, noisy)
+
+        # --- ServerOpt on the pseudo-gradient ---------------------------
+        neg = jax.tree_util.tree_map(lambda d: -d, delta)
+        y_new, server_state = server_opt.update(y, neg, server_state)
+        out_metrics = {"loss": jnp.mean(metrics["client_loss"]),
+                       "delta_norm": opt_lib.tree_global_norm(delta)}
+        if "update_norm" in metrics:
+            out_metrics["update_norm"] = jnp.mean(metrics["update_norm"])
+        return y_new, server_state, out_metrics
+
+    return round_step, server_opt
+
+
+def make_eval_fn(loss_fn: Callable):
+    """Centralized eval of the merged model."""
+
+    def eval_step(y, frozen, batch):
+        out = loss_fn(part.merge(y, frozen), batch)
+        return out[0] if isinstance(out, tuple) else out
+
+    return jax.jit(eval_step)

@@ -1,0 +1,61 @@
+"""Seed-based reconstruction of frozen parameters (Algorithm 1, line 5).
+
+The server never ships frozen bytes: clients receive ``(y_t, z)`` where
+``z`` is a scalar integer seed, and regenerate the frozen leaves locally.
+Determinism comes from path-keyed initialization (nn/basic.py): every
+leaf's PRNG key is ``fold_in(key(z), crc32(path))``, so any holder of
+``z`` reproduces the exact same Gaussians.
+
+``make_reconstructor`` returns a jitted function of *no arguments* whose
+HLO contains only the frozen-leaf RNG ops — the trainable side of the
+init is dead-code-eliminated by XLA. On TPU the same job is done by the
+``seed_reconstruct`` Pallas kernel (kernels/seed_reconstruct.py) which
+generates the Gaussians directly in VMEM tiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+
+import repro.core.partition as part
+
+
+def reconstruct(init_fn: Callable[[int], Dict[str, Any]], seed: int,
+                freeze_spec) -> Dict[str, Any]:
+    """Regenerate the frozen tree from the scalar seed."""
+    return part.partition(init_fn(seed), freeze_spec)[1]
+
+
+def make_reconstructor(init_fn, seed: int, freeze_spec):
+    """Jitted zero-arg reconstructor; XLA DCEs the trainable-side init."""
+
+    @jax.jit
+    def _rec():
+        return part.partition(init_fn(seed), freeze_spec)[1]
+
+    return _rec
+
+
+def init_partitioned(init_fn, seed: int, freeze_spec):
+    """Server-side round-0 split: (y0, frozen, seed)."""
+    full = init_fn(seed)
+    y, z = part.partition(full, freeze_spec)
+    return y, z
+
+
+def verify_roundtrip(init_fn, seed: int, freeze_spec) -> bool:
+    """Invariant: merge(partition(x)) == x and reconstruct is exact."""
+    full = init_fn(seed)
+    y, z = part.partition(full, freeze_spec)
+    z2 = reconstruct(init_fn, seed, freeze_spec)
+    ok = jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda a, b: (a == b).all(), z, z2))
+    merged = part.merge(y, z)
+    from repro.nn import basic
+    fa = dict(basic.flatten_params(full))
+    fb = dict(basic.flatten_params(merged))
+    ok2 = set(fa) == set(fb) and all(
+        bool((fa[k] == fb[k]).all()) for k in fa)
+    return bool(ok) and ok2

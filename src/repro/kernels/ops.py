@@ -1,0 +1,43 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On this CPU container the wrappers run with interpret=True (the kernel
+body executes in Python under the Pallas interpreter); on TPU they lower
+to Mosaic. `use_pallas` flags let the model code swap the pure-jnp path
+for the kernel path at config time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dp_clip as _dp
+from repro.kernels import seed_reconstruct as _sr
+from repro.kernels import swa_attention as _swa
+
+_ON_TPU = jax.default_backend() == "tpu"
+_INTERPRET = not _ON_TPU
+
+
+@functools.partial(jax.jit, static_argnames=("window", "causal", "bq", "bk"))
+def swa_attention(q, k, v, window: int = 0, causal: bool = True,
+                  bq: int = 128, bk: int = 128):
+    """(B, H, S, D) sliding-window flash attention (see swa_attention.py)."""
+    return _swa.swa_attention(q, k, v, window=window, causal=causal,
+                              bq=bq, bk=bk, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("clip_norm",))
+def clip_accumulate(acc, x, clip_norm: float):
+    """Fused DP clip-and-accumulate over flat f32 vectors."""
+    return _dp.clip_accumulate(acc, x, clip_norm, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("leaf_id", "shape", "stddev",
+                                             "dtype"))
+def seed_reconstruct(seed, leaf_id: int, shape, stddev: float,
+                     dtype=jnp.float32):
+    """Deterministic on-chip Gaussian tensor from (seed, leaf_id)."""
+    return _sr.seed_reconstruct(seed, leaf_id, shape, stddev, dtype=dtype,
+                                interpret=_INTERPRET)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references: each kernel's test sweeps shapes /
+dtypes and asserts allclose (or, for the PRNG kernel, distributional and
+determinism properties) against these functions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swa_attention_ref(q, k, v, window: int, causal: bool = True):
+    """Dense sliding-window attention oracle.
+
+    q, k, v: (B, H, S, D). window: number of past positions visible
+    (window <= 0 means full causal attention). Returns (B, H, S, D) f32.
+    """
+    B, H, S, D = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = qpos >= kpos
+    if window > 0:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+
+
+def dp_clip_accumulate_ref(acc, x, clip_norm: float):
+    """Oracle for the fused clip-and-accumulate: acc + x * min(1, C/||x||).
+
+    acc, x: (N,) float32. Returns (new_acc (N,), norm scalar).
+    """
+    nrm = jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(nrm, 1e-12))
+    return acc + x.astype(jnp.float32) * scale, nrm
+
+
+def seed_reconstruct_ref(seed: int, shape, stddev: float):
+    """Distributional reference for the TPU-PRNG Gaussian generator.
+
+    NOT bit-identical to the Pallas kernel (different PRNG); used for
+    moment / independence checks. Determinism of the kernel itself is
+    asserted kernel-vs-kernel.
+    """
+    return stddev * jax.random.normal(jax.random.key(seed), shape,
+                                      jnp.float32)

@@ -1,0 +1,123 @@
+"""Sliding-window flash attention — Pallas TPU kernel.
+
+TPU-native adaptation of the serving hot-spot behind the `long_500k`
+shape: a flash-attention kernel whose grid *structurally skips* KV blocks
+outside the sliding window (rather than masking them to -inf and still
+paying the matmul, as the pure-jnp path does). Block shapes are
+MXU-aligned (128x128 score tiles), the online-softmax running state
+(m, l, acc) lives in VMEM scratch and persists across the KV-block grid
+dimension.
+
+Grid: (batch*heads, num_q_blocks, num_kv_blocks), KV innermost. For a
+window of W tokens, each q block touches at most ceil(W/bk)+1 kv blocks;
+out-of-range blocks exit via pl.when without touching the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                bq: int, bk: int, window: int, causal: bool, seq: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    # --- structural skip: this kv block intersects the window? ----------
+    # visible kv positions for q block [q_start, q_start+bq):
+    #   k <= q_end-1 (causal)  and  k > q_start - window (sliding window)
+    in_causal = (k_start <= q_start + bq - 1) if causal else True
+    in_window = (k_start + bk - 1 > q_start - window) if window > 0 else True
+    live = jnp.logical_and(in_causal, in_window)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)           # (bq, d)
+        k = k_ref[0].astype(jnp.float32)           # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        d = q.shape[-1]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32)))
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < seq
+        if causal:
+            mask = jnp.logical_and(mask, qpos >= kpos)
+        if window > 0:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def swa_attention(q, k, v, window: int = 0, causal: bool = True,
+                  bq: int = 128, bk: int = 128, interpret: bool = False):
+    """q, k, v: (B, H, S, D) -> (B, H, S, D).
+
+    D should be a multiple of 128 for MXU alignment (the wrapper in
+    ops.py pads when it is not). S is padded to a bq/bk multiple.
+    """
+    B, H, S, D = q.shape
+    bq = min(bq, S)
+    bk = min(bk, S)
+    Sp = ((S + max(bq, bk) - 1) // max(bq, bk)) * max(bq, bk)
+    if Sp != S:
+        pad = Sp - S
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    qf = q.reshape(B * H, Sp, D)
+    kf = k.reshape(B * H, Sp, D)
+    vf = v.reshape(B * H, Sp, D)
+    grid = (B * H, Sp // bq, Sp // bk)
+
+    kernel = functools.partial(_swa_kernel, bq=bq, bk=bk, window=window,
+                               causal=causal, seq=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((bq, D), jnp.float32),   # accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sp, D)[:, :, :S, :]

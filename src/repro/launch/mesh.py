@@ -1,0 +1,57 @@
+"""Production mesh construction.
+
+The target is a TPU v5e pod-slice: one pod = a (data=16, model=16) mesh
+of 256 chips; the multi-pod configuration adds a leading pod axis
+(2 x 16 x 16 = 512 chips). Client cohorts of the federated round shard
+over ("pod", "data"); tensor/expert parallelism lives on "model".
+
+This module never touches jax device state at import time — meshes are
+built inside functions, and only the dry-run entrypoint forces the
+512-device host platform.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+HW = {
+    # TPU v5e per-chip constants used by the roofline (benchmarks/roofline.py)
+    "peak_flops_bf16": 197e12,   # FLOP/s
+    "hbm_bw": 819e9,             # B/s
+    "ici_bw": 50e9,              # B/s per link
+    "hbm_bytes": 16 * 1024 ** 3,
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)}; run via "
+            "launch/dryrun.py which forces 512 host devices")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for tests (requires forced host device count >= prod)."""
+    n = math.prod(shape)
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def make_single_device_mesh():
+    """1x1 mesh so smoke tests exercise the pjit path on one CPU device."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)

@@ -1,0 +1,204 @@
+"""Sharding rules: parameter-path regex -> PartitionSpec.
+
+Conventions (Megatron-style TP on the "model" axis; clients/batch on
+("pod", "data")):
+
+* column-parallel: qkv / FFN-in / up projections shard their *output*
+  dim on "model"; row-parallel: wo / FFN-out shard their *input* dim.
+* MoE expert stacks shard the expert dim on "model" when divisible (and,
+  for very large expert counts — DeepSeek's 160 — additionally the FFN
+  dim, giving 2-D expert sharding so the 236B frozen bank fits HBM).
+* embeddings/unembeddings shard the vocab dim (parallel-vocab with the
+  log-softmax psum under GSPMD).
+* norms, biases, gates, routers, small SSM tensors replicate.
+* FROZEN leaves follow the same rules — they are inputs, never updated,
+  and FedPT's aggregation collective excludes them entirely.
+
+Every rule is divisibility-guarded: a dim that does not divide the axis
+falls back to replication on that axis (e.g. whisper's 51866 vocab).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.nn import basic
+
+
+# (regex over path, spec template) — first match wins. Spec templates use
+# NEGATIVE dim indices (relative to the trailing dims), so the same rule
+# covers both a bare leaf and its scan-stacked (leading group dim) form.
+_RULES = [
+    # attention: column-parallel in, row-parallel out
+    (r"/attn/w[qkv]/kernel$", {-1: "model"}),
+    (r"/attn/w[qkv]/bias$", {-1: "model"}),
+    (r"/attn/wo/kernel$", {-2: "model"}),
+    (r"/cross_attn/w[qkv]/kernel$", {-1: "model"}),
+    (r"/cross_attn/wo/kernel$", {-2: "model"}),
+    # MLA
+    (r"/attn/wq_b/kernel$", {-1: "model"}),
+    (r"/attn/wk_b/kernel$", {-1: "model"}),
+    (r"/attn/wv_b/kernel$", {-1: "model"}),
+    # dense FFN
+    (r"/ffn/wi(_gate|_up)?/kernel$", {-1: "model"}),
+    (r"/ffn/wo/kernel$", {-2: "model"}),
+    # MoE experts: stacked (E, d, ff) / (E, ff, d); expert dim on model
+    (r"/moe/wi_(gate|up)$", {-3: "model"}),
+    (r"/moe/wo$", {-3: "model"}),
+    (r"/moe/shared/wi(_gate|_up)?/kernel$", {-1: "model"}),
+    (r"/moe/shared/wo/kernel$", {-2: "model"}),
+    # Mamba: in column-parallel, out row-parallel; channel tensors sharded
+    (r"/mamba/in_proj/kernel$", {-1: "model"}),
+    (r"/mamba/out_proj/kernel$", {-2: "model"}),
+    (r"/mamba/x_proj/kernel$", {-2: "model"}),
+    (r"/mamba/dt_proj/kernel$", {-1: "model"}),
+    (r"/mamba/conv_w$", {-1: "model"}),
+    (r"/mamba/conv_b$", {-1: "model"}),
+    (r"/mamba/A_log$", {-2: "model"}),
+    (r"/mamba/D$", {-1: "model"}),
+    # xLSTM
+    (r"/mlstm/up_proj/kernel$", {-1: "model"}),
+    (r"/mlstm/down_proj/kernel$", {-2: "model"}),
+    # embeddings: parallel-vocab
+    (r"embed/embedding$", {-2: "model"}),
+    (r"unembed/kernel$", {-1: "model"}),
+]
+
+# 2-D expert sharding for very large expert banks (DeepSeek-V2): expert
+# dim on "data", FFN dim on "model" — 236B of frozen experts / 256 chips.
+_RULES_2D_EXPERTS = [
+    (r"/moe/wi_(gate|up)$", {-3: "data", -1: "model"}),
+    (r"/moe/wo$", {-3: "data", -2: "model"}),
+]
+
+# When the expert count does not divide the model axis (Mixtral's 8 on a
+# 16-wide axis), shard the expert FFN dim instead (intra-expert TP) —
+# otherwise 45B of experts replicate per device.
+_RULES_FFN_EXPERTS = [
+    (r"/moe/wi_(gate|up)$", {-1: "model"}),
+    (r"/moe/wo$", {-2: "model"}),
+]
+
+# 2-D expert sharding with the axes swapped (expert dim on "model", FFN
+# dim on "data") — used by the grouped-dispatch perf variant, where the
+# "data" axis is needed for the token groups.
+_RULES_2D_EXPERTS_SWAPPED = [
+    (r"/moe/wi_(gate|up)$", {-3: "model", -1: "data"}),
+    (r"/moe/wo$", {-3: "model", -2: "data"}),
+]
+
+
+def _spec_for(path: str, shape, mesh, rules) -> P:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for pat, dims in rules:
+        if re.search(pat, path):
+            spec = [None] * len(shape)
+            for d, ax in dims.items():
+                di = d + len(shape) if d < 0 else d
+                if 0 <= di < len(shape) and shape[di] % sizes.get(ax, 1) == 0 \
+                        and shape[di] >= sizes.get(ax, 1):
+                    spec[di] = ax
+            return P(*spec)
+    return P()
+
+
+def param_shardings(params_struct, cfg: ModelConfig, mesh):
+    """Tree of NamedShardings matching the (possibly stacked) param tree."""
+    rules = list(_RULES)
+    msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    mode = cfg.expert_shard
+    if mode == "auto":
+        mode = ("2d" if cfg.num_experts >= 64 else
+                ("ffn" if cfg.num_experts and cfg.num_experts % msize else
+                 "model"))
+    if mode == "2d":
+        rules = _RULES_2D_EXPERTS + rules
+    elif mode == "2d_swapped":
+        rules = _RULES_2D_EXPERTS_SWAPPED + rules
+    elif mode == "ffn":
+        rules = _RULES_FFN_EXPERTS + rules
+    flat = dict(basic.flatten_params(params_struct))
+    out = {}
+    for path, leaf in flat.items():
+        spec = _spec_for(path, leaf.shape, mesh, rules)
+        out[path] = NamedSharding(mesh, spec)
+    return basic.unflatten_params(out)
+
+
+def replicated(tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree)
+
+
+def batch_sharding(tree_struct, mesh, batch_axes=("pod", "data"),
+                   batch_dim: int = 0):
+    """Shard the leading (client/batch) dim over the data axes."""
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        if leaf.shape[batch_dim] % total == 0:
+            spec[batch_dim] = axes if len(axes) > 1 else axes[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, tree_struct)
+
+
+def cache_shardings(cache_struct, cfg: ModelConfig, mesh, long_context: bool):
+    """KV-cache / SSM-state shardings for serving.
+
+    decode_32k: batch over ("pod","data"), cache seq over "model".
+    long_500k (batch=1): cache seq over ("data","model"); SSM states shard
+    their channel dim.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def one_path(path, leaf):
+        shp = leaf.shape
+        spec = [None] * len(shp)
+        if path.endswith("cache_len"):
+            return NamedSharding(mesh, P())
+        is_seq_cache = any(path.endswith(s) for s in
+                           ("/k", "/v", "/ckv", "/kpe"))
+        if is_seq_cache:
+            # (G, B, S, ...)
+            if long_context:
+                want = sizes.get("data", 1) * sizes.get("model", 1)
+                if shp[2] % want == 0:
+                    spec[2] = ("data", "model")
+                elif shp[2] % sizes.get("model", 1) == 0:
+                    spec[2] = "model"
+            else:
+                total = 1
+                for a in dax:
+                    total *= sizes[a]
+                if shp[1] % total == 0:
+                    spec[1] = dax if len(dax) > 1 else dax[0]
+                if shp[2] % sizes.get("model", 1) == 0:
+                    spec[2] = "model"
+            return NamedSharding(mesh, P(*spec))
+        # SSM states: (G, B, channels, ...) — shard the channel dim
+        for d in range(2, len(shp)):
+            if shp[d] % sizes.get("model", 1) == 0 and shp[d] >= sizes.get("model", 1):
+                spec[d] = "model"
+                break
+        if not long_context:
+            total = 1
+            for a in dax:
+                total *= sizes[a]
+            if shp[1] % total == 0:
+                spec[1] = dax if len(dax) > 1 else dax[0]
+        return NamedSharding(mesh, P(*spec))
+
+    flat = dict(basic.flatten_params(cache_struct))
+    out = {p: one_path(p, l) for p, l in flat.items()}
+    return basic.unflatten_params(out)

@@ -1,0 +1,322 @@
+"""Attention: RoPE, GQA multi-head attention with chunked online-softmax
+(flash-style, bounded memory at 32k+ sequence lengths), sliding windows,
+MLA (DeepSeek-V2 multi-head latent attention), and single-token decode
+against a KV cache (including sequence-sharded caches for 500k context).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import basic
+from repro.configs.base import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope_freqs(head_dim: int, theta: float, positions):
+    """positions: (..., seq) int32 -> cos/sin (..., seq, head_dim//2)."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)  # broadcast over heads
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# GQA projections
+
+
+def init_attention(seed, path, cfg: ModelConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    b = cfg.qkv_bias
+    return {
+        "wq": basic.init_dense(seed, f"{path}/wq", d, h * hd, dtype, bias=b),
+        "wk": basic.init_dense(seed, f"{path}/wk", d, kv * hd, dtype, bias=b),
+        "wv": basic.init_dense(seed, f"{path}/wv", d, kv * hd, dtype, bias=b),
+        "wo": basic.init_dense(seed, f"{path}/wo", h * hd, d, dtype, bias=False),
+    }
+
+
+def qkv_project(x, p, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    cd = cfg.cdtype
+    q = basic.dense(x, p["wq"], cd).reshape(b, s, h, hd)
+    k = basic.dense(x, p["wk"], cd).reshape(b, s, kv, hd)
+    v = basic.dense(x, p["wv"], cd).reshape(b, s, kv, hd)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) causal attention.
+#
+# Memory stays O(seq * chunk) instead of O(seq^2): we scan over KV chunks
+# carrying the online-softmax running (max, sum, acc). Sliding windows skip
+# out-of-window chunks entirely via lax.cond-free masking (masked chunks
+# contribute exp(-inf)=0; XLA still executes them, the Pallas kernel in
+# kernels/swa_attention.py skips them structurally on TPU).
+
+
+def _attend_chunk(q, k, v, qpos, kpos, window: int, softcap: float, scale,
+                  causal: bool, prefix_len: int):
+    """q:(b,h,sq,d) k,v:(b,h,sc,d) -> logits-masked scores (b,h,sq,sc)."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal:
+        mask = qpos[:, None] >= kpos[None, :]
+        if prefix_len > 0:  # bidirectional prefix (PaliGemma-style)
+            mask = mask | (kpos[None, :] < prefix_len)
+        if window > 0:
+            mask = mask & (qpos[:, None] - kpos[None, :] < window)
+    else:
+        mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    return jnp.where(mask[None, None], s, NEG_INF)
+
+
+def flash_attention(q, k, v, cfg: ModelConfig, q_offset=0, chunk: int = 512,
+                    causal: bool = True, prefix_len: int = 0):
+    """Causal (optionally sliding-window) attention.
+
+    q: (b, sq, h, hd);  k, v: (b, skv, kv_heads, hd_k); v may have a
+    different per-head dim than q/k (MLA).
+    q_offset: position of q[0] relative to k[0] (for prefill continuation).
+    Returns (b, sq, h, dv).
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    kvh = k.shape[2]
+    dv = v.shape[3]
+    rep = h // kvh
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    window = cfg.sliding_window
+
+    qh = q.transpose(0, 2, 1, 3)  # b,h,sq,hd
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    if rep > 1:
+        kh = jnp.repeat(kh, rep, axis=1)
+        vh = jnp.repeat(vh, rep, axis=1)
+
+    nchunks = max(1, (skv + chunk - 1) // chunk)
+    pad = nchunks * chunk - skv
+    if pad:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kh = kh.reshape(b, h, nchunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+    vh = vh.reshape(b, h, nchunks, chunk, dv).transpose(2, 0, 1, 3, 4)
+
+    qpos = q_offset + jnp.arange(sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, ci = xs
+        kpos = ci * chunk + jnp.arange(chunk)
+        valid = kpos < skv
+        s = _attend_chunk(qh, kc, vc, qpos, kpos, window, cfg.attn_logit_softcap,
+                          scale, causal, prefix_len)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kh, vh, jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, cfg: ModelConfig):
+    """One-token decode: q (b, 1, h, hd) against caches (b, S, kvh, hd).
+
+    cache_len: scalar or (b,) number of valid cache positions. Works with a
+    sequence-sharded cache under GSPMD (the softmax is numerically global —
+    computed via max/sum reductions XLA turns into cross-shard psums).
+    """
+    b, _, h, hd = q.shape
+    S, kvh = k_cache.shape[1], k_cache.shape[2]
+    rep = h // kvh
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    kh = k_cache
+    vh = v_cache
+    if rep > 1:
+        kh = jnp.repeat(kh, rep, axis=2)
+        vh = jnp.repeat(vh, rep, axis=2)
+    if cfg.decode_seq_parallel:
+        # flash-decoding layout (perf variant, DESIGN.md §Perf/H2): the
+        # tiny q replicates across "model"; the huge cache stays
+        # sequence-sharded; softmax/PV reduce over the sharded S axis
+        # (GSPMD emits psum of (b,h,1,dv) partials instead of
+        # all-gathering the cache).
+        q = basic.maybe_constrain(q, (("pod", "data"), None, None, None))
+        kh = basic.maybe_constrain(kh, (("pod", "data"), "model", None, None))
+        vh = basic.maybe_constrain(vh, (("pod", "data"), "model", None, None))
+    s = jnp.einsum("bqhd,bshd->bhqs", q, kh,
+                   preferred_element_type=jnp.float32) * scale
+    if cfg.decode_seq_parallel:
+        s = basic.maybe_constrain(s, (("pod", "data"), None, None, "model"))
+    if cfg.attn_logit_softcap > 0:
+        s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
+    pos = jnp.arange(S)
+    cl = jnp.asarray(cache_len)
+    cl = cl[:, None, None, None] if cl.ndim else cl
+    mask = pos[None, None, None, :] < cl
+    if cfg.sliding_window > 0:
+        mask = mask & (pos[None, None, None, :] >= cl - cfg.sliding_window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(vh.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, vh,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V2 multi-head latent attention (arXiv:2405.04434).
+#
+# KV is compressed to a kv_lora_rank latent c_kv plus a shared rope key
+# k_pe; decode caches only (c_kv, k_pe) — 576 dims instead of
+# 2*num_heads*head_dim — and uses the absorbed-matmul form.
+
+
+def init_mla(seed, path, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    h = cfg.num_heads
+    qn, qr, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    qlr = cfg.q_lora_rank
+    p = {
+        "wkv_a": basic.init_dense(seed, f"{path}/wkv_a", d, r + qr, dtype),
+        "kv_norm": basic.init_norm(seed, f"{path}/kv_norm", r, dtype, "rmsnorm"),
+        "wk_b": basic.init_dense(seed, f"{path}/wk_b", r, h * qn, dtype),
+        "wv_b": basic.init_dense(seed, f"{path}/wv_b", r, h * vd, dtype),
+        "wo": basic.init_dense(seed, f"{path}/wo", h * vd, d, dtype),
+    }
+    if qlr > 0:
+        p["wq_a"] = basic.init_dense(seed, f"{path}/wq_a", d, qlr, dtype)
+        p["q_norm"] = basic.init_norm(seed, f"{path}/q_norm", qlr, dtype, "rmsnorm")
+        p["wq_b"] = basic.init_dense(seed, f"{path}/wq_b", qlr, h * (qn + qr), dtype)
+    else:
+        p["wq"] = basic.init_dense(seed, f"{path}/wq", d, h * (qn + qr), dtype)
+    return p
+
+
+def mla_qkv(x, p, cfg: ModelConfig, positions):
+    """Full (non-absorbed) MLA for train/prefill.
+
+    Returns q, k, v shaped (b, s, h, dim) with rope applied; k/v have
+    per-head dims qn+qr and v_head_dim. Also returns the compressed
+    (c_kv, k_pe) pair for cache write.
+    """
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qn, qr, vd, r = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                     cfg.v_head_dim, cfg.kv_lora_rank)
+    cd = cfg.cdtype
+
+    if "wq_a" in p:
+        qc = basic.dense(x, p["wq_a"], cd)
+        qc = basic.rmsnorm(qc, p["q_norm"]["scale"])
+        q = basic.dense(qc, p["wq_b"], cd).reshape(b, s, h, qn + qr)
+    else:
+        q = basic.dense(x, p["wq"], cd).reshape(b, s, h, qn + qr)
+
+    kv = basic.dense(x, p["wkv_a"], cd)
+    c_kv, k_pe = kv[..., :r], kv[..., r:]
+    c_kv = basic.rmsnorm(c_kv, p["kv_norm"]["scale"])
+    k_nope = basic.dense(c_kv, p["wk_b"], cd).reshape(b, s, h, qn)
+    v = basic.dense(c_kv, p["wv_b"], cd).reshape(b, s, h, vd)
+
+    cos, sin = rope_freqs(qr, cfg.rope_theta, positions)
+    q_nope, q_pe = q[..., :qn], q[..., qn:]
+    q_pe = apply_rope(q_pe, cos, sin)
+    k_pe_r = apply_rope(k_pe[..., None, :], cos, sin)  # single shared rope head
+    k_pe_b = jnp.broadcast_to(k_pe_r, (b, s, h, qr))
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, k_pe_b], axis=-1)
+    return q, k, v, (c_kv, k_pe_r[..., 0, :])
+
+
+def mla_compress(x, p, cfg: ModelConfig, positions):
+    """Compute only the compressed cache entries (c_kv, roped k_pe) for a
+    new token. x: (b, s, d) -> ckv (b, s, r), kpe (b, s, qr)."""
+    r, qr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    cd = cfg.cdtype
+    kv = basic.dense(x, p["wkv_a"], cd)
+    c_kv, k_pe = kv[..., :r], kv[..., r:]
+    c_kv = basic.rmsnorm(c_kv, p["kv_norm"]["scale"])
+    cos, sin = rope_freqs(qr, cfg.rope_theta, positions)
+    k_pe = apply_rope(k_pe[..., None, :], cos, sin)[..., 0, :]
+    return c_kv, k_pe
+
+
+def mla_decode(x, p, cfg: ModelConfig, ckv_cache, kpe_cache, cache_len):
+    """Absorbed-form decode: score via latent space, cache is (c_kv, k_pe).
+
+    x: (b, 1, d).  ckv_cache: (b, S, r). kpe_cache: (b, S, qr).
+    """
+    b, _, _ = x.shape
+    h = cfg.num_heads
+    qn, qr, vd, r = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                     cfg.v_head_dim, cfg.kv_lora_rank)
+    cd = cfg.cdtype
+    S = ckv_cache.shape[1]
+
+    if "wq_a" in p:
+        qc = basic.dense(x, p["wq_a"], cd)
+        qc = basic.rmsnorm(qc, p["q_norm"]["scale"])
+        q = basic.dense(qc, p["wq_b"], cd).reshape(b, 1, h, qn + qr)
+    else:
+        q = basic.dense(x, p["wq"], cd).reshape(b, 1, h, qn + qr)
+    cl = jnp.asarray(cache_len)
+    pos = jnp.broadcast_to((cl - 1).reshape(-1, 1), (b, 1))
+    cos, sin = rope_freqs(qr, cfg.rope_theta, pos)
+    q_nope, q_pe = q[..., :qn], q[..., qn:]
+    q_pe = apply_rope(q_pe, cos, sin)
+
+    # absorb W_UK into q: q_lat (b,1,h,r) = q_nope @ W_kb^T (per head)
+    wkb = p["wk_b"]["kernel"].astype(cd).reshape(r, h, qn)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, wkb)
+
+    scale = 1.0 / jnp.sqrt(qn + qr).astype(jnp.float32)
+    s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv_cache.astype(cd),
+                       preferred_element_type=jnp.float32)
+    s_pe = jnp.einsum("bqhr,bsr->bhqs", q_pe, kpe_cache.astype(cd),
+                      preferred_element_type=jnp.float32)
+    s = (s_lat + s_pe) * scale
+    spos = jnp.arange(S)
+    clb = cl if cl.ndim else cl[None]
+    mask = spos[None, None, None, :] < clb[:, None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+
+    # attention over latents, then up-project with absorbed W_UV
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", pr.astype(cd), ckv_cache.astype(cd),
+                       preferred_element_type=jnp.float32).astype(cd)
+    wvb = p["wv_b"]["kernel"].astype(cd).reshape(r, h, vd)
+    o = jnp.einsum("bqhr,rhv->bqhv", o_lat, wvb)
+    o = o.reshape(b, 1, h * vd)
+    return basic.dense(o, p["wo"], cd)

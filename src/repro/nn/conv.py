@@ -1,0 +1,50 @@
+"""Convolutional primitives for the paper's own vision models
+(EMNIST CNN of Table 6, ResNet-18 with GroupNorm for CIFAR-10).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn import basic
+
+
+def init_conv(seed, path, k, c_in, c_out, dtype, bias: bool = True):
+    p = {"kernel": basic.normal_init(seed, f"{path}/kernel",
+                                     (k, k, c_in, c_out), dtype,
+                                     fan_in=k * k * c_in)}
+    if bias:
+        p["bias"] = basic.zeros_init(seed, f"{path}/bias", (c_out,), dtype)
+    return p
+
+
+def conv2d(x, p, stride: int = 1, padding: str = "SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, p["kernel"].astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if "bias" in p:
+        y = y + p["bias"].astype(y.dtype)
+    return y
+
+
+def maxpool2d(x, window: int = 2, stride: int = 2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1), "VALID")
+
+
+def avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def init_groupnorm(seed, path, c, dtype):
+    return {"scale": basic.ones_init(seed, f"{path}/scale", (c,), dtype),
+            "bias": basic.zeros_init(seed, f"{path}/bias", (c,), dtype)}
+
+
+def apply_groupnorm(x, p, groups: int = 32):
+    g = min(groups, x.shape[-1])
+    while x.shape[-1] % g:
+        g -= 1
+    return basic.groupnorm(x, p["scale"], p["bias"], g)

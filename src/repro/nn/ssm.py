@@ -1,0 +1,388 @@
+"""State-space / recurrent blocks: Mamba (Jamba's SSM layer) and the two
+xLSTM cells (mLSTM with matrix memory — chunkwise-parallel for training,
+recurrent for decode — and sLSTM with scalar memory).
+
+TPU adaptation: the mLSTM training path uses a *chunkwise* formulation
+(intra-chunk quadratic on the MXU, inter-chunk state carried by a scan)
+instead of a per-timestep recurrence, so the backward pass only
+checkpoints one matrix state per chunk rather than per step. Mamba uses a
+time scan with a small carried state (the selective-scan recurrence), and
+single-step functions serve decode.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import basic
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (shared by Mamba & xLSTM blocks)
+
+
+def causal_conv1d(x, w, b=None):
+    """x: (B, S, C), w: (K, C) depthwise kernel -> (B, S, C)."""
+    K, C = w.shape
+    y = jax.lax.conv_general_dilated(
+        x, w[:, None, :],  # (K, 1, C) io-feature
+        window_strides=(1,), padding=[(K - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=C)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def conv1d_step(x_t, conv_state, w, b=None):
+    """Single decode step. x_t: (B, C); conv_state: (B, K-1, C)."""
+    K, C = w.shape
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window, w)
+    if b is not None:
+        y = y + b
+    return y, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM), as used by Jamba [arXiv:2403.19887]
+
+
+def mamba_dims(cfg: ModelConfig):
+    d_inner = cfg.mamba_expand * cfg.d_model
+    dt_rank = math.ceil(cfg.d_model / 16)
+    return d_inner, dt_rank
+
+
+def init_mamba(seed, path, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_inner, dt_rank = mamba_dims(cfg)
+    n = cfg.mamba_d_state
+    K = cfg.mamba_d_conv
+    p = {
+        "in_proj": basic.init_dense(seed, f"{path}/in_proj", d, 2 * d_inner, dtype),
+        "conv_w": basic.normal_init(seed, f"{path}/conv_w", (K, d_inner), dtype,
+                                    fan_in=K),
+        "conv_b": basic.zeros_init(seed, f"{path}/conv_b", (d_inner,), dtype),
+        "x_proj": basic.init_dense(seed, f"{path}/x_proj", d_inner,
+                                   dt_rank + 2 * n, dtype),
+        "dt_proj": basic.init_dense(seed, f"{path}/dt_proj", dt_rank, d_inner,
+                                    dtype, bias=True),
+        # A_log init: log(1..n) broadcast (S4D-real)
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)), (d_inner, n)
+        ).astype(dtype),
+        "D": basic.ones_init(seed, f"{path}/D", (d_inner,), dtype),
+        "out_proj": basic.init_dense(seed, f"{path}/out_proj", d_inner, d, dtype),
+    }
+    return p
+
+
+def _mamba_scan_inputs(x, p, cfg: ModelConfig):
+    d_inner, dt_rank = mamba_dims(cfg)
+    n = cfg.mamba_d_state
+    cd = cfg.cdtype
+    xz = basic.dense(x, p["in_proj"], cd)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = causal_conv1d(xs, p["conv_w"].astype(cd), p["conv_b"].astype(cd))
+    xs = jax.nn.silu(xs)
+    dbc = basic.dense(xs, p["x_proj"], cd)
+    dt, B, C = jnp.split(dbc, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(basic.dense(dt, p["dt_proj"], cd))  # (B,S,d_inner)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (d_inner, n)
+    return xs, z, dt, B, C, A
+
+
+def mamba_forward(x, p, cfg: ModelConfig, h0=None):
+    """x: (B, S, d) -> (B, S, d); returns (out, (h_final, conv_tail))."""
+    Bsz, S, _ = x.shape
+    d_inner, _ = mamba_dims(cfg)
+    n = cfg.mamba_d_state
+    cd = cfg.cdtype
+    xs, z, dt, B, C, A = _mamba_scan_inputs(x, p, cfg)
+
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)        # (B,S,di,n)
+    # dBx: (dt*x) (B,S,di) outer B (B,S,n) -> (B,S,di,n)
+    dBx = (dt * xs).astype(jnp.float32)[..., None] * B.astype(jnp.float32)[:, :, None, :]
+
+    h_init = jnp.zeros((Bsz, d_inner, n), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        dA_t, dBx_t, C_t = inp
+        h = dA_t * h + dBx_t
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    (h_fin, ys) = jax.lax.scan(
+        step, h_init,
+        (dA.swapaxes(0, 1), dBx.swapaxes(0, 1),
+         C.astype(jnp.float32).swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).astype(cd)                           # (B,S,di)
+    y = y + xs * p["D"].astype(cd)
+    y = y * jax.nn.silu(z)
+    out = basic.dense(y, p["out_proj"], cd)
+    # conv tail for decode continuation
+    K = cfg.mamba_d_conv
+    xz = basic.dense(x, p["in_proj"], cd)
+    conv_tail = jnp.split(xz, 2, axis=-1)[0][:, -(K - 1):, :]
+    return out, (h_fin, conv_tail)
+
+
+def mamba_step(x_t, p, cfg: ModelConfig, state):
+    """Decode step. x_t: (B, d); state = (h (B,di,n), conv (B,K-1,di))."""
+    h, conv_state = state
+    d_inner, dt_rank = mamba_dims(cfg)
+    n = cfg.mamba_d_state
+    cd = cfg.cdtype
+    xz = basic.dense(x_t, p["in_proj"], cd)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = conv1d_step(xs, conv_state, p["conv_w"].astype(cd),
+                                 p["conv_b"].astype(cd))
+    xc = jax.nn.silu(xc)
+    dbc = basic.dense(xc, p["x_proj"], cd)
+    dt, B, C = jnp.split(dbc, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(basic.dense(dt, p["dt_proj"], cd)).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[..., None] * A)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * B.astype(jnp.float32)[:, None, :]
+    h = dA * h + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C.astype(jnp.float32)).astype(cd)
+    y = y + xc * p["D"].astype(cd)
+    y = y * jax.nn.silu(z)
+    return basic.dense(y, p["out_proj"], cd), (h, conv_state)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM, arXiv:2405.04517) — matrix memory with exponential gating.
+#
+# Chunkwise-parallel training form; per-head state (C: dh x dh, n: dh).
+
+
+def xlstm_dims(cfg: ModelConfig):
+    d_in = int(cfg.xlstm_proj_factor * cfg.d_model)
+    nh = cfg.num_heads
+    dh = d_in // nh
+    return d_in, nh, dh
+
+
+def init_mlstm(seed, path, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_in, nh, dh = xlstm_dims(cfg)
+    K = 4
+    return {
+        "up_proj": basic.init_dense(seed, f"{path}/up_proj", d, 2 * d_in, dtype),
+        "conv_w": basic.normal_init(seed, f"{path}/conv_w", (K, d_in), dtype, fan_in=K),
+        "conv_b": basic.zeros_init(seed, f"{path}/conv_b", (d_in,), dtype),
+        "wq": basic.init_dense(seed, f"{path}/wq", d_in, d_in, dtype, bias=True),
+        "wk": basic.init_dense(seed, f"{path}/wk", d_in, d_in, dtype, bias=True),
+        "wv": basic.init_dense(seed, f"{path}/wv", d_in, d_in, dtype, bias=True),
+        "w_if": basic.init_dense(seed, f"{path}/w_if", d_in, 2 * nh, dtype, bias=True),
+        "ogate_norm": basic.init_norm(seed, f"{path}/ogate_norm", d_in, dtype,
+                                      "rmsnorm"),
+        "down_proj": basic.init_dense(seed, f"{path}/down_proj", d_in, d, dtype),
+    }
+
+
+def _mlstm_qkvif(x, p, cfg: ModelConfig):
+    d_in, nh, dh = xlstm_dims(cfg)
+    cd = cfg.cdtype
+    B, S, _ = x.shape
+    up = basic.dense(x, p["up_proj"], cd)
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc = causal_conv1d(xm, p["conv_w"].astype(cd), p["conv_b"].astype(cd))
+    xc = jax.nn.silu(xc)
+    q = basic.dense(xc, p["wq"], cd).reshape(B, S, nh, dh).transpose(0, 2, 1, 3)
+    k = basic.dense(xc, p["wk"], cd).reshape(B, S, nh, dh).transpose(0, 2, 1, 3)
+    v = basic.dense(xm, p["wv"], cd).reshape(B, S, nh, dh).transpose(0, 2, 1, 3)
+    g = basic.dense(xc, p["w_if"], jnp.float32)
+    log_i, f_pre = jnp.split(g, 2, axis=-1)                    # (B,S,nh)
+    log_i = log_i.transpose(0, 2, 1)                            # exp input gate
+    log_f = jax.nn.log_sigmoid(f_pre).transpose(0, 2, 1)        # sigmoid forget
+    k = k / jnp.sqrt(jnp.asarray(dh, cd))
+    return q, k, v, log_i, log_f, z
+
+
+def mlstm_forward(x, p, cfg: ModelConfig, state=None, chunk: int = 128):
+    """x: (B,S,d) -> (B,S,d). Chunkwise-parallel mLSTM."""
+    B, S, _ = x.shape
+    d_in, nh, dh = xlstm_dims(cfg)
+    cd = cfg.cdtype
+    q, k, v, log_i, log_f, z = _mlstm_qkvif(x, p, cfg)
+
+    nchunks = max(1, (S + chunk - 1) // chunk)
+    pad = nchunks * chunk - S
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0))) for t in (q, k, v))
+        log_i = jnp.pad(log_i, ((0, 0), (0, 0), (0, pad)), constant_values=-30.0)
+        log_f = jnp.pad(log_f, ((0, 0), (0, 0), (0, pad)))
+    L = chunk
+
+    def split_chunks(t):
+        return t.reshape(t.shape[0], t.shape[1], nchunks, L, *t.shape[3:]).swapaxes(0, 2).swapaxes(1, 2)
+
+    qc, kc, vc = (split_chunks(t) for t in (q, k, v))           # (nc,B,nh,L,dh)
+    lic, lfc = (split_chunks(t) for t in (log_i, log_f))        # (nc,B,nh,L)
+
+    C0 = jnp.zeros((B, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, nh, dh), jnp.float32)
+    if state is not None:
+        C0, n0 = state
+
+    def chunk_step(carry, inp):
+        C, n = carry
+        q_, k_, v_, li_, lf_ = inp
+        F = jnp.cumsum(lf_, axis=-1)                            # (B,nh,L)
+        # decay matrix D_ts = exp(F_t - F_s + li_s), s <= t
+        Dlog = F[..., :, None] - F[..., None, :] + li_[..., None, :]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(tri, jnp.exp(Dlog), 0.0)
+        S_ = jnp.einsum("bhld,bhmd->bhlm", q_.astype(jnp.float32),
+                        k_.astype(jnp.float32)) * D
+        num = jnp.einsum("bhlm,bhmd->bhld", S_, v_.astype(jnp.float32))
+        num = num + jnp.exp(F)[..., None] * jnp.einsum(
+            "bhld,bhde->bhle", q_.astype(jnp.float32), C)
+        den = jnp.sum(S_, axis=-1) + jnp.exp(F) * jnp.einsum(
+            "bhld,bhd->bhl", q_.astype(jnp.float32), n)
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # state update to end of chunk
+        decay_all = jnp.exp(F[..., -1:] - F + li_)              # (B,nh,L)
+        C_new = jnp.exp(F[..., -1])[..., None, None] * C + jnp.einsum(
+            "bhl,bhld,bhle->bhde", decay_all, k_.astype(jnp.float32),
+            v_.astype(jnp.float32))
+        n_new = jnp.exp(F[..., -1])[..., None] * n + jnp.einsum(
+            "bhl,bhld->bhd", decay_all, k_.astype(jnp.float32))
+        return (C_new, n_new), h.astype(cd)
+
+    (Cf, nf), hs = jax.lax.scan(chunk_step, (C0, n0), (qc, kc, vc, lic, lfc))
+    h = hs.swapaxes(1, 2).swapaxes(0, 2)                        # (B,nh,nc,L,dh)
+    h = h.reshape(B, nh, nchunks * L, dh)[:, :, :S, :]
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, d_in)
+    h = basic.rmsnorm(h, p["ogate_norm"]["scale"])
+    h = h * jax.nn.silu(z)
+    return basic.dense(h, p["down_proj"], cd), (Cf, nf)
+
+
+def mlstm_step(x_t, p, cfg: ModelConfig, state):
+    """Decode step. state = (C (B,nh,dh,dh), n (B,nh,dh), conv (B,3,d_in))."""
+    C, n, conv_state = state
+    d_in, nh, dh = xlstm_dims(cfg)
+    cd = cfg.cdtype
+    B = x_t.shape[0]
+    up = basic.dense(x_t, p["up_proj"], cd)
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc, conv_state = conv1d_step(xm, conv_state, p["conv_w"].astype(cd),
+                                 p["conv_b"].astype(cd))
+    xc = jax.nn.silu(xc)
+    q = basic.dense(xc, p["wq"], cd).reshape(B, nh, dh)
+    k = basic.dense(xc, p["wk"], cd).reshape(B, nh, dh) / jnp.sqrt(
+        jnp.asarray(dh, cd))
+    v = basic.dense(xm, p["wv"], cd).reshape(B, nh, dh)
+    g = basic.dense(xc, p["w_if"], jnp.float32)
+    log_i, f_pre = jnp.split(g, 2, axis=-1)
+    i = jnp.exp(log_i)                                          # (B,nh)
+    f = jax.nn.sigmoid(f_pre)
+    C = f[..., None, None] * C + i[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32))
+    n = f[..., None] * n + i[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), C)
+    den = jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n)
+    h = (num / jnp.maximum(jnp.abs(den), 1.0)[..., None]).astype(cd)
+    h = h.reshape(B, d_in)
+    h = basic.rmsnorm(h, p["ogate_norm"]["scale"])
+    h = h * jax.nn.silu(z)
+    return basic.dense(h, p["down_proj"], cd), (C, n, conv_state)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar memory, exponential gating, per-head recurrence.
+
+
+def init_slstm(seed, path, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    K = 4
+    return {
+        "conv_w": basic.normal_init(seed, f"{path}/conv_w", (K, d), dtype, fan_in=K),
+        "conv_b": basic.zeros_init(seed, f"{path}/conv_b", (d,), dtype),
+        "w_gates": basic.init_dense(seed, f"{path}/w_gates", d, 4 * d, dtype,
+                                    bias=True),
+        # block-diagonal recurrent weights per head: (nh, dh, 4*dh)
+        "r_gates": basic.normal_init(seed, f"{path}/r_gates", (nh, dh, 4 * dh),
+                                     dtype, fan_in=dh),
+        "out_norm": basic.init_norm(seed, f"{path}/out_norm", d, dtype, "rmsnorm"),
+        "up_gate": basic.init_dense(seed, f"{path}/up_gate", d,
+                                    int(4 * d / 3) // 2 * 2, dtype),
+        "up_proj": basic.init_dense(seed, f"{path}/up_proj", d,
+                                    int(4 * d / 3) // 2 * 2, dtype),
+        "down_proj": basic.init_dense(seed, f"{path}/down_proj",
+                                      int(4 * d / 3) // 2 * 2, d, dtype),
+    }
+
+
+def _slstm_cell(w_t, r_gates, state, nh, dh):
+    """w_t: (B, 4*d) input pre-activations; state=(c,n,h,m) each (B,nh,dh)."""
+    c, n, h, m = state
+    B = w_t.shape[0]
+    rec = jnp.einsum("bhd,hdg->bhg", h, r_gates.astype(jnp.float32))
+    pre = w_t.reshape(B, nh, 4 * dh).astype(jnp.float32) + rec
+    z_pre, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i = jnp.exp(i_pre - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    c = f * c + i * z
+    n = f * n + i
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h_new, m_new), h_new
+
+
+def slstm_forward(x, p, cfg: ModelConfig, state=None):
+    """x: (B,S,d) -> (B,S,d). Strict time recurrence (lax.scan)."""
+    B, S, d = x.shape
+    nh = cfg.num_heads
+    dh = d // nh
+    cd = cfg.cdtype
+    xc = causal_conv1d(x.astype(cd), p["conv_w"].astype(cd),
+                       p["conv_b"].astype(cd))
+    xc = jax.nn.silu(xc)
+    w = basic.dense(xc, p["w_gates"], cd)                       # (B,S,4d)
+    if state is None:
+        zeros = jnp.zeros((B, nh, dh), jnp.float32)
+        state = (zeros, zeros, zeros, zeros - 30.0)
+
+    def step(st, w_t):
+        return _slstm_cell(w_t, p["r_gates"], st, nh, dh)
+
+    state, hs = jax.lax.scan(step, state, w.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, S, d).astype(cd)
+    h = basic.rmsnorm(h, p["out_norm"]["scale"])
+    # gated FFN out (xLSTM post-up-projection block)
+    u = jax.nn.silu(basic.dense(h, p["up_gate"], cd)) * basic.dense(
+        h, p["up_proj"], cd)
+    return basic.dense(u, p["down_proj"], cd), state
+
+
+def slstm_step(x_t, p, cfg: ModelConfig, state):
+    """Decode step. state = (cell_state(c,n,h,m), conv_state)."""
+    cell, conv_state = state
+    cd = cfg.cdtype
+    d = x_t.shape[-1]
+    nh = cfg.num_heads
+    dh = d // nh
+    xc, conv_state = conv1d_step(x_t.astype(cd), conv_state,
+                                 p["conv_w"].astype(cd), p["conv_b"].astype(cd))
+    xc = jax.nn.silu(xc)
+    w = basic.dense(xc, p["w_gates"], cd)
+    cell, h = _slstm_cell(w, p["r_gates"], cell, nh, dh)
+    B = x_t.shape[0]
+    h = h.reshape(B, d).astype(cd)
+    h = basic.rmsnorm(h, p["out_norm"]["scale"])
+    u = jax.nn.silu(basic.dense(h, p["up_gate"], cd)) * basic.dense(
+        h, p["up_proj"], cd)
+    return basic.dense(u, p["down_proj"], cd), (cell, conv_state)

@@ -1,0 +1,106 @@
+"""Minimal functional optimizers (optax-style (init, update) pairs).
+
+Used both as ClientOpt (fresh state every round, per the generalized
+FedAvg of Reddi et al. 2020) and as ServerOpt (persistent state across
+rounds). The paper's experiments use: SGD / SGDM / Adam clients and
+SGD / SGDM / Adam servers (Table 9).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (params, grads, state) -> (params, state)
+    name: str = ""
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(_params):
+        return ()
+
+    def update(params, grads, state):
+        new = jax.tree_util.tree_map(
+            lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        return new, state
+
+    return Optimizer(init, update, f"sgd(lr={lr})")
+
+
+def sgdm(lr: float, momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params)
+
+    def update(params, grads, m):
+        m = jax.tree_util.tree_map(
+            lambda mm, g: momentum * mm + g.astype(mm.dtype), m, grads)
+        if nesterov:
+            step = jax.tree_util.tree_map(
+                lambda mm, g: momentum * mm + g.astype(mm.dtype), m, grads)
+        else:
+            step = m
+        new = jax.tree_util.tree_map(
+            lambda p, s: p - lr * s.astype(p.dtype), params, step)
+        return new, m
+
+    return Optimizer(init, update, f"sgdm(lr={lr},m={momentum})")
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": z, "v": jax.tree_util.tree_map(jnp.copy, z),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new = jax.tree_util.tree_map(
+            lambda p, mm, vv: p - (lr * (mm / bc1) /
+                                   (jnp.sqrt(vv / bc2) + eps)).astype(p.dtype),
+            params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update, f"adam(lr={lr})")
+
+
+def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    return {"sgd": sgd, "sgdm": sgdm, "adam": adam}[name](lr, **kw)
+
+
+# --- tree arithmetic helpers -------------------------------------------------
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x + y, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)

@@ -1,0 +1,38 @@
+"""Adaptive quantile clipping + tuning grid."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adaptive_clip as ac
+from repro.fl import tuning
+
+
+def test_clip_converges_to_target_quantile():
+    cfg = ac.AdaptiveClipConfig(initial_clip=10.0, target_quantile=0.5,
+                                lr=0.3)
+    state = ac.init_state(cfg)
+    rng = np.random.default_rng(0)
+    for t in range(300):
+        norms = jnp.asarray(rng.lognormal(0.0, 0.5, 32), jnp.float32)
+        state, clip = ac.update_state(cfg, state, norms)
+    # median of lognormal(0, .5) is 1.0
+    assert 0.7 < float(state["clip"]) < 1.4, float(state["clip"])
+
+
+def test_clipped_mean_bounds_contributions():
+    deltas = {"w": jnp.stack([jnp.full((4,), 10.0), jnp.full((4,), 0.1)])}
+    norms = jnp.asarray([20.0, 0.2])
+    avg = ac.clipped_mean(deltas, norms, clip=1.0)
+    # client 0 scaled by 1/20 -> contributes 0.5 per coord; client 1 intact
+    np.testing.assert_allclose(np.asarray(avg["w"]), (0.5 + 0.1) / 2,
+                               rtol=1e-5)
+
+
+def test_paper_grid_matches_appendix():
+    assert len(tuning.PAPER_DP_GRID) == 15  # 3 client x 5 server LRs
+    best, score, hist = tuning.search(
+        lambda p: -abs(p["client_lr"] - 0.1) - abs(p["server_lr"] - 1.0),
+        tuning.PAPER_DP_GRID)
+    assert abs(best["client_lr"] - 0.1) < 1e-9
+    assert abs(best["server_lr"] - 1.0) < 1e-9
+    assert len(hist) == 15

@@ -1,0 +1,111 @@
+"""Attention-layer unit properties: RoPE algebra, flash-vs-dense oracle,
+GQA head grouping, MLA compressed-cache equivalence.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.nn import attention as att
+
+CFG = ModelConfig(name="a", family="dense", num_layers=1, d_model=32,
+                  num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=8,
+                  compute_dtype="float32")
+
+
+def test_rope_preserves_norm_and_relative_positions():
+    x = jax.random.normal(jax.random.key(0), (1, 6, 2, 16))
+    pos = jnp.arange(6)[None, :]
+    cos, sin = att.rope_freqs(16, 1e4, pos)
+    xr = att.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(xr), axis=-1),
+                               rtol=1e-5)
+    # relative property: <q_m, k_n> depends only on m-n
+    q = jax.random.normal(jax.random.key(1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.key(2), (1, 1, 1, 16))
+
+    def dot_at(m, n):
+        cm, sm = att.rope_freqs(16, 1e4, jnp.asarray([[m]]))
+        cn, sn = att.rope_freqs(16, 1e4, jnp.asarray([[n]]))
+        qm = att.apply_rope(q, cm, sm)
+        kn = att.apply_rope(k, cn, sn)
+        return float(jnp.sum(qm * kn))
+
+    assert abs(dot_at(5, 3) - dot_at(9, 7)) < 1e-4
+    assert abs(dot_at(5, 3) - dot_at(5, 2)) > 1e-6  # but changes with gap
+
+
+@given(st.integers(1, 2), st.sampled_from([17, 64, 130]),
+       st.sampled_from([0, 8]))
+@settings(max_examples=8, deadline=None)
+def test_flash_matches_dense_softmax(b, s, window):
+    cfg = CFG.with_(sliding_window=window)
+    h, hd = 2, 16
+    ks = jax.random.split(jax.random.key(s * 7 + b), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    out = att.flash_attention(q, k, v, cfg, chunk=32)
+    # dense reference
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = qpos >= kpos
+    if window:
+        mask = mask & (qpos - kpos < window)
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    want = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(sc, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_gqa_grouping_matches_explicit_repeat():
+    """h=4 queries on kvh=2: heads (0,1)->kv0, (2,3)->kv1."""
+    b, s, hd = 1, 5, 16
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (b, s, 4, hd))
+    k = jax.random.normal(ks[1], (b, s, 2, hd))
+    v = jax.random.normal(ks[2], (b, s, 2, hd))
+    out = att.flash_attention(q, k, v, CFG)
+    krep = jnp.repeat(k, 2, axis=2)
+    vrep = jnp.repeat(v, 2, axis=2)
+    want = att.flash_attention(q, krep, vrep, CFG)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-6)
+
+
+def test_mla_decode_matches_full_form():
+    """Absorbed-matmul decode over the compressed (c_kv, k_pe) cache must
+    equal full-form attention over up-projected K/V."""
+    cfg = CFG.with_(use_mla=True, kv_lora_rank=24, q_lora_rank=0,
+                    qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16)
+    p = att.init_mla(0, "attn", cfg, jnp.float32)
+    B, T = 2, 5
+    x = jax.random.normal(jax.random.key(5), (B, T, cfg.d_model))
+    pos = jnp.arange(T)[None, :]
+    q, k, v, (ckv, kpe) = att.mla_qkv(x, p, cfg, pos)
+    full = att.flash_attention(q, k, v, cfg)
+    full = full.reshape(B, T, -1)
+    from repro.nn import basic
+    full_o = basic.dense(full, p["wo"], jnp.float32)
+
+    # decode the last token against the compressed cache
+    got = att.mla_decode(x[:, T - 1:T], p, cfg, ckv, kpe, T)
+    np.testing.assert_allclose(np.asarray(got[:, 0]),
+                               np.asarray(full_o[:, T - 1]),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_decode_attention_ignores_unwritten_slots():
+    b, S, h, hd = 1, 8, 2, 16
+    ks = jax.random.split(jax.random.key(6), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, hd))
+    k = jax.random.normal(ks[1], (b, S, h, hd))
+    v = jax.random.normal(ks[2], (b, S, h, hd))
+    o1 = att.decode_attention(q, k, v, 3, CFG.with_(num_kv_heads=2, num_heads=2))
+    k2 = k.at[:, 3:].set(99.0)
+    v2 = v.at[:, 3:].set(-99.0)
+    o2 = att.decode_attention(q, k2, v2, 3, CFG.with_(num_kv_heads=2, num_heads=2))
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)

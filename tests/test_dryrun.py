@@ -1,0 +1,64 @@
+"""Dry-run integration: the lowering path works end-to-end on a small
+forced-device mesh in a subprocess (the 512-device production matrices
+are exercised offline; their JSON results are validated here when
+present).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+from repro.configs import load_all
+from repro.launch import mesh as mesh_lib, dryrun
+load_all()
+mesh = mesh_lib.make_debug_mesh((2, 4), ("data", "model"))
+out = [dryrun.run_one(a, s, mesh=mesh, verbose=False)
+       for a, s in [("stablelm-1.6b", "decode_32k"),
+                    ("mixtral-8x7b", "train_4k")]]
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_subprocess():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    res = json.loads(proc.stdout.strip().splitlines()[-1])
+    for r in res:
+        assert r["status"] == "ok", r
+        assert r["cost"].get("flops", 0) > 0
+        assert r["memory"]["peak_bytes"] > 0
+
+
+@pytest.mark.parametrize("path,mesh_shape", [
+    ("results/dryrun_single_pod.json", [16, 16]),
+    ("results/dryrun_multi_pod.json", [2, 16, 16]),
+])
+def test_production_matrix_results(path, mesh_shape):
+    """Validates the recorded production dry-run matrices: every non-skip
+    pair lowered + compiled, skips match the documented rule."""
+    full = os.path.join(ROOT, path)
+    if not os.path.exists(full):
+        pytest.skip(f"{path} not generated in this checkout")
+    res = json.load(open(full))
+    assert len(res) == 40
+    from repro.launch.specs import skip_reason
+    for r in res:
+        expected_skip = skip_reason(r["arch"], r["shape"])
+        if expected_skip:
+            assert r["status"] == "skip"
+        else:
+            assert r["status"] == "ok", (r["arch"], r["shape"],
+                                         r.get("error"))
+            assert r["mesh"] == mesh_shape
+            assert r["memory"]["peak_bytes"] > 0

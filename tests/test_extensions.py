@@ -1,0 +1,115 @@
+"""Beyond-paper extensions: adaptive tiered freezing (paper §5 future
+work) and quantized uplink (complementary compression).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.partition as part
+from repro.core import adaptive, compress, fedpt
+from repro.models import paper_models as pm
+from repro.nn import basic
+
+
+def _loss(params, b):
+    logits = pm.emnist_cnn_forward(params, b["images"])
+    lp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(lp, b["labels"][:, None], 1)), {}
+
+
+TIERS = [(), (r"^dense2/",), (r"^dense2/", r"^conv2/")]
+
+
+def test_tier_masks_are_nested_and_leafwise():
+    y, z = part.partition(pm.init_emnist_cnn(0), (r"^dense1/",))
+    masks = adaptive.tier_masks(y, TIERS)
+    flat = [dict(basic.flatten_params(m)) for m in masks]
+    # tier 0 trains everything in the union
+    assert all(float(v) == 1.0 for v in flat[0].values())
+    # higher tiers freeze supersets
+    for a, b in zip(flat, flat[1:]):
+        assert all(float(b[k]) <= float(a[k]) for k in a)
+    assert float(flat[1]["dense2/kernel"]) == 0.0
+
+
+def test_tiered_round_respects_masks_and_learns():
+    y0, z = part.partition(pm.init_emnist_cnn(0), (r"^dense1/",))
+    rc = fedpt.RoundConfig(3, 2, 8, "sgd", 0.05, "sgd", 1.0)
+    round_fn, sopt = adaptive.make_tiered_round_fn(_loss, rc, TIERS)
+    round_fn = jax.jit(round_fn)
+    B = {"images": jax.random.normal(jax.random.key(0), (3, 2, 8, 28, 28, 1)),
+         "labels": jax.random.randint(jax.random.key(1), (3, 2, 8), 0, 62)}
+    tiers = jnp.asarray([0, 1, 2], jnp.int32)
+    w = jnp.ones((3,))
+    y1, _, m = round_fn(y0, sopt.init(y0), z, B, w, tiers,
+                        jax.random.key(0))
+    f0 = dict(basic.flatten_params(y0))
+    f1 = dict(basic.flatten_params(y1))
+    # dense2 trained only by tier-0 client -> still updated
+    assert float(jnp.abs(f1["dense2/kernel"] - f0["dense2/kernel"]).sum()) > 0
+    # conv1 trained by all -> updated
+    assert float(jnp.abs(f1["conv1/kernel"] - f0["conv1/kernel"]).sum()) > 0
+    assert np.isfinite(float(m["delta_norm"]))
+
+
+def test_tiered_aggregation_excludes_masked_clients():
+    """A leaf frozen for tiers 1,2 must equal the tier-0-only average."""
+    y0, z = part.partition(pm.init_emnist_cnn(0), (r"^dense1/",))
+    rc = fedpt.RoundConfig(2, 1, 4, "sgd", 0.1, "sgd", 1.0)
+    round_fn, sopt = adaptive.make_tiered_round_fn(_loss, rc, TIERS)
+    B = {"images": jax.random.normal(jax.random.key(0), (2, 1, 4, 28, 28, 1)),
+         "labels": jax.random.randint(jax.random.key(1), (2, 1, 4), 0, 62)}
+    w = jnp.asarray([1.0, 100.0])   # heavy weight on the masked client
+    # client 1 in tier 1 (dense2 frozen): its huge weight must NOT dilute
+    # the dense2 update of client 0
+    y1, _, _ = jax.jit(round_fn)(y0, sopt.init(y0), z, B, w,
+                                 jnp.asarray([0, 1], jnp.int32),
+                                 jax.random.key(0))
+    # reference: client 0 alone
+    y_ref, _, _ = jax.jit(round_fn)(
+        y0, sopt.init(y0), z,
+        jax.tree_util.tree_map(lambda a: a[:1], B), w[:1],
+        jnp.asarray([0], jnp.int32), jax.random.key(0))
+    a = dict(basic.flatten_params(y1))["dense2/kernel"]
+    b = dict(basic.flatten_params(y_ref))["dense2/kernel"]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-7)
+
+
+def test_tier_comm_ledger_monotone():
+    y, z = part.partition(pm.init_emnist_cnn(0), (r"^dense1/",))
+    reps = adaptive.tier_comm_report(y, z, TIERS)
+    ups = [r.upload_fedpt for r in reps]
+    assert ups[0] > ups[1] > ups[2] > 0
+    assert all(r.reduction > 19 for r in reps)  # all tiers beat 20x-ish
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.key(0), (1000,)) * 0.3
+    q, s = compress.quantize_leaf(x, 8)
+    err = jnp.max(jnp.abs(compress.dequantize_leaf(q, s) - x))
+    assert float(err) <= float(s) / 2 + 1e-9
+    assert q.dtype == jnp.int8
+
+
+def test_quantized_uplink_round_still_descends():
+    y0, z = part.partition(pm.init_emnist_cnn(0), pm.EMNIST_FREEZE)
+    rc = fedpt.RoundConfig(4, 2, 8, "sgd", 0.05, "sgd", 0.5, uplink_bits=8)
+    round_fn, sopt = fedpt.make_round_fn(_loss, rc)
+    round_fn = jax.jit(round_fn)
+    from repro.data import synthetic as syn
+    ds = syn.make_federated_images(8, 30, (28, 28, 1), 62, seed=2)
+    rng = np.random.default_rng(0)
+    ss = sopt.init(y0)
+    y = y0
+    losses = []
+    for r in range(4):
+        cids = syn.sample_cohort(rng, 8, 4)
+        batch, w = syn.cohort_batch(ds, cids, 2, 8, rng)
+        y, ss, m = round_fn(y, ss, z, batch, jnp.asarray(w),
+                            jax.random.key(r))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    # uplink ledger: int8 payload is ~4x smaller than f32
+    n = compress.quantized_uplink_bytes(y, 8)
+    assert n < basic.tree_bytes(y) / 3.5

@@ -1,0 +1,175 @@
+"""FedPT core invariants: partition/merge round-trip, seed reconstruction,
+aggregation equivalence with a sequential reference, frozen-param
+immutability, and communication accounting against the paper's tables.
+"""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.partition as part
+import repro.core.reconstruct as rec
+from repro.core import comm, fedpt
+from repro.models import paper_models as pm
+from repro.nn import basic
+from repro.optim import optimizers as opt_lib
+
+INIT = lambda s: pm.init_emnist_cnn(s)
+
+
+# ---------------------------------------------------------------------------
+# partition / merge
+
+
+@given(st.integers(0, 2**31 - 1),
+       st.sets(st.sampled_from(["conv1", "conv2", "dense1", "dense2", "gn"]),
+               max_size=4))
+@settings(max_examples=10, deadline=None)
+def test_partition_merge_roundtrip(seed, frozen_names):
+    spec = tuple(rf"^{n}/" for n in sorted(frozen_names))
+    full = INIT(seed % 1000)
+    y, z = part.partition(full, spec)
+    merged = part.merge(y, z)
+    fa = dict(basic.flatten_params(full))
+    fb = dict(basic.flatten_params(merged))
+    assert set(fa) == set(fb)
+    for k in fa:
+        assert bool((fa[k] == fb[k]).all())
+    # disjointness
+    ky = set(dict(basic.flatten_params(y)))
+    kz = set(dict(basic.flatten_params(z)))
+    assert not (ky & kz)
+    assert all(any(re.search(p, k) for p in spec) for k in kz)
+
+
+def test_reconstruct_is_exact_and_dce_friendly():
+    assert rec.verify_roundtrip(INIT, 7, pm.EMNIST_FREEZE)
+    r1 = rec.reconstruct(INIT, 7, pm.EMNIST_FREEZE)
+    # the jitted reconstructor is bit-stable across calls (what clients
+    # rely on); jit-vs-eager may differ by an ulp (fma fusion), so the
+    # cross-path check is allclose.
+    recon = rec.make_reconstructor(INIT, 7, pm.EMNIST_FREEZE)
+    r2a, r2b = recon(), recon()
+    assert jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda a, b: bool((a == b).all()), r2a, r2b))
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                                rtol=1e-6, atol=1e-8), r1, r2a)
+    r3 = rec.reconstruct(INIT, 8, pm.EMNIST_FREEZE)
+    assert not jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda a, b: bool((a == b).all()), r1, r3))
+
+
+# ---------------------------------------------------------------------------
+# round engine vs sequential reference
+
+
+def _quadratic_loss(params, batch):
+    # simple strongly-convex loss so local SGD has closed behaviour
+    flat = dict(basic.flatten_params(params))
+    loss = 0.0
+    for k, v in flat.items():
+        loss = loss + jnp.sum((v - batch["target"]) ** 2)
+    return loss, {}
+
+
+def test_round_matches_sequential_reference():
+    spec = (r"^dense1/",)
+    y, z = part.partition(INIT(0), spec)
+    rc = fedpt.RoundConfig(3, 2, 1, "sgd", 0.01, "sgd", 1.0)
+    round_fn, sopt = fedpt.make_round_fn(_quadratic_loss, rc)
+    C, tau = 3, 2
+    batch = {"target": jnp.arange(C * tau, dtype=jnp.float32).reshape(
+        C, tau, 1) / 10.0}
+    w = jnp.asarray([1.0, 2.0, 3.0])
+    y2, _, _ = jax.jit(round_fn)(y, sopt.init(y), z, batch, w,
+                                 jax.random.key(0))
+
+    # sequential reference
+    cu = fedpt.make_client_update(_quadratic_loss, opt_lib.sgd(0.01), tau)
+    deltas = [cu(y, z, {"target": batch["target"][i]})[0] for i in range(C)]
+    agg = jax.tree_util.tree_map(
+        lambda *ds: sum(wi * d for wi, d in zip(w, ds)) / float(jnp.sum(w)),
+        *deltas)
+    y_ref = jax.tree_util.tree_map(lambda a, d: a + d, y, agg)
+    for (ka, va), (kb, vb) in zip(basic.flatten_params(y2),
+                                  basic.flatten_params(y_ref)):
+        assert ka == kb
+        np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_frozen_never_updated_end_to_end():
+    from repro.data import synthetic as syn
+    ds = syn.make_federated_images(8, 20, (28, 28, 1), 62, seed=1)
+
+    def loss_fn(params, b):
+        logits = pm.emnist_cnn_forward(params, b["images"])
+        lp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(lp, b["labels"][:, None], 1)), {}
+
+    y, z = part.partition(INIT(0), pm.EMNIST_FREEZE)
+    z0 = jax.tree_util.tree_map(lambda a: a.copy(), z)
+    rc = fedpt.RoundConfig(4, 2, 8, "sgd", 0.05, "sgd", 0.5)
+    round_fn, sopt = fedpt.make_round_fn(loss_fn, rc)
+    ss = sopt.init(y)
+    rngnp = np.random.default_rng(0)
+    for r in range(3):
+        cids = syn.sample_cohort(rngnp, 8, 4)
+        batch, w = syn.cohort_batch(ds, cids, 2, 8, rngnp)
+        y, ss, m = jax.jit(round_fn)(y, ss, z, batch, jnp.asarray(w),
+                                     jax.random.key(r))
+        assert np.isfinite(float(m["loss"]))
+    assert jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda a, b: bool((a == b).all()), z, z0))
+
+
+# ---------------------------------------------------------------------------
+# communication accounting — the paper's exact numbers
+
+
+def test_comm_reduction_matches_paper_tables():
+    # Table 1: EMNIST 4.97% trainable, 20x
+    y, z = part.partition(INIT(0), pm.EMNIST_FREEZE)
+    s = part.summarize(part.merge(y, z), pm.EMNIST_FREEZE)
+    assert s["total_params"] == 1_690_174
+    assert abs(s["trainable_pct"] - 4.97) < 0.01
+    assert abs(comm.report_for(y, z).reduction - 20.1) < 0.2
+
+    # Table 3: SO NWP 91.3 / 82.6 / 73.8 % trainable
+    sop = pm.init_so_transformer(0)
+    for blocks, want in [((2,), 91.3), ((1, 2), 82.6), ((0, 1, 2), 73.8)]:
+        s = part.summarize(sop, pm.so_freeze_spec(blocks))
+        assert abs(s["trainable_pct"] - want) < 0.45, (blocks, s)
+
+    # Table 2 schedule is monotone decreasing in trainable share
+    rn = pm.init_resnet18(0)
+    pcts = [part.summarize(rn, pm.resnet18_freeze_spec(st))["trainable_pct"]
+            for st in [(3,), (3, 2), (3, 2, 1), (3, 2, 1, 0)]]
+    assert all(a > b for a, b in zip(pcts, pcts[1:]))
+    assert abs(pcts[0] - 26.25) < 1.0 and pcts[-1] < 3.0
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import checkpoint as ckpt
+    y, z = part.partition(INIT(3), pm.EMNIST_FREEZE)
+    sopt = opt_lib.sgdm(0.5)
+    ss = sopt.init(y)
+    p = str(tmp_path / "ck.npz")
+    ckpt.save(p, y, seed=3, freeze_spec=pm.EMNIST_FREEZE, server_state=ss,
+              round_num=11)
+    y2, seed, spec, ss2, rnd, _ = ckpt.load(p, server_state_template=ss)
+    assert rnd == 11 and seed == 3 and tuple(spec) == pm.EMNIST_FREEZE
+    for (ka, va), (kb, vb) in zip(basic.flatten_params(y),
+                                  basic.flatten_params(y2)):
+        assert ka == kb and bool((np.asarray(va) == np.asarray(vb)).all())
+    full, rnd2 = ckpt.restore_full_model(p, INIT)
+    fa = dict(basic.flatten_params(INIT(3)))
+    fb = dict(basic.flatten_params(full))
+    for k in fa:
+        ok = bool((np.asarray(fa[k]) == np.asarray(fb[k])).all())
+        if any(re.search(s, k) for s in pm.EMNIST_FREEZE):
+            assert ok, f"frozen leaf {k} must regenerate exactly"

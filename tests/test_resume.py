@@ -1,0 +1,65 @@
+"""Checkpoint-resume equivalence: training R rounds straight equals
+training r rounds, checkpointing (trainable + seed + server state only),
+restoring, and training R-r more — with identical client sampling.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.partition as part
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import fedpt
+from repro.data import synthetic as syn
+from repro.models import paper_models as pm
+from repro.nn import basic
+
+
+def _loss(params, b):
+    logits = pm.emnist_cnn_forward(params, b["images"])
+    lp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(lp, b["labels"][:, None], 1)), {}
+
+
+def _train(y, ss, frozen, round_fn, ds, rounds, start=0):
+    rng = np.random.default_rng(42)
+    # regenerate the deterministic cohort stream and skip `start` rounds
+    cohorts = []
+    for r in range(start + rounds):
+        cids = syn.sample_cohort(rng, 8, 4)
+        batch, w = syn.cohort_batch(ds, cids, 1, 8, rng)
+        cohorts.append((batch, w))
+    for r in range(start, start + rounds):
+        batch, w = cohorts[r]
+        y, ss, _ = round_fn(y, ss, frozen, batch, jnp.asarray(w),
+                            jax.random.key(r))
+    return y, ss
+
+
+def test_resume_equals_straight_run(tmp_path):
+    ds = syn.make_federated_images(8, 24, (28, 28, 1), 62, seed=9)
+    SEED = 5
+    init_fn = lambda s: pm.init_emnist_cnn(s)
+    y0, frozen = part.partition(init_fn(SEED), pm.EMNIST_FREEZE)
+    rc = fedpt.RoundConfig(4, 1, 8, "sgd", 0.05, "sgdm", 0.5)
+    round_fn, sopt = fedpt.make_round_fn(_loss, rc)
+    round_fn = jax.jit(round_fn)
+
+    # straight: 4 rounds
+    yA, ssA = _train(y0, sopt.init(y0), frozen, round_fn, ds, 4)
+
+    # split: 2 rounds -> checkpoint -> restore -> 2 rounds
+    y1, ss1 = _train(y0, sopt.init(y0), frozen, round_fn, ds, 2)
+    path = str(tmp_path / "mid.npz")
+    ckpt.save(path, y1, seed=SEED, freeze_spec=pm.EMNIST_FREEZE,
+              server_state=ss1, round_num=2)
+    y2, seed2, spec2, ss2, rnd, _ = ckpt.load(path, server_state_template=ss1)
+    frozen2 = part.partition(init_fn(seed2), tuple(spec2))[1]
+    yB, ssB = _train(
+        jax.tree_util.tree_map(jnp.asarray, y2), ss2, frozen2, round_fn, ds,
+        2, start=2)
+
+    for (ka, va), (kb, vb) in zip(basic.flatten_params(yA),
+                                  basic.flatten_params(yB)):
+        assert ka == kb
+        np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                                   rtol=1e-6, atol=1e-7)

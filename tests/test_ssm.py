@@ -1,0 +1,96 @@
+"""SSM-layer properties: Mamba scan-vs-step consistency, mLSTM chunk-size
+invariance (the chunkwise-parallel form must not depend on the chunking),
+sLSTM stabilizer behaviour, causal conv identities.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.nn import ssm
+
+CFG = ModelConfig(name="s", family="ssm", num_layers=1, d_model=32,
+                  num_heads=2, num_kv_heads=2, d_ff=0, vocab_size=8,
+                  compute_dtype="float32", mamba_d_state=4, mamba_expand=2)
+
+
+def test_causal_conv_matches_step():
+    B, S, C, K = 2, 7, 6, 4
+    x = jax.random.normal(jax.random.key(0), (B, S, C))
+    w = jax.random.normal(jax.random.key(1), (K, C)) * 0.3
+    b = jax.random.normal(jax.random.key(2), (C,)) * 0.1
+    full = ssm.causal_conv1d(x, w, b)
+    state = jnp.zeros((B, K - 1, C))
+    outs = []
+    for t in range(S):
+        y, state = ssm.conv1d_step(x[:, t], state, w, b)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), atol=1e-5, rtol=1e-5)
+
+
+def test_mamba_forward_matches_stepwise():
+    p = ssm.init_mamba(0, "m", CFG, jnp.float32)
+    B, S = 2, 6
+    x = jax.random.normal(jax.random.key(3), (B, S, CFG.d_model)) * 0.5
+    full, (h_fin, _) = ssm.mamba_forward(x, p, CFG)
+    di, _ = ssm.mamba_dims(CFG)
+    state = (jnp.zeros((B, di, CFG.mamba_d_state)),
+             jnp.zeros((B, CFG.mamba_d_conv - 1, di)))
+    outs = []
+    for t in range(S):
+        y, state = ssm.mamba_step(x[:, t], p, CFG, state)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(state[0]), np.asarray(h_fin),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("chunks", [(4, 16), (8, 64)])
+def test_mlstm_chunk_size_invariance(chunks):
+    """The chunkwise-parallel mLSTM is exact: results must be identical
+    (to fp tolerance) for any chunk size."""
+    p = ssm.init_mlstm(0, "m", CFG, jnp.float32)
+    x = jax.random.normal(jax.random.key(4), (2, 24, CFG.d_model)) * 0.5
+    a, (Ca, na) = ssm.mlstm_forward(x, p, CFG, chunk=chunks[0])
+    b, (Cb, nb) = ssm.mlstm_forward(x, p, CFG, chunk=chunks[1])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5,
+                               rtol=3e-5)
+    np.testing.assert_allclose(np.asarray(Ca), np.asarray(Cb), atol=3e-4,
+                               rtol=3e-4)
+
+
+def test_mlstm_forward_matches_stepwise():
+    p = ssm.init_mlstm(0, "m", CFG, jnp.float32)
+    B, S = 1, 9
+    x = jax.random.normal(jax.random.key(5), (B, S, CFG.d_model)) * 0.5
+    full, _ = ssm.mlstm_forward(x, p, CFG, chunk=4)
+    d_in, nh, dh = ssm.xlstm_dims(CFG)
+    state = (jnp.zeros((B, nh, dh, dh)), jnp.zeros((B, nh, dh)),
+             jnp.zeros((B, 3, d_in)))
+    outs = []
+    for t in range(S):
+        y, state = ssm.mlstm_step(x[:, t], p, CFG, state)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), atol=3e-5, rtol=3e-5)
+
+
+def test_slstm_forward_matches_stepwise_and_is_stable():
+    p = ssm.init_slstm(0, "s", CFG, jnp.float32)
+    B, S = 2, 8
+    x = jax.random.normal(jax.random.key(6), (B, S, CFG.d_model)) * 3.0
+    full, fin = ssm.slstm_forward(x, p, CFG)
+    assert bool(jnp.isfinite(full).all())  # exp-gating stabilized by m
+    nh, dh = CFG.num_heads, CFG.d_model // CFG.num_heads
+    zeros = jnp.zeros((B, nh, dh))
+    state = ((zeros, zeros, zeros, zeros - 30.0),
+             jnp.zeros((B, 3, CFG.d_model)))
+    outs = []
+    for t in range(S):
+        y, state = ssm.slstm_step(x[:, t], p, CFG, state)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), atol=2e-5, rtol=2e-5)
