@@ -1,0 +1,69 @@
+"""Asynchronous FedPT on a heterogeneous phone fleet.
+
+The paper's communication reductions (Tables 1-3) matter most where
+clients are slow, flaky and bandwidth-bound. This example trains the
+EMNIST CNN with 95% of parameters frozen on the "pareto-mobile" fleet —
+heavy-tailed link speeds, 80% availability, 10% mid-round dropout —
+under FedBuff-style buffered async aggregation (goal count K, staleness
+down-weighting), and compares against a synchronous cohort run with a
+straggler deadline on the same fleet. Communication is *measured* at the
+wire (serialized payload bytes), not estimated.
+
+    PYTHONPATH=src python examples/async_heterogeneous.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import fedpt
+from repro.data import synthetic as syn
+from repro.models import paper_models as pm
+from repro.sim import GridConfig, run_grid
+
+MB = 1024.0 * 1024.0
+
+ds = syn.make_federated_images(num_clients=40, examples_per_client=50,
+                               shape=(28, 28, 1), num_classes=62, alpha=1.0)
+
+
+def loss_fn(params, batch):
+    logits = pm.emnist_cnn_forward(params, batch["images"])
+    lp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(lp, batch["labels"][:, None], 1)), {}
+
+
+# int8-quantized uplink on top of FedPT (the paper's §5: complementary)
+rc = fedpt.RoundConfig(clients_per_round=10, local_steps=2, local_batch=16,
+                       client_opt="sgd", client_lr=0.05,
+                       server_opt="sgd", server_lr=0.5, uplink_bits=8)
+
+RUNS = {
+    "sync + deadline": GridConfig(mode="sync", fleet="pareto-mobile",
+                                  over_selection=1.3,
+                                  straggler_deadline=120.0),
+    "async (FedBuff)": GridConfig(mode="async", fleet="pareto-mobile",
+                                  concurrency=12, goal_count=6,
+                                  staleness="polynomial"),
+}
+
+for name, gc in RUNS.items():
+    res = run_grid(lambda s: pm.init_emnist_cnn(s), loss_fn, ds, rc,
+                   rounds=12, grid=gc, freeze_spec=pm.EMNIST_FREEZE, seed=0)
+    st = res.scheduler_stats
+    print(f"\n== {name} on fleet '{res.fleet.name}' ==")
+    print(f"  loss {res.history[0]['loss']:.3f} -> "
+          f"{res.history[-1]['loss']:.3f} over {len(res.history)} updates")
+    print(f"  simulated wall-clock: {res.virtual_seconds:,.0f} s "
+          f"({res.virtual_seconds / max(len(res.history), 1):.0f} s/update)")
+    print(f"  dispatches {st['dispatches']}, uploads {st['uploads']}, "
+          f"dropouts {st['dropouts']}, offline {st['offline']}, "
+          f"deadline drops {st['deadline_drops']}")
+    if name.startswith("async"):
+        stale = [h["staleness_max"] for h in res.history]
+        print(f"  staleness max seen: {max(stale):.0f} "
+              f"(down-weighted 1/sqrt(1+s))")
+    print(f"  measured wire traffic: "
+          f"{res.comm.measured_down_bytes / MB:.2f} MB down, "
+          f"{res.comm.measured_up_bytes / MB:.2f} MB up "
+          f"across {res.comm.transfers} transfers")
+    print(f"  analytic ledger: {res.comm.reduction:.1f}x reduction vs "
+          f"full-model FedAvg (uplink alone {res.comm.uplink_reduction:.1f}x)")

@@ -7,15 +7,31 @@ Per round, generalized FedAvg moves:
 so the per-round reduction is 2*|x| / (2*|y| + seed). The uplink-only
 reduction (|x|/|y|) is also reported since uplink is the scarcer resource
 (0.25MB/s vs 0.75MB/s; Wang et al. 2021b).
+
+With uplink quantization on (RoundConfig.uplink_bits > 0) the uplink
+payload is the int-k delta plus one f32 scale per leaf — the ledger uses
+``compress.quantized_uplink_bytes`` for it, not fp32 trainable bytes.
+
+The analytic columns above are *predictions*; the simulation grid
+(repro/sim/wire.py) serializes real payloads and records the observed
+totals in ``measured_down_bytes`` / ``measured_up_bytes`` so the two can
+be cross-checked (they must agree exactly for fp32 payloads).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict
 
+from repro.core import compress
 from repro.nn import basic
 
 SEED_BYTES = 8
+
+# Measured cross-device links (Wang et al. 2021b): download 0.75 MB/s,
+# upload 0.25 MB/s. The "uniform" fleet preset in repro/sim/devices.py
+# uses the same constants.
+DOWNLINK_MBPS = 0.75
+UPLINK_MBPS = 0.25
 
 
 @dataclasses.dataclass
@@ -23,6 +39,15 @@ class CommReport:
     full_bytes: int
     trainable_bytes: int
     rounds: int = 1
+    # uplink quantization (0 = fp32 uplink). When set, uploads cost
+    # `quantized_trainable_bytes` per client-round instead of fp32 bytes.
+    uplink_bits: int = 0
+    quantized_trainable_bytes: int = 0
+    # wire-level totals observed by the simulation grid (sum over every
+    # client transfer actually performed); 0 until metered.
+    measured_down_bytes: int = 0
+    measured_up_bytes: int = 0
+    transfers: int = 0
 
     @property
     def download_full(self) -> int:
@@ -38,7 +63,10 @@ class CommReport:
 
     @property
     def upload_fedpt(self) -> int:
-        return self.trainable_bytes * self.rounds
+        per_round = (self.quantized_trainable_bytes
+                     if self.uplink_bits and self.quantized_trainable_bytes
+                     else self.trainable_bytes)
+        return per_round * self.rounds
 
     @property
     def reduction(self) -> float:
@@ -55,19 +83,35 @@ class CommReport:
             "full_down_mb": self.full_bytes / mb,
             "full_up_mb": self.full_bytes / mb,
             "fedpt_down_mb": (self.trainable_bytes + SEED_BYTES) / mb,
-            "fedpt_up_mb": self.trainable_bytes / mb,
+            "fedpt_up_mb": self.upload_fedpt / self.rounds / mb,
         }
 
     # estimated wall-clock on the measured cross-device links
-    # (download 0.75 MB/s, upload 0.25 MB/s; Wang et al. 2021b)
     def transfer_seconds(self, fedpt: bool = True) -> float:
         mb = 1024.0 * 1024.0
         down = (self.download_fedpt if fedpt else self.download_full) / mb
         up = (self.upload_fedpt if fedpt else self.upload_full) / mb
-        return down / 0.75 + up / 0.25
+        return down / DOWNLINK_MBPS + up / UPLINK_MBPS
+
+    # --- wire-level metering (filled in by repro/sim) -------------------
+    def add_measured(self, down_bytes: int, up_bytes: int,
+                     transfers: int = 1) -> None:
+        """Accumulate observed serialized payload sizes for `transfers`
+        client round-trips."""
+        self.measured_down_bytes += int(down_bytes)
+        self.measured_up_bytes += int(up_bytes)
+        self.transfers += int(transfers)
+
+    @property
+    def measured_total_bytes(self) -> int:
+        return self.measured_down_bytes + self.measured_up_bytes
 
 
-def report_for(trainable, frozen, rounds: int = 1) -> CommReport:
+def report_for(trainable, frozen, rounds: int = 1,
+               uplink_bits: int = 0) -> CommReport:
     by = basic.tree_bytes(trainable)
     bz = basic.tree_bytes(frozen)
-    return CommReport(full_bytes=by + bz, trainable_bytes=by, rounds=rounds)
+    qb = (compress.quantized_uplink_bytes(trainable, uplink_bits)
+          if uplink_bits else 0)
+    return CommReport(full_bytes=by + bz, trainable_bytes=by, rounds=rounds,
+                      uplink_bits=uplink_bits, quantized_trainable_bytes=qb)

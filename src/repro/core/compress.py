@@ -18,6 +18,10 @@ import jax.numpy as jnp
 
 from repro.nn import basic
 
+# every quantized leaf ships one float32 scale on the wire
+# (sim/wire.py serializes it; quantized_uplink_bytes bills it)
+SCALE_BYTES = 4
+
 
 def quantize_leaf(x, bits: int = 8) -> Tuple[jnp.ndarray, jnp.ndarray]:
     qmax = 2.0 ** (bits - 1) - 1
@@ -51,7 +55,8 @@ def fake_quantize_tree(tree, bits: int = 8):
 
 
 def quantized_uplink_bytes(tree, bits: int = 8) -> int:
-    """int8 payload + one f32 scale per leaf."""
+    """int-k payload + one f32 scale per leaf — the exact size
+    sim/wire.py serializes for bits=8."""
     n = basic.tree_size(tree)
     n_leaves = len(jax.tree_util.tree_leaves(tree))
-    return n * bits // 8 + 4 * n_leaves
+    return n * bits // 8 + SCALE_BYTES * n_leaves

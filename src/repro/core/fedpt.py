@@ -84,6 +84,14 @@ def clip_delta(delta, clip_norm: float):
     return jax.tree_util.tree_map(lambda d: d * scale.astype(d.dtype), delta), nrm
 
 
+def resolve_server_opt(rc: RoundConfig) -> opt_lib.Optimizer:
+    """The ServerOpt a RoundConfig names (shared by the sync round engine
+    and the async grid, so the two can't drift)."""
+    if rc.server_opt == "sgdm":
+        return opt_lib.sgdm(rc.server_lr, rc.server_momentum)
+    return opt_lib.get_optimizer(rc.server_opt, rc.server_lr)
+
+
 def make_round_fn(loss_fn: Callable, rc: RoundConfig,
                   server_opt: Optional[opt_lib.Optimizer] = None,
                   donate: bool = True, constrain_fn: Optional[Callable] = None):
@@ -98,10 +106,7 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
     """
     client_opt = opt_lib.get_optimizer(rc.client_opt, rc.client_lr)
     if server_opt is None:
-        if rc.server_opt == "sgdm":
-            server_opt = opt_lib.sgdm(rc.server_lr, rc.server_momentum)
-        else:
-            server_opt = opt_lib.get_optimizer(rc.server_opt, rc.server_lr)
+        server_opt = resolve_server_opt(rc)
     client_update = make_client_update(loss_fn, client_opt, rc.local_steps)
 
     def round_step(y, server_state, frozen, batch, weights, rng):
@@ -134,10 +139,19 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
 
         # --- aggregation: weighted mean over clients --------------------
         if rc.uniform_weights or rc.dp_clip_norm > 0:
-            w = jnp.ones_like(weights)
+            # uniform among *participants*: zero weights mark clients the
+            # grid scheduler dropped (stragglers / mid-round dropouts) and
+            # must stay excluded even under DP's fixed weighting
+            w = (weights > 0).astype(weights.dtype)
         else:
             w = weights
-        wsum = jnp.maximum(jnp.sum(w), 1e-12)
+        if rc.dp_clip_norm > 0:
+            # fixed denominator: the Gaussian sigma below is calibrated to
+            # sensitivity C/clients_per_round, so dropped (zero-weight)
+            # participants must shrink the numerator, not the denominator
+            wsum = jnp.asarray(float(rc.clients_per_round), jnp.float32)
+        else:
+            wsum = jnp.maximum(jnp.sum(w), 1e-12)
         delta = jax.tree_util.tree_map(
             lambda d: jnp.tensordot(w.astype(jnp.float32),
                                     d.astype(jnp.float32), axes=1) / wsum,
@@ -164,6 +178,94 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
         return y_new, server_state, out_metrics
 
     return round_step, server_opt
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous (buffered) aggregation hooks — used by repro/sim/scheduler.py.
+#
+# FedBuff-style servers weight each buffered client delta by a function of
+# its *staleness* s = (server version now) - (server version the client
+# downloaded). The weighting is pluggable; the named defaults follow
+# Nguyen et al. 2022 (polynomial, a=0.5) and Xie et al. 2019 (hinge).
+
+
+def staleness_constant():
+    """No down-weighting (plain buffered FedAvg)."""
+    return lambda s: 1.0
+
+
+def staleness_polynomial(power: float = 0.5):
+    """w(s) = (1+s)^-a; a=0.5 is FedBuff's 1/sqrt(1+s)."""
+    return lambda s: (1.0 + float(s)) ** (-power)
+
+
+def staleness_hinge(delay: float = 4.0, slope: float = 0.5):
+    """w(s) = 1 while s <= delay, then 1/(slope*(s-delay)+1)."""
+    def fn(s):
+        s = float(s)
+        return 1.0 if s <= delay else 1.0 / (slope * (s - delay) + 1.0)
+    return fn
+
+
+STALENESS_FNS = {
+    "constant": staleness_constant,
+    "polynomial": staleness_polynomial,
+    "hinge": staleness_hinge,
+}
+
+
+def get_staleness_fn(name="polynomial", **kw) -> Callable[[float], float]:
+    """Resolve a staleness weighting: a callable passes through, a name
+    looks up STALENESS_FNS (kw forwarded to the factory)."""
+    if callable(name):
+        return name
+    try:
+        return STALENESS_FNS[name](**kw)
+    except KeyError:
+        raise ValueError(f"unknown staleness_fn {name!r}; "
+                         f"options: {sorted(STALENESS_FNS)}") from None
+
+
+def make_client_step(loss_fn: Callable, rc: RoundConfig,
+                     client_opt: Optional[opt_lib.Optimizer] = None):
+    """Single-client step for the async grid: (y, frozen, client_batch) ->
+    (delta, metrics). Applies the same uplink quantization and DP clipping
+    as the synchronous round engine, in the same order."""
+    if client_opt is None:
+        client_opt = opt_lib.get_optimizer(rc.client_opt, rc.client_lr)
+    client_update = make_client_update(loss_fn, client_opt, rc.local_steps)
+
+    def client_step(y, frozen, client_batch):
+        delta, metrics = client_update(y, frozen, client_batch)
+        if rc.uplink_bits:
+            from repro.core import compress
+            delta = compress.fake_quantize_tree(delta, rc.uplink_bits)
+        if rc.dp_clip_norm > 0:
+            delta, nrm = clip_delta(delta, rc.dp_clip_norm)
+            metrics = dict(metrics, update_norm=nrm)
+        return delta, metrics
+
+    return client_step
+
+
+def make_buffered_apply(server_opt: opt_lib.Optimizer):
+    """Server-side flush of an async buffer: apply(y, server_state,
+    deltas, weights) with every `deltas` leaf stacked on axis 0 (K, ...)
+    and weights (K,) already including the staleness factor (w_i =
+    staleness_fn(s_i) * p_i). Weighted-mean then ServerOpt on the
+    pseudo-gradient, mirroring the sync engine's aggregation."""
+
+    def apply_fn(y, server_state, deltas, weights):
+        wsum = jnp.maximum(jnp.sum(weights), 1e-12)
+        delta = jax.tree_util.tree_map(
+            lambda d: jnp.tensordot(weights.astype(jnp.float32),
+                                    d.astype(jnp.float32), axes=1) / wsum,
+            deltas)
+        neg = jax.tree_util.tree_map(lambda d: -d, delta)
+        y_new, server_state = server_opt.update(y, neg, server_state)
+        return y_new, server_state, {"delta_norm": opt_lib.tree_global_norm(delta)}
+
+    return apply_fn
 
 
 def make_eval_fn(loss_fn: Callable):

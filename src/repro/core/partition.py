@@ -57,17 +57,19 @@ def trainable_fraction(params, freeze_spec) -> float:
 
 def summarize(params, freeze_spec) -> Dict[str, float]:
     """The paper's Table-1/2/3 row for an arbitrary model + freeze spec."""
+    from repro.core import comm
     y, z = partition(params, freeze_spec)
     ny, nz = basic.tree_size(y), basic.tree_size(z)
-    by, bz = basic.tree_bytes(y), basic.tree_bytes(z)
+    rep = comm.report_for(y, z)
     total = ny + nz
     return {
         "total_params": total,
         "trainable_params": ny,
         "frozen_params": nz,
         "trainable_pct": 100.0 * ny / total,
-        # download (y + 8-byte seed) + upload (delta y), vs 2x full model
-        "comm_reduction": (by + bz) * 2.0 / (2.0 * by + 8.0),
-        "trainable_bytes": by,
-        "frozen_bytes": bz,
+        # download (y + seed) + upload (delta y), vs 2x full model — the
+        # single source of truth for this formula is comm.CommReport
+        "comm_reduction": rep.reduction,
+        "trainable_bytes": rep.trainable_bytes,
+        "frozen_bytes": rep.full_bytes - rep.trainable_bytes,
     }

@@ -1,20 +1,22 @@
 """Federated runtime: the server training loop driving the jitted round
 engine over a federated dataset — the piece that examples/ and
 benchmarks/ call.
+
+``run_federated`` is the homogeneous-synchronous special case of the
+simulation grid (``repro/sim/grid.py``): a uniform always-available
+fleet, no straggler deadline, no over-selection. Heterogeneous fleets,
+straggler handling and buffered async aggregation are reached by passing
+a ``sim.GridConfig`` to ``sim.grid.run_grid`` directly.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-import repro.core.partition as part
-from repro.core import fedpt, comm
-from repro.data import synthetic as syn
+from repro.core import comm, fedpt
+from repro.sim import grid as simgrid
 
 
 @dataclasses.dataclass
@@ -33,43 +35,21 @@ def run_federated(init_fn: Callable[[int], Any], loss_fn: Callable,
                   eval_fn: Optional[Callable[[Any], Dict[str, float]]] = None,
                   server_opt=None, log: bool = False) -> TrainResult:
     """Generic FedPT training driver (freeze_spec=() == fully trainable
-    FedAvg — the paper's baseline)."""
-    y, frozen = part.partition(init_fn(seed), freeze_spec)
-    round_fn, sopt = fedpt.make_round_fn(loss_fn, rc, server_opt=server_opt)
-    round_fn = jax.jit(round_fn, donate_argnums=(0, 1))
-    sstate = sopt.init(y)
-    rng = np.random.default_rng(seed + 77)
-    history: List[Dict[str, float]] = []
-    t0 = None
-    for r in range(rounds):
-        cids = syn.sample_cohort(rng, dataset_num_clients(dataset),
-                                 rc.clients_per_round)
-        batch, w = syn.cohort_batch(dataset, cids, rc.local_steps,
-                                    rc.local_batch, rng, kind=data_kind)
-        y, sstate, m = round_fn(y, sstate, frozen, batch, jnp.asarray(w),
-                                jax.random.key(seed * 100_003 + r))
-        if r == 0:
-            jax.block_until_ready(y)
-            t0 = time.time()  # exclude compile from the per-round timing
-        rec = {"round": r, "loss": float(m["loss"])}
-        if eval_fn and eval_every and (r + 1) % eval_every == 0:
-            full = part.merge(y, frozen)
-            rec.update(eval_fn(full))
-        history.append(rec)
-        if log and (r % max(1, rounds // 10) == 0):
-            print(f"  round {r}: " + " ".join(
-                f"{k}={v:.4f}" for k, v in rec.items() if k != "round"))
-    jax.block_until_ready(y)
-    spr = (time.time() - t0) / max(rounds - 1, 1) if t0 else float("nan")
-    return TrainResult(y=y, frozen=frozen, history=history,
-                       comm=comm.report_for(y, frozen),
-                       seconds_per_round=spr)
+    FedAvg — the paper's baseline). Delegates to the simulation grid in
+    its homogeneous-synchronous configuration, which reproduces the
+    original inline loop bit-for-bit (same RNG streams)."""
+    res = simgrid.run_grid(init_fn, loss_fn, dataset, rc, rounds,
+                           grid=simgrid.GridConfig(mode="sync",
+                                                   fleet="uniform"),
+                           freeze_spec=freeze_spec, seed=seed,
+                           data_kind=data_kind, eval_every=eval_every,
+                           eval_fn=eval_fn, server_opt=server_opt, log=log)
+    return TrainResult(y=res.y, frozen=res.frozen, history=res.history,
+                       comm=res.comm, seconds_per_round=res.seconds_per_round)
 
 
 def dataset_num_clients(ds) -> int:
-    if hasattr(ds, "num_clients"):
-        return ds.num_clients
-    return len(ds.client_tokens)
+    return simgrid.num_clients(ds)
 
 
 def accuracy_eval(forward_fn, images, labels, batch: int = 256):

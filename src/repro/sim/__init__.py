@@ -1,0 +1,13 @@
+"""Federated simulation grid: heterogeneity-aware client populations,
+an event-driven virtual-clock scheduler (synchronous cohorts with
+straggler deadlines / over-selection, and FedBuff-style buffered async
+aggregation), and wire-level communication metering.
+
+``fl.runtime.run_federated`` is the homogeneous-synchronous special case
+of ``sim.grid.run_grid``.
+"""
+from repro.sim.devices import DeviceProfile, Fleet, make_fleet, FLEET_PRESETS
+from repro.sim.grid import GridConfig, GridResult, run_grid
+from repro.sim.scheduler import (EventQueue, SyncRoundPlan, plan_sync_round,
+                                 BufferedAsyncScheduler)
+from repro.sim import wire

@@ -1,0 +1,136 @@
+"""Client population model for the simulation grid.
+
+Each client gets a :class:`DeviceProfile` — link bandwidths, a compute
+multiplier (how much slower than the reference device its local steps
+run), an availability probability (is it online when the server samples
+it) and a mid-round dropout probability. Profiles are sampled from named
+**fleet presets**:
+
+``uniform``
+    Every client identical, on the paper's measured cross-device links
+    (download 0.75 MB/s, upload 0.25 MB/s; Wang et al. 2021b), always
+    available, never dropping. The grid in this fleet + sync mode
+    reproduces ``fl.runtime.run_federated`` bit-for-bit.
+
+``pareto-mobile``
+    Cross-device phones: heavy-tailed (Pareto) link speeds below the
+    reference links, log-normal compute multipliers, 80% availability,
+    10% mid-round dropout — the regime where straggler deadlines,
+    over-selection and buffered async aggregation matter.
+
+``cross-silo``
+    A handful of datacenter silos: ~1 Gb/s symmetric links, near-uniform
+    compute, always available.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Union
+
+import numpy as np
+
+from repro.core import comm
+
+MB = 1024.0 * 1024.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    downlink_bps: float          # bytes/second the server->client link moves
+    uplink_bps: float            # bytes/second client->server
+    compute_multiplier: float    # local-step time multiplier (1.0 = reference)
+    availability: float = 1.0    # P(online when sampled)
+    dropout: float = 0.0         # P(drops mid-round after being dispatched)
+
+    def round_trip_seconds(self, down_bytes: int, up_bytes: int,
+                           compute_seconds: float) -> float:
+        """Virtual time for one full client round trip: download the
+        trainable payload, run local steps, upload the delta."""
+        return (down_bytes / self.downlink_bps
+                + compute_seconds * self.compute_multiplier
+                + up_bytes / self.uplink_bps)
+
+
+@dataclasses.dataclass
+class Fleet:
+    name: str
+    profiles: List[DeviceProfile]
+
+    def __len__(self) -> int:
+        return len(self.profiles)
+
+    def profile(self, cid: int) -> DeviceProfile:
+        return self.profiles[int(cid)]
+
+    def round_trip_seconds(self, cid: int, down_bytes: int, up_bytes: int,
+                           compute_seconds: float) -> float:
+        return self.profile(cid).round_trip_seconds(down_bytes, up_bytes,
+                                                    compute_seconds)
+
+    def summary(self) -> Dict[str, float]:
+        dl = np.array([p.downlink_bps for p in self.profiles])
+        ul = np.array([p.uplink_bps for p in self.profiles])
+        cm = np.array([p.compute_multiplier for p in self.profiles])
+        return {
+            "clients": float(len(self.profiles)),
+            "downlink_mbps_median": float(np.median(dl)) / MB,
+            "uplink_mbps_median": float(np.median(ul)) / MB,
+            "compute_mult_p90": float(np.quantile(cm, 0.9)),
+            "availability_mean": float(np.mean(
+                [p.availability for p in self.profiles])),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Presets
+
+
+def _uniform(num_clients: int, rng: np.random.Generator) -> List[DeviceProfile]:
+    p = DeviceProfile(downlink_bps=comm.DOWNLINK_MBPS * MB,
+                      uplink_bps=comm.UPLINK_MBPS * MB,
+                      compute_multiplier=1.0)
+    return [p] * num_clients
+
+def _pareto_mobile(num_clients: int,
+                   rng: np.random.Generator) -> List[DeviceProfile]:
+    # Pareto(alpha) slowdown factors >= 1 -> bandwidths at or below the
+    # reference links, with a heavy tail of very slow phones.
+    slow_dl = 1.0 + rng.pareto(2.5, num_clients)
+    slow_ul = 1.0 + rng.pareto(2.5, num_clients)
+    cmult = np.clip(rng.lognormal(0.25, 0.5, num_clients), 0.5, 10.0)
+    return [DeviceProfile(downlink_bps=comm.DOWNLINK_MBPS * MB / slow_dl[i],
+                          uplink_bps=comm.UPLINK_MBPS * MB / slow_ul[i],
+                          compute_multiplier=float(cmult[i]),
+                          availability=0.8, dropout=0.1)
+            for i in range(num_clients)]
+
+def _cross_silo(num_clients: int,
+                rng: np.random.Generator) -> List[DeviceProfile]:
+    bw = 125.0 * MB  # ~1 Gb/s symmetric
+    cmult = rng.uniform(0.8, 1.2, num_clients)
+    return [DeviceProfile(downlink_bps=bw, uplink_bps=bw,
+                          compute_multiplier=float(cmult[i]))
+            for i in range(num_clients)]
+
+
+FLEET_PRESETS: Dict[str, Callable[[int, np.random.Generator],
+                                  List[DeviceProfile]]] = {
+    "uniform": _uniform,
+    "pareto-mobile": _pareto_mobile,
+    "cross-silo": _cross_silo,
+}
+
+
+def make_fleet(num_clients: int, preset: Union[str, Fleet] = "uniform",
+               seed: int = 0) -> Fleet:
+    """Sample a client population from a named preset (a Fleet instance
+    passes through unchanged)."""
+    if isinstance(preset, Fleet):
+        return preset
+    try:
+        builder = FLEET_PRESETS[preset]
+    except KeyError:
+        raise ValueError(f"unknown fleet preset {preset!r}; "
+                         f"options: {sorted(FLEET_PRESETS)}") from None
+    rng = np.random.default_rng(seed)
+    return Fleet(name=preset, profiles=builder(num_clients, rng))

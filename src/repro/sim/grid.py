@@ -1,0 +1,266 @@
+"""The simulation-grid driver.
+
+``run_grid`` trains a FedPT model over a heterogeneous client fleet under
+either scheduling regime and reports *measured* wire bytes plus simulated
+cross-device wall-clock. ``fl.runtime.run_federated`` delegates here with
+``GridConfig()`` defaults (uniform fleet, synchronous, no deadline) and is
+reproduced **bit-for-bit**: the grid consumes the data-sampling RNG stream
+(``seed + 77``) and the per-round DP keys (``seed*100_003 + r``) in
+exactly the same order, and routes all device/availability randomness
+through a separate stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.partition as part
+from repro.core import comm, fedpt
+from repro.data import synthetic as syn
+from repro.sim import devices as dev_lib
+from repro.sim import scheduler as sched_lib
+from repro.sim import wire
+
+
+@dataclasses.dataclass
+class GridConfig:
+    mode: str = "sync"                      # "sync" | "async"
+    fleet: Union[str, dev_lib.Fleet] = "uniform"
+    # virtual seconds one local step takes on the reference device; each
+    # client scales it by its profile's compute_multiplier
+    base_step_time: float = 0.01
+    # --- sync knobs ---
+    over_selection: float = 1.0             # dispatch ceil(f*C), keep first C
+    straggler_deadline: float = math.inf    # virtual seconds per round
+    # --- async (FedBuff) knobs ---
+    concurrency: int = 10                   # clients kept in flight
+    goal_count: int = 5                     # buffer size K per server update
+    staleness: Any = "polynomial"           # name or callable (core.fedpt)
+    staleness_kw: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # --- rng plumbing ---
+    fleet_seed: int = 0                     # profile sampling
+    device_seed: int = 13                   # availability/dropout/latency
+
+
+@dataclasses.dataclass
+class GridResult:
+    y: Any
+    frozen: Any
+    history: List[Dict[str, float]]
+    comm: comm.CommReport
+    seconds_per_round: float                # real wall-clock
+    virtual_seconds: float                  # simulated cross-device time
+    fleet: dev_lib.Fleet
+    mode: str
+    scheduler_stats: Dict[str, int]
+
+
+def num_clients(ds) -> int:
+    if hasattr(ds, "num_clients"):
+        return ds.num_clients
+    return len(ds.client_tokens)
+
+
+def _uplink_bytes(tree, bits: int) -> int:
+    """Measured (serialized) uplink size when the wire format supports
+    the payload (fp32 / int8); analytic int-k estimate otherwise, so
+    sub-byte quantization configs keep running."""
+    if bits in (0, 8):
+        return wire.uplink_bytes(tree, bits=bits)
+    from repro.core import compress
+    return compress.quantized_uplink_bytes(tree, bits)
+
+
+def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
+             rc: fedpt.RoundConfig, rounds: int,
+             grid: Optional[GridConfig] = None, freeze_spec=(),
+             seed: int = 0, data_kind: str = "images", eval_every: int = 0,
+             eval_fn: Optional[Callable[[Any], Dict[str, float]]] = None,
+             server_opt=None, log: bool = False) -> GridResult:
+    """Train for `rounds` server updates on the simulated fleet. In sync
+    mode a "round" is one cohort; in async mode it is one buffered server
+    update (goal_count client deltas)."""
+    grid = grid or GridConfig()
+    N = num_clients(dataset)
+    if rc.clients_per_round > N:
+        raise ValueError(f"clients_per_round={rc.clients_per_round} exceeds "
+                         f"the dataset's {N} clients")
+    fleet = dev_lib.make_fleet(N, grid.fleet, seed=grid.fleet_seed)
+    y, frozen = part.partition(init_fn(seed), freeze_spec)
+
+    report = comm.report_for(y, frozen, uplink_bits=rc.uplink_bits)
+    down_bytes = wire.downlink_bytes(y)          # y + 8-byte seed, measured
+    up_bytes = _uplink_bytes(y, rc.uplink_bits)  # shape-determined
+    compute_seconds = rc.local_steps * grid.base_step_time
+
+    data_rng = np.random.default_rng(seed + 77)  # == run_federated's stream
+    dev_rng = np.random.default_rng([seed, grid.device_seed])
+
+    common = dict(fleet=fleet, report=report, down_bytes=down_bytes,
+                  up_bytes=up_bytes, compute_seconds=compute_seconds,
+                  data_rng=data_rng, dev_rng=dev_rng, seed=seed,
+                  data_kind=data_kind, eval_every=eval_every,
+                  eval_fn=eval_fn, log=log)
+    if grid.mode == "sync":
+        return _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid,
+                         server_opt, **common)
+    if grid.mode == "async":
+        return _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid,
+                          server_opt, **common)
+    raise ValueError(f"unknown grid mode {grid.mode!r} "
+                     "(expected 'sync' or 'async')")
+
+
+# ---------------------------------------------------------------------------
+# Synchronous cohorts
+
+
+def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
+              fleet, report, down_bytes, up_bytes, compute_seconds,
+              data_rng, dev_rng, seed, data_kind, eval_every, eval_fn, log):
+    round_fn, sopt = fedpt.make_round_fn(loss_fn, rc, server_opt=server_opt)
+    round_fn = jax.jit(round_fn, donate_argnums=(0, 1))
+    sstate = sopt.init(y)
+    N = num_clients(dataset)
+    C = rc.clients_per_round
+    m = min(N, max(C, int(math.ceil(C * grid.over_selection))))
+
+    history: List[Dict[str, float]] = []
+    stats = {"dispatches": 0, "uploads": 0, "offline": 0, "dropouts": 0,
+             "deadline_drops": 0, "excess": 0}
+    vt = 0.0
+    t0 = None
+    for r in range(rounds):
+        cids = syn.sample_cohort(data_rng, N, m)
+        plan = sched_lib.plan_sync_round(
+            fleet, cids, down_bytes, up_bytes, compute_seconds, C, dev_rng,
+            deadline=grid.straggler_deadline)
+        # the C slots the compiled round engine sees: participants in
+        # arrival order, padded (weight 0) with the remaining cohort in
+        # dispatch order when drops leave the round short
+        kept_cids = plan.participant_cids()
+        pad = plan.cids[~plan.participant][:C - len(kept_cids)]
+        sel = np.concatenate([kept_cids, pad]).astype(np.int64)
+        kept = np.arange(C) < len(kept_cids)
+
+        batch, w = syn.cohort_batch(dataset, sel, rc.local_steps,
+                                    rc.local_batch, data_rng, kind=data_kind)
+        w = np.where(kept, w, 0.0).astype(np.float32)
+        y, sstate, metrics = round_fn(y, sstate, frozen, batch,
+                                      jnp.asarray(w),
+                                      jax.random.key(seed * 100_003 + r))
+        if r == 0:
+            jax.block_until_ready(y)
+            t0 = time.time()  # exclude compile from the per-round timing
+
+        vt += plan.round_seconds
+        n_dispatched = int(np.sum(plan.dispatched))
+        n_uploads = n_dispatched - plan.dropouts
+        report.add_measured(down_bytes * n_dispatched, up_bytes * n_uploads,
+                            transfers=n_dispatched)
+        stats["dispatches"] += n_dispatched
+        stats["uploads"] += n_uploads
+        stats["offline"] += plan.offline
+        stats["dropouts"] += plan.dropouts
+        stats["deadline_drops"] += plan.deadline_drops
+        stats["excess"] += plan.excess
+
+        rec = {"round": r, "loss": float(metrics["loss"])}
+        if eval_fn and eval_every and (r + 1) % eval_every == 0:
+            rec.update(eval_fn(part.merge(y, frozen)))
+        rec["virtual_seconds"] = vt
+        rec["participants"] = float(len(kept_cids))
+        history.append(rec)
+        if log and (r % max(1, rounds // 10) == 0):
+            print(f"  round {r}: " + " ".join(
+                f"{k}={v:.4f}" for k, v in rec.items() if k != "round"))
+    jax.block_until_ready(y)
+    spr = (time.time() - t0) / max(rounds - 1, 1) if t0 else float("nan")
+    return GridResult(y=y, frozen=frozen, history=history, comm=report,
+                      seconds_per_round=spr, virtual_seconds=vt,
+                      fleet=fleet, mode="sync", scheduler_stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Buffered async (FedBuff)
+
+
+def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
+               fleet, report, down_bytes, up_bytes, compute_seconds,
+               data_rng, dev_rng, seed, data_kind, eval_every, eval_fn, log):
+    if rc.dp_noise_multiplier > 0:
+        raise NotImplementedError(
+            "DP noise is not implemented for the async grid: buffered "
+            "aggregation needs its own noise calibration (per-flush, fixed "
+            "goal_count denominator). Use mode='sync' for DP runs.")
+    if server_opt is None:
+        server_opt = fedpt.resolve_server_opt(rc)
+    client_step = jax.jit(fedpt.make_client_step(loss_fn, rc))
+    apply_fn = jax.jit(fedpt.make_buffered_apply(server_opt),
+                       donate_argnums=(0, 1))
+    staleness_fn = fedpt.get_staleness_fn(grid.staleness, **grid.staleness_kw)
+    N = num_clients(dataset)
+    batch_fn = (syn.client_batch_images if data_kind == "images"
+                else syn.client_batch_tokens)
+
+    # mutable server state shared with the scheduler callbacks; events are
+    # processed in virtual-time order, so "the model right now" is exactly
+    # what a client dispatched at the current event time downloads
+    state = {"y": y, "sstate": server_opt.init(y), "applied": 0}
+
+    def sample_cid(rng):
+        return int(rng.integers(0, N))
+
+    def run_client(cid, version):
+        b, w = batch_fn(dataset, cid, rc.local_steps, rc.local_batch,
+                        data_rng)
+        delta, metrics = client_step(state["y"], frozen, b)
+        if rc.uniform_weights or rc.dp_clip_norm > 0:
+            w = 1.0  # DP / uniform weighting, as in the sync engine
+        # payload size is shape-determined: reuse the once-measured value
+        # instead of serializing every delta just to count its bytes
+        return {"delta": delta, "weight": w,
+                "loss": float(metrics["client_loss"]), "up_bytes": up_bytes}
+
+    def apply_update(entries, now, version):
+        deltas = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls),
+                                        *[e.delta for e in entries])
+        wts = jnp.asarray([e.weight for e in entries], jnp.float32)
+        y_new, ss, m = apply_fn(state["y"], state["sstate"], deltas, wts)
+        state["y"], state["sstate"] = y_new, ss
+        out = {"delta_norm": float(m["delta_norm"])}
+        state["applied"] += 1
+        if eval_fn and eval_every and state["applied"] % eval_every == 0:
+            out.update(eval_fn(part.merge(y_new, frozen)))
+        return out
+
+    sched = sched_lib.BufferedAsyncScheduler(
+        fleet=fleet, concurrency=min(grid.concurrency, N),
+        goal_count=grid.goal_count, staleness_fn=staleness_fn,
+        sample_cid=sample_cid, run_client=run_client,
+        apply_update=apply_update, down_bytes=down_bytes,
+        compute_seconds=compute_seconds, rng=dev_rng)
+    t_wall = time.time()
+    history = sched.run(rounds)
+    spr = (time.time() - t_wall) / max(rounds, 1)
+    if log:
+        for rec in history[:: max(1, rounds // 10)]:
+            print(f"  update {rec['round']}: " + " ".join(
+                f"{k}={v:.4f}" for k, v in rec.items() if k != "round"))
+
+    report.add_measured(down_bytes * sched.dispatches, sched.up_bytes_total,
+                        transfers=sched.dispatches)
+    stats = {"dispatches": sched.dispatches, "uploads": sched.completions,
+             "offline": 0, "dropouts": sched.dropouts,
+             "deadline_drops": 0}
+    vt = history[-1]["virtual_seconds"] if history else 0.0
+    return GridResult(y=state["y"], frozen=frozen, history=history,
+                      comm=report, seconds_per_round=spr,
+                      virtual_seconds=vt, fleet=fleet, mode="async",
+                      scheduler_stats=stats)

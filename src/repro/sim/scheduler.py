@@ -1,0 +1,263 @@
+"""Event-driven virtual-clock scheduler for the simulation grid.
+
+Two scheduling regimes over a heterogeneous :class:`~repro.sim.devices.Fleet`:
+
+* **Synchronous cohorts** (:func:`plan_sync_round`): the server dispatches
+  an (optionally over-selected) cohort, waits for the first
+  ``clients_needed`` arrivals, and drops stragglers that miss the round
+  deadline. Offline clients (availability draw) never start; dispatched
+  clients may drop out mid-round (they consume downlink but never upload).
+
+* **Buffered asynchronous** (:class:`BufferedAsyncScheduler`): FedBuff-style.
+  The server keeps ``concurrency`` clients in flight; each completion
+  lands in a buffer with its staleness (server version now minus version
+  it trained on); once ``goal_count`` deltas are buffered the server
+  applies one update and bumps its version. Staleness down-weighting is
+  pluggable via ``core.fedpt.get_staleness_fn``.
+
+All time is *virtual* seconds derived from device profiles and measured
+wire bytes — the simulation runs as fast as the hardware allows while
+reporting cross-device wall-clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.sim import devices as dev_lib
+
+
+@dataclasses.dataclass(order=True)
+class Event:
+    time: float
+    seq: int
+    kind: str = dataclasses.field(compare=False)
+    payload: Dict[str, Any] = dataclasses.field(compare=False,
+                                                default_factory=dict)
+
+
+class EventQueue:
+    """Min-heap of events keyed by (virtual time, insertion order) — ties
+    resolve in dispatch order, which is what makes the homogeneous sync
+    fleet reproduce the plain cohort ordering exactly."""
+
+    def __init__(self):
+        self._heap: List[Event] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+
+    def push(self, time: float, kind: str, **payload) -> Event:
+        ev = Event(time=float(time), seq=next(self._seq), kind=kind,
+                   payload=payload)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Event:
+        ev = heapq.heappop(self._heap)
+        self.now = ev.time
+        return ev
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+# ---------------------------------------------------------------------------
+# Synchronous cohorts
+
+
+@dataclasses.dataclass
+class SyncRoundPlan:
+    cids: np.ndarray              # over-selected cohort, dispatch order
+    dispatched: np.ndarray        # bool: passed the availability draw
+    completed: np.ndarray         # bool: uploaded before the deadline
+    participant: np.ndarray       # bool: among the first clients_needed arrivals
+    arrival: np.ndarray           # float: upload-complete time (inf if never)
+    round_seconds: float          # when the server closed the round
+    offline: int                  # failed availability draw
+    dropouts: int                 # dropped mid-round after dispatch
+    deadline_drops: int           # upload arrives past the deadline
+    excess: int                   # on time, but the quota was already filled
+
+    def participant_cids(self) -> np.ndarray:
+        """Participants in arrival order (dispatch order on ties)."""
+        order = np.lexsort((np.arange(len(self.cids)), self.arrival))
+        return self.cids[order[self.participant[order]]]
+
+
+def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
+                    down_bytes: int, up_bytes: int, compute_seconds: float,
+                    clients_needed: int, rng: np.random.Generator,
+                    deadline: float = math.inf) -> SyncRoundPlan:
+    """Simulate one synchronous round over the cohort `cids` (possibly
+    over-selected: len(cids) >= clients_needed) and decide who counts."""
+    cids = np.asarray(cids, np.int64)
+    m = len(cids)
+    # fixed-count rng draws so the stream is deterministic regardless of
+    # outcomes (and entirely separate from the data-sampling stream)
+    avail_u = rng.random(m)
+    drop_u = rng.random(m)
+
+    q = EventQueue()
+    dispatched = np.zeros(m, bool)
+    will_complete = np.zeros(m, bool)
+    arrival = np.full(m, math.inf)
+    for i, cid in enumerate(cids):
+        p = fleet.profile(cid)
+        if avail_u[i] >= p.availability:
+            continue                      # offline: never dispatched
+        dispatched[i] = True
+        if drop_u[i] < p.dropout:
+            # mid-round dropout: consumed the downlink + some compute but
+            # never uploads; the server just never hears back
+            continue
+        will_complete[i] = True
+        t = p.round_trip_seconds(down_bytes, up_bytes, compute_seconds)
+        arrival[i] = t
+        q.push(t, "complete", idx=i)
+
+    participant = np.zeros(m, bool)
+    taken = 0
+    round_seconds = 0.0
+    while len(q) and taken < clients_needed:
+        ev = q.pop()
+        if ev.time > deadline:
+            break                          # everyone later is also late
+        participant[ev.payload["idx"]] = True
+        taken += 1
+        round_seconds = ev.time
+    if taken < clients_needed and math.isfinite(deadline):
+        round_seconds = deadline           # server waited the round out
+    completed = will_complete & (arrival <= deadline)
+    return SyncRoundPlan(
+        cids=cids, dispatched=dispatched, completed=completed,
+        participant=participant, arrival=arrival,
+        round_seconds=float(round_seconds),
+        offline=int(np.sum(~dispatched)),
+        dropouts=int(np.sum(dispatched & ~will_complete)),
+        deadline_drops=int(np.sum(will_complete & (arrival > deadline))),
+        excess=int(np.sum(completed & ~participant)))
+
+
+# ---------------------------------------------------------------------------
+# Buffered asynchronous aggregation (FedBuff)
+
+
+@dataclasses.dataclass
+class BufferEntry:
+    delta: Any                    # client delta pytree (opaque here)
+    weight: float                 # staleness_fn(s) * p_i
+    staleness: int
+    loss: float
+
+
+class BufferedAsyncScheduler:
+    """Drives the async grid. The caller provides three closures so the
+    scheduler stays free of JAX and dataset specifics:
+
+    ``sample_cid(rng) -> int``
+        propose a client to dispatch (the scheduler redraws on failed
+        availability checks);
+    ``run_client(cid, version) -> dict``
+        run local training against the *current* server model (correct
+        because events are processed in virtual-time order, so the model
+        at dispatch time is the model the client downloads); must return
+        ``{"delta", "weight", "loss", "up_bytes"}``;
+    ``apply_update(entries, now, version) -> dict``
+        flush the buffer into one server update and return metrics.
+
+    ``down_bytes`` and ``compute_seconds`` are constants of the round
+    configuration (payload sizes are shape-determined).
+    """
+
+    def __init__(self, fleet: dev_lib.Fleet, concurrency: int,
+                 goal_count: int, staleness_fn: Callable[[float], float],
+                 sample_cid: Callable, run_client: Callable,
+                 apply_update: Callable, down_bytes: int,
+                 compute_seconds: float, rng: np.random.Generator):
+        if goal_count < 1:
+            raise ValueError("goal_count must be >= 1")
+        self.fleet = fleet
+        self.concurrency = max(1, int(concurrency))
+        self.goal_count = int(goal_count)
+        self.staleness_fn = staleness_fn
+        self.sample_cid = sample_cid
+        self.run_client = run_client
+        self.apply_update = apply_update
+        self.down_bytes = int(down_bytes)
+        self.compute_seconds = float(compute_seconds)
+        self.rng = rng
+        # counters (read by the grid for the comm ledger)
+        self.dispatches = 0
+        self.dropouts = 0
+        self.completions = 0
+        self.up_bytes_total = 0
+        self.version = 0
+
+    def _dispatch(self, q: EventQueue, now: float) -> None:
+        # redraw until the availability check passes (bounded, so a fleet
+        # of mostly-offline phones can't spin forever)
+        for _ in range(1000):
+            cid = int(self.sample_cid(self.rng))
+            p = self.fleet.profile(cid)
+            if self.rng.random() < p.availability:
+                break
+        else:
+            raise RuntimeError("no available client after 1000 draws")
+        self.dispatches += 1
+        if self.rng.random() < p.dropout:
+            # dies after download + local work, before upload
+            t = now + (self.down_bytes / p.downlink_bps
+                       + self.compute_seconds * p.compute_multiplier)
+            q.push(t, "failed", cid=cid)
+            return
+        work = self.run_client(cid, self.version)
+        t = now + p.round_trip_seconds(self.down_bytes,
+                                       int(work["up_bytes"]),
+                                       self.compute_seconds)
+        q.push(t, "complete", cid=cid, version=self.version, work=work)
+
+    def run(self, num_updates: int) -> List[Dict[str, float]]:
+        """Run until `num_updates` server updates have been applied.
+        Returns one record per update (virtual time, staleness stats,
+        buffer losses, plus whatever apply_update reports)."""
+        q = EventQueue()
+        buffer: List[BufferEntry] = []
+        records: List[Dict[str, float]] = []
+        for _ in range(self.concurrency):
+            self._dispatch(q, 0.0)
+        while len(records) < num_updates:
+            if not len(q):
+                raise RuntimeError("async scheduler starved: no in-flight "
+                                   "clients and buffer below goal_count")
+            ev = q.pop()
+            if ev.kind == "failed":
+                self.dropouts += 1
+                self._dispatch(q, ev.time)
+                continue
+            work = ev.payload["work"]
+            s = self.version - ev.payload["version"]
+            self.completions += 1
+            self.up_bytes_total += int(work["up_bytes"])
+            buffer.append(BufferEntry(
+                delta=work["delta"],
+                weight=float(self.staleness_fn(s)) * float(work["weight"]),
+                staleness=int(s), loss=float(work["loss"])))
+            if len(buffer) >= self.goal_count:
+                metrics = self.apply_update(buffer, ev.time, self.version)
+                stale = np.array([e.staleness for e in buffer], np.float64)
+                rec = {"round": len(records),
+                       "virtual_seconds": ev.time,
+                       "loss": float(np.mean([e.loss for e in buffer])),
+                       "staleness_mean": float(stale.mean()),
+                       "staleness_max": float(stale.max())}
+                rec.update(metrics or {})
+                records.append(rec)
+                self.version += 1
+                buffer = []
+            self._dispatch(q, ev.time)
+        return records

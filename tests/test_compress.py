@@ -1,0 +1,94 @@
+"""Uplink compression: quantization error bounds, payload accounting,
+structure preservation, and the comm-ledger integration (a quantized
+uplink must be billed at int8 bytes, not fp32)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm, compress
+from repro.nn import basic
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(0, 0.3, (3, 4)).astype(np.float32)),
+        "b": {"c": jnp.asarray(rng.normal(0, 2.0, (5,)).astype(np.float32))},
+    }
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_quantize_roundtrip_error_bound(bits):
+    """Symmetric nearest-rounding quantization: per-element error is at
+    most half a quantization step (scale/2)."""
+    x = jnp.asarray(np.random.default_rng(1).normal(0, 1.5, (64,))
+                    .astype(np.float32))
+    q, scale = compress.quantize_leaf(x, bits)
+    dq = compress.dequantize_leaf(q, scale)
+    step = float(scale)
+    assert float(jnp.max(jnp.abs(dq - x))) <= step / 2 + 1e-7
+    # more bits -> finer grid: the step shrinks by 2^(bits difference)
+    qmax = 2.0 ** (bits - 1) - 1
+    assert step == pytest.approx(float(jnp.max(jnp.abs(x))) / qmax, rel=1e-6)
+
+
+def test_more_bits_less_error():
+    x = jnp.asarray(np.random.default_rng(2).normal(0, 1, (256,))
+                    .astype(np.float32))
+    errs = []
+    for bits in (4, 8):
+        q, s = compress.quantize_leaf(x, bits)
+        errs.append(float(jnp.max(jnp.abs(compress.dequantize_leaf(q, s) - x))))
+    assert errs[1] < errs[0] / 8  # 4 extra bits -> 16x finer grid
+
+
+def test_quantized_uplink_bytes_accounting():
+    t = _tree()
+    n = basic.tree_size(t)            # 12 + 5 = 17 elements
+    n_leaves = len(jax.tree_util.tree_leaves(t))
+    assert n == 17 and n_leaves == 2
+    # int8: one byte per element + one f32 scale per leaf
+    assert compress.quantized_uplink_bytes(t, 8) == n + 4 * n_leaves
+    # int4 packs two elements per byte (floor, as bit-packing would)
+    assert compress.quantized_uplink_bytes(t, 4) == n * 4 // 8 + 4 * n_leaves
+
+
+def test_fake_quantize_preserves_dtypes_and_treedef():
+    t = _tree()
+    t["b"]["half"] = jnp.ones((2, 2), jnp.bfloat16) * 0.37
+    out = compress.fake_quantize_tree(t, 8)
+    assert (jax.tree_util.tree_structure(out)
+            == jax.tree_util.tree_structure(t))
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(out)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+    # and it is actually lossy-but-close
+    da = jax.tree_util.tree_leaves(t)[0] - jax.tree_util.tree_leaves(out)[0]
+    assert 0 < float(jnp.max(jnp.abs(da))) < 0.01
+
+
+def test_quantize_tree_structure():
+    t = _tree()
+    q, scales = compress.quantize_tree(t, 8)
+    dq = compress.dequantize_tree(q, scales)
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(dq)):
+        assert b.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0.02)
+
+
+def test_comm_report_uses_quantized_uplink_bytes():
+    """Satellite fix: with uplink_bits=8 the ledger bills the uplink at
+    int8 payload + scales — previously it overstated the cost 4x."""
+    y, z = _tree(3), {"frozen": jnp.zeros((100,), jnp.float32)}
+    fp32 = comm.report_for(y, z)
+    q8 = comm.report_for(y, z, uplink_bits=8)
+    assert fp32.upload_fedpt == basic.tree_bytes(y)
+    assert q8.upload_fedpt == compress.quantized_uplink_bytes(y, 8)
+    assert q8.upload_fedpt < fp32.upload_fedpt
+    # download is unchanged (quantization is uplink-only)
+    assert q8.download_fedpt == fp32.download_fedpt
+    assert q8.reduction > fp32.reduction
+    assert q8.uplink_reduction == pytest.approx(
+        q8.upload_full / q8.upload_fedpt)

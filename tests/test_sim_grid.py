@@ -1,0 +1,307 @@
+"""Simulation grid: bit-for-bit equivalence with the plain federated
+loop, byte-exact wire metering, straggler/dropout handling, and buffered
+async aggregation with staleness weighting."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.partition as part
+from repro.core import comm, fedpt
+from repro.data import synthetic as syn
+from repro.fl import runtime
+from repro.nn import basic
+from repro.sim import devices as dev_lib
+from repro.sim import grid as simgrid
+from repro.sim import scheduler as sched_lib
+from repro.sim import wire
+
+
+# ---------------------------------------------------------------------------
+# A tiny linear model so each test compiles in well under a second.
+
+
+def init_fn(seed):
+    return {"dense": basic.init_dense(seed, "dense", 64, 4, jnp.float32,
+                                      bias=True)}
+
+
+def loss_fn(params, b):
+    x = b["images"].reshape(b["images"].shape[0], -1)
+    logits = basic.dense(x, params["dense"])
+    lp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(lp, b["labels"][:, None], 1)), {}
+
+
+def make_ds(n_clients=12, seed=0):
+    return syn.make_federated_images(n_clients, 30, (8, 8, 1), 4, seed=seed,
+                                     test_examples=64)
+
+
+RC = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: homogeneous sync grid == the plain loop, bit for bit
+
+
+def test_sync_grid_reproduces_plain_loop_bit_for_bit():
+    ds = make_ds()
+    seed, rounds = 3, 5
+    # reference: the pre-grid run_federated loop, inlined
+    y, frozen = part.partition(init_fn(seed), ())
+    round_fn, sopt = fedpt.make_round_fn(loss_fn, RC)
+    round_fn = jax.jit(round_fn, donate_argnums=(0, 1))
+    ss = sopt.init(y)
+    rng = np.random.default_rng(seed + 77)
+    ref_losses = []
+    for r in range(rounds):
+        cids = syn.sample_cohort(rng, ds.num_clients, RC.clients_per_round)
+        batch, w = syn.cohort_batch(ds, cids, RC.local_steps, RC.local_batch,
+                                    rng)
+        y, ss, m = round_fn(y, ss, frozen, batch, jnp.asarray(w),
+                            jax.random.key(seed * 100_003 + r))
+        ref_losses.append(float(m["loss"]))
+
+    res = runtime.run_federated(init_fn, loss_fn, ds, RC, rounds, seed=seed)
+    assert [h["loss"] for h in res.history] == ref_losses
+    for (p1, l1), (p2, l2) in zip(basic.flatten_params(y),
+                                  basic.flatten_params(res.y)):
+        assert p1 == p2
+        assert bool(jnp.all(l1 == l2)), p1
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: measured wire bytes == analytic ledger (fp32 exactly)
+
+
+def test_wire_bytes_match_analytic():
+    y, frozen = part.partition(init_fn(0), (r"bias",))
+    wire.assert_matches_analytic(y, frozen, uplink_bits=0)
+    wire.assert_matches_analytic(y, frozen, uplink_bits=8)
+    rep = comm.report_for(y, frozen)
+    assert wire.downlink_bytes(y) == rep.download_fedpt \
+        == basic.tree_bytes(y) + comm.SEED_BYTES
+    assert wire.uplink_bytes(y) == rep.upload_fedpt == basic.tree_bytes(y)
+
+
+def test_wire_roundtrip():
+    y, _ = part.partition(init_fn(1), ())
+    spec = wire.TreeSpec.of(y)
+    buf = wire.encode_downlink(y, seed=42)
+    y2, seed = wire.decode_downlink(buf, spec)
+    assert seed == 42
+    for a, b in zip(jax.tree_util.tree_leaves(y),
+                    jax.tree_util.tree_leaves(y2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # fp32 uplink is lossless
+    delta = jax.tree_util.tree_map(lambda l: l * 0.1, y)
+    d2 = wire.decode_uplink(wire.encode_uplink(delta), spec)
+    for a, b in zip(jax.tree_util.tree_leaves(delta),
+                    jax.tree_util.tree_leaves(d2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # int8 uplink is lossy but within half a quantization step per leaf
+    buf8 = wire.encode_uplink(delta, bits=8)
+    from repro.core import compress
+    assert len(buf8) == compress.quantized_uplink_bytes(delta, 8)
+    d8 = wire.decode_uplink(buf8, spec, bits=8)
+    for a, b in zip(jax.tree_util.tree_leaves(delta),
+                    jax.tree_util.tree_leaves(d8)):
+        step = float(jnp.max(jnp.abs(a))) / 127.0
+        assert float(jnp.max(jnp.abs(a - b))) <= step / 2 + 1e-7
+
+
+def test_grid_meters_every_transfer():
+    ds = make_ds()
+    res = simgrid.run_grid(init_fn, loss_fn, ds, RC, 4, seed=0)
+    rep = comm.report_for(res.y, res.frozen)
+    n = res.comm.transfers
+    assert n == 4 * RC.clients_per_round
+    assert res.comm.measured_down_bytes == rep.download_fedpt * n
+    assert res.comm.measured_up_bytes == rep.upload_fedpt * n
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: straggler deadlines, over-selection, dropout
+
+
+def _fleet(mults, **kw):
+    mb = 1024.0 * 1024.0
+    return dev_lib.Fleet(name="test", profiles=[
+        dev_lib.DeviceProfile(downlink_bps=mb, uplink_bps=mb,
+                              compute_multiplier=m, **kw) for m in mults])
+
+
+def test_sync_plan_straggler_deadline_drop():
+    # compute_seconds=1.0, no wire bytes: finish times == multipliers
+    fleet = _fleet([1.0, 2.0, 3.0, 50.0])
+    plan = sched_lib.plan_sync_round(fleet, [0, 1, 2, 3], 0, 0, 1.0,
+                                     clients_needed=4,
+                                     rng=np.random.default_rng(0),
+                                     deadline=10.0)
+    assert plan.deadline_drops == 1
+    assert list(plan.participant) == [True, True, True, False]
+    assert plan.round_seconds == 10.0  # server waited the deadline out
+    np.testing.assert_array_equal(plan.participant_cids(), [0, 1, 2])
+
+
+def test_sync_plan_over_selection_takes_first_arrivals():
+    fleet = _fleet([5.0, 1.0, 3.0, 2.0])
+    plan = sched_lib.plan_sync_round(fleet, [0, 1, 2, 3], 0, 0, 1.0,
+                                     clients_needed=2,
+                                     rng=np.random.default_rng(0))
+    # fastest two finish at t=1 (cid 1) and t=2 (cid 3)
+    np.testing.assert_array_equal(plan.participant_cids(), [1, 3])
+    assert plan.round_seconds == 2.0
+    # over-selected losers arrived on time but past the quota: counted as
+    # excess, NOT as deadline drops (there is no deadline here)
+    assert plan.excess == 2 and plan.deadline_drops == 0
+
+
+def test_sync_plan_dropout_and_offline():
+    fleet = _fleet([1.0, 1.0, 1.0], dropout=1.0)     # everyone drops
+    plan = sched_lib.plan_sync_round(fleet, [0, 1, 2], 0, 0, 1.0, 3,
+                                     np.random.default_rng(0), deadline=5.0)
+    assert plan.dropouts == 3 and not plan.participant.any()
+    assert plan.round_seconds == 5.0
+    off = _fleet([1.0, 1.0], availability=0.0)       # everyone offline
+    plan = sched_lib.plan_sync_round(off, [0, 1], 0, 0, 1.0, 2,
+                                     np.random.default_rng(0), deadline=5.0)
+    assert plan.offline == 2 and plan.dropouts == 0
+
+
+def test_sync_grid_drops_straggler_weight():
+    """A client that can never finish by the deadline must not influence
+    the aggregate: its round-engine weight is zeroed."""
+    ds = make_ds(n_clients=4)
+    fleet = _fleet([1.0, 1.0, 1.0, 500.0])
+    rc = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0)
+    gc = simgrid.GridConfig(mode="sync", fleet=fleet, straggler_deadline=10.0,
+                            base_step_time=1.0)
+    res = simgrid.run_grid(init_fn, loss_fn, ds, rc, 3, grid=gc, seed=0)
+    assert res.scheduler_stats["deadline_drops"] == 3  # slow client, 3 rounds
+    assert all(h["participants"] == 3.0 for h in res.history)
+    assert res.virtual_seconds == pytest.approx(30.0)
+
+
+# ---------------------------------------------------------------------------
+# Buffered async scheduler (unit, no JAX)
+
+
+def test_async_goal_count_and_staleness_weighting():
+    # cid 0 finishes in 1s, cid 1 in 5.5s; no wire time
+    fleet = _fleet([1.0, 5.5])
+    samples = iter([0, 1] + [0] * 50)
+    applied = []
+
+    def run_client(cid, version):
+        return {"delta": cid, "weight": 1.0, "loss": 0.5, "up_bytes": 0}
+
+    def apply_update(entries, now, version):
+        applied.append((now, version, [(e.staleness, e.weight) for e in entries]))
+        return {}
+
+    sched = sched_lib.BufferedAsyncScheduler(
+        fleet=fleet, concurrency=2, goal_count=2,
+        staleness_fn=fedpt.get_staleness_fn("polynomial", power=0.5),
+        sample_cid=lambda rng: next(samples), run_client=run_client,
+        apply_update=apply_update, down_bytes=0, compute_seconds=1.0,
+        rng=np.random.default_rng(0))
+    records = sched.run(3)
+
+    assert len(records) == 3
+    assert all(len(entries) == 2 for _, _, entries in applied)  # goal count K
+    # updates 1 and 2 are pure fast-client buffers (staleness 0)
+    assert applied[0][2] == [(0, 1.0), (0, 1.0)]
+    assert applied[1][2] == [(0, 1.0), (0, 1.0)]
+    # the slow client dispatched at t=0 lands at t=5.5, after 2 server
+    # updates: staleness 2, weight (1+2)^-0.5
+    stale = dict(applied[2][2])
+    assert 2 in stale
+    assert stale[2] == pytest.approx((1.0 + 2.0) ** -0.5)
+    assert records[2]["staleness_max"] == 2.0
+    assert records[-1]["virtual_seconds"] >= records[0]["virtual_seconds"]
+
+
+def test_staleness_fns():
+    poly = fedpt.get_staleness_fn("polynomial", power=0.5)
+    assert poly(0) == 1.0 and poly(3) == pytest.approx(0.5)
+    const = fedpt.get_staleness_fn("constant")
+    assert const(100) == 1.0
+    hinge = fedpt.get_staleness_fn("hinge", delay=2.0, slope=1.0)
+    assert hinge(2) == 1.0 and hinge(4) == pytest.approx(1.0 / 3.0)
+    assert fedpt.get_staleness_fn(lambda s: 7.0)(1) == 7.0
+    with pytest.raises(ValueError):
+        fedpt.get_staleness_fn("nope")
+
+
+# ---------------------------------------------------------------------------
+# Async grid end-to-end (heterogeneous fleet + quantized uplink)
+
+
+def test_async_grid_end_to_end():
+    ds = make_ds(n_clients=20, seed=0)
+    rc = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0, uplink_bits=8)
+    gc = simgrid.GridConfig(mode="async", fleet="pareto-mobile",
+                            concurrency=6, goal_count=3,
+                            staleness="polynomial")
+    res = simgrid.run_grid(init_fn, loss_fn, ds, rc, 12, grid=gc, seed=1)
+    assert len(res.history) == 12
+    assert res.history[-1]["loss"] < res.history[0]["loss"]
+    assert res.virtual_seconds > 0
+    assert any(h["staleness_max"] > 0 for h in res.history)
+    # every upload was metered at the measured int8 payload size
+    per_up = wire.uplink_bytes(res.y, bits=8)
+    assert res.comm.measured_up_bytes == per_up * res.scheduler_stats["uploads"]
+    assert res.comm.measured_down_bytes == (wire.downlink_bytes(res.y)
+                                            * res.scheduler_stats["dispatches"])
+    assert res.comm.upload_fedpt == per_up  # analytic agrees with the wire
+
+
+def test_async_grid_rejects_dp_noise():
+    ds = make_ds(n_clients=6)
+    rc = fedpt.RoundConfig(4, 2, 8, dp_clip_norm=1.0,
+                           dp_noise_multiplier=0.5)
+    with pytest.raises(NotImplementedError):
+        simgrid.run_grid(init_fn, loss_fn, ds, rc, 1,
+                         grid=simgrid.GridConfig(mode="async"))
+
+
+def test_grid_rejects_oversized_cohort():
+    ds = make_ds(n_clients=3)
+    with pytest.raises(ValueError, match="clients_per_round"):
+        simgrid.run_grid(init_fn, loss_fn, ds, RC, 1)
+
+
+def test_fleet_presets():
+    uni = dev_lib.make_fleet(8, "uniform")
+    mb = 1024.0 * 1024.0
+    for p in uni.profiles:
+        assert p.downlink_bps == comm.DOWNLINK_MBPS * mb
+        assert p.uplink_bps == comm.UPLINK_MBPS * mb
+        assert p.availability == 1.0 and p.dropout == 0.0
+    par = dev_lib.make_fleet(64, "pareto-mobile", seed=1)
+    dls = {p.downlink_bps for p in par.profiles}
+    assert len(dls) > 32                     # heterogeneous
+    assert max(dls) <= comm.DOWNLINK_MBPS * mb
+    silo = dev_lib.make_fleet(4, "cross-silo")
+    assert all(p.availability == 1.0 for p in silo.profiles)
+    assert silo.profiles[0].downlink_bps > 100 * mb
+    with pytest.raises(ValueError):
+        dev_lib.make_fleet(4, "galaxy-brain")
+    # round-trip time composes download + compute + upload
+    p = uni.profiles[0]
+    t = p.round_trip_seconds(mb, mb, 2.0)
+    assert t == pytest.approx(1 / comm.DOWNLINK_MBPS + 2.0
+                              + 1 / comm.UPLINK_MBPS)
+
+
+def test_summarize_delegates_to_comm_report():
+    params = init_fn(0)
+    spec = (r"bias",)
+    s = part.summarize(params, spec)
+    y, z = part.partition(params, spec)
+    assert s["comm_reduction"] == comm.report_for(y, z).reduction
+    assert s["trainable_bytes"] == basic.tree_bytes(y)
