@@ -1,0 +1,245 @@
+"""Aggregation-tail bench: old per-leaf tree path vs the flat-buffer path.
+
+Times ONE server aggregation (the per-round hot path the flat subsystem
+replaces) over a clients x params grid, for four pipeline flavours:
+
+* ``mean``  — weighted mean only (DP and quantization off);
+* ``clip``  — per-client L2 clip + weighted fixed-denominator mean;
+* ``dp``    — clip + mean + central Gaussian noise (DP-FedAvg tail);
+* ``full``  — int8 fake-quantized uplink + clip + mean + noise (the
+  paper's §5 composition — quantization on top of FedPT, under DP).
+
+The *tree* path is the pre-flat engine verbatim: a tree_map sweep per
+stage per leaf (vmapped per-client quantize/clip, per-leaf tensordot,
+per-leaf noise keys). The *flat* path is what `core.fedpt.make_round_fn`
+ships now: deltas are born flat, so each stage is a single op over the
+(clients, size) buffer and clipping folds into the aggregation weights.
+Both are jitted whole; inputs sit in each path's native layout (the
+tree path never pays a flatten, the flat path never pays an unflatten
+back — the engine unflattens once per round in both worlds).
+
+Emits the harness's ``name,us_per_call,derived`` CSV rows and writes
+``BENCH_agg.json`` next to the repo root. ``--smoke`` runs a tiny cell
+once and asserts tree/flat agreement instead of timing (CI tier-1).
+
+    PYTHONPATH=src python -m benchmarks.agg_bench [--smoke] [--reps 5]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compress, flat as flat_lib
+from repro.optim import optimizers as opt_lib
+
+CLIP = 1.0
+SIGMA = 0.01
+
+
+def make_leaf_sizes(target_params: int):
+    """Transformer-shaped leaf mix: embedding + unembedding plus decoder
+    blocks of [wq, wk, wv, wo, ffn-in, ffn-out, 2 norms, 2 biases] —
+    the leaf-count/size distribution the round engine actually sees
+    (e.g. the paper's SO NWP model), not a handful of giant arrays."""
+    if target_params >= 6_000_000:
+        d, vocab = 256, 10_004
+    elif target_params >= 2_000_000:
+        d, vocab = 128, 10_004
+    else:
+        d, vocab = 96, 1_004
+    block = [d * d, d * d, d * d, d * d,          # attention projections
+             d * 4 * d, 4 * d * d,                # FFN
+             d, d, d, 4 * d]                      # norms + biases
+    sizes = [vocab * d]                           # embedding
+    total = sizes[0]
+    while total < target_params - vocab * d:
+        sizes.extend(block)
+        total += sum(block)
+    sizes.append(vocab * d)                       # unembedding
+    total += sizes[-1]
+    return sizes, total
+
+
+def make_deltas(sizes, clients: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {f"leaf{i:03d}": jnp.asarray(
+        rng.normal(0, 0.05, (clients, s)).astype(np.float32))
+        for i, s in enumerate(sizes)}
+
+
+# ---------------------------------------------------------------------------
+# The two aggregation tails. `pipeline` in {"mean", "clip", "dp", "full"}.
+
+
+def tree_tail(pipeline: str, clients: int, noise: bool = True):
+    """The pre-flat engine: per-leaf tree_map sweeps."""
+
+    def run(deltas, w, rng):
+        if pipeline == "full":
+            deltas = jax.vmap(
+                lambda d: compress.fake_quantize_tree(d, 8))(deltas)
+        if pipeline != "mean":
+            def clip_one(d):
+                nrm = opt_lib.tree_global_norm(d)
+                s = jnp.minimum(1.0, CLIP / jnp.maximum(nrm, 1e-12))
+                return jax.tree_util.tree_map(lambda x: x * s, d), nrm
+            deltas, _norms = jax.vmap(clip_one)(deltas)
+            wsum = jnp.asarray(float(clients), jnp.float32)
+        else:
+            wsum = jnp.maximum(jnp.sum(w), 1e-12)
+        delta = jax.tree_util.tree_map(
+            lambda d: jnp.tensordot(w.astype(jnp.float32),
+                                    d.astype(jnp.float32), axes=1) / wsum,
+            deltas)
+        if noise and pipeline in ("dp", "full"):
+            leaves, treedef = jax.tree_util.tree_flatten(delta)
+            keys = jax.random.split(rng, len(leaves))
+            delta = jax.tree_util.tree_unflatten(treedef, [
+                l + SIGMA * jax.random.normal(k, l.shape, jnp.float32)
+                for l, k in zip(leaves, keys)])
+        return delta
+
+    return run
+
+
+def flat_tail(pipeline: str, clients: int, layout: flat_lib.FlatLayout,
+              noise: bool = True):
+    """The flat-buffer engine: single-pass ops over (clients, size)."""
+
+    def run(mat, w, rng):
+        if pipeline == "full":
+            mat = flat_lib.fake_quantize(mat, layout, 8)
+        if pipeline != "mean":
+            norms = flat_lib.row_norms(mat, layout.align)
+            w = w * jnp.minimum(1.0, CLIP / jnp.maximum(norms, 1e-12))
+            wsum = jnp.asarray(float(clients), jnp.float32)
+        else:
+            wsum = jnp.maximum(jnp.sum(w), 1e-12)
+        delta = flat_lib.weighted_mean(mat, w, wsum)
+        if noise and pipeline in ("dp", "full"):
+            delta = flat_lib.add_noise(delta, SIGMA, rng)
+        return delta
+
+    return run
+
+
+def _time(fn, args, reps: int) -> float:
+    jax.block_until_ready(fn(*args))          # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_cell(pipeline: str, params: int, clients: int, reps: int,
+             check: bool = False):
+    sizes, total = make_leaf_sizes(params)
+    deltas = make_deltas(sizes, clients)
+    layout = flat_lib.FlatLayout.of(
+        jax.tree_util.tree_map(lambda a: a[0], deltas))
+    mat = jnp.stack([layout.flatten(
+        jax.tree_util.tree_map(lambda a: a[c], deltas))
+        for c in range(clients)])
+    w = jnp.asarray(np.linspace(1.0, 2.0, clients), jnp.float32)
+    rng = jax.random.key(7)
+
+    tfn = jax.jit(tree_tail(pipeline, clients))
+    ffn = jax.jit(flat_tail(pipeline, clients, layout))
+    if check:
+        # compare the deterministic part: the two paths draw their DP
+        # noise differently by design (one key vs one key per leaf)
+        got = layout.unflatten(
+            jax.jit(flat_tail(pipeline, clients, layout,
+                              noise=False))(mat, w, rng),
+            dtype=jnp.float32)
+        want = jax.jit(tree_tail(pipeline, clients,
+                                 noise=False))(deltas, w, rng)
+        tol = 0 if pipeline == "mean" else 1e-5
+        for (ka, va), (kb, vb) in zip(
+                sorted(got.items()), sorted(want.items())):
+            assert ka == kb
+            err = float(jnp.max(jnp.abs(va - vb.reshape(va.shape))))
+            rel = err / max(float(jnp.max(jnp.abs(vb))), 1e-12)
+            assert rel <= tol, (pipeline, ka, rel)
+    t_tree = _time(tfn, (deltas, w, rng), reps)
+    t_flat = _time(ffn, (mat, w, rng), reps)
+    return {"pipeline": pipeline, "params": total, "clients": clients,
+            "leaves": len(sizes), "tree_us": t_tree * 1e6,
+            "flat_us": t_flat * 1e6, "speedup": t_tree / t_flat}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny cells, correctness asserts, no JSON")
+    ap.add_argument("--reps", type=int, default=4)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_agg.json"))
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        for pipeline in ("mean", "clip", "dp", "full"):
+            cell = run_cell(pipeline, 300_000, 4, reps=1, check=True)
+            print(f"agg/smoke/{pipeline},{cell['flat_us']:.0f},"
+                  f"speedup={cell['speedup']:.2f};leaves={cell['leaves']}")
+            sys.stdout.flush()
+        print("smoke OK: flat == tree on every pipeline")
+        return
+
+    cells = []
+    for params in (1_000_000, 4_000_000, 10_000_000):
+        for clients in (8, 16):
+            for pipeline in ("mean", "clip", "dp", "full"):
+                cell = run_cell(pipeline, params, clients, reps=args.reps,
+                                check=(params <= 1_000_000))
+                cells.append(cell)
+                print(f"agg/{pipeline}/p{params // 1_000_000}M/c{clients},"
+                      f"{cell['flat_us']:.0f},"
+                      f"tree_us={cell['tree_us']:.0f}"
+                      f";speedup={cell['speedup']:.2f}"
+                      f";leaves={cell['leaves']}")
+                sys.stdout.flush()
+
+    def _head(cs):
+        c = cs[-1]
+        return {"pipeline": c["pipeline"], "params": c["params"],
+                "clients": c["clients"], "tree_us": c["tree_us"],
+                "flat_us": c["flat_us"], "speedup": c["speedup"]}
+
+    # headline: the paper's full composition at the largest cell, plus
+    # the same composition at the paper's own model scale (SO NWP ~4M)
+    head = _head([c for c in cells if c["pipeline"] == "full"
+                  and c["params"] >= 10_000_000 and c["clients"] == 16])
+    paper = _head([c for c in cells if c["pipeline"] == "full"
+                   and 2_000_000 <= c["params"] < 10_000_000
+                   and c["clients"] == 16])
+    best = max((c for c in cells if c["params"] >= 10_000_000
+                and c["clients"] == 16), key=lambda c: c["speedup"])
+    out = {"backend": jax.default_backend(),
+           "devices": jax.device_count(),
+           "clip": CLIP, "sigma": SIGMA,
+           "headline": head,
+           "paper_scale": paper,
+           "best_10M_16c": _head([best]),
+           "cells": cells}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"# full @10M/16c: flat {head['speedup']:.2f}x "
+          f"({head['tree_us']:.0f}us -> {head['flat_us']:.0f}us); "
+          f"full @4M/16c: {paper['speedup']:.2f}x; "
+          f"best 10M/16c cell: {best['pipeline']} {best['speedup']:.2f}x; "
+          f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

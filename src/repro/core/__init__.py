@@ -13,9 +13,10 @@ from repro.core.reconstruct import (reconstruct as reconstruct_frozen,
                                     verify_roundtrip)
 from repro.core.fedpt import (RoundConfig, make_round_fn, make_client_update,
                               clip_delta, make_eval_fn)
+from repro.core.flat import FlatLayout
 from repro.core.dp import (DPFTRLConfig, dp_ftrl_server_opt, tree_noise,
                            NOISE_TO_EPS)
 from repro.core.comm import CommReport, report_for
 
 # restore submodule attributes clobbered by the re-exports above
-from repro.core import partition, reconstruct, fedpt, dp, comm  # noqa: E402,F811
+from repro.core import partition, reconstruct, fedpt, dp, comm, flat  # noqa: E402,F811

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.core.partition as part
+from repro.core import flat as flat_lib
 from repro.optim import optimizers as opt_lib
 
 
@@ -78,10 +79,23 @@ def make_client_update(loss_fn: Callable, client_opt: opt_lib.Optimizer,
 
 
 def clip_delta(delta, clip_norm: float):
-    """Per-client L2 clipping: delta * min(1, C/||delta||)."""
-    nrm = opt_lib.tree_global_norm(delta)
-    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(nrm, 1e-12))
-    return jax.tree_util.tree_map(lambda d: d * scale.astype(d.dtype), delta), nrm
+    """Per-client L2 clipping: delta * min(1, C/||delta||).
+
+    Runs over the flat buffer — the fused dp_clip.py kernel on TPU, the
+    reshaped kernels/ref.py fallback on CPU — instead of a per-leaf
+    tree sweep. Accepts and returns a tree (or a flat fp32 vector, in
+    which case no unflatten round-trip is paid)."""
+    if isinstance(delta, jnp.ndarray) and delta.ndim == 1:
+        layout = None
+        vec = delta
+    else:
+        layout = flat_lib.FlatLayout.of(delta)
+        vec = layout.flatten(delta)
+    clipped, nrm = flat_lib.clip(vec, clip_norm, layout)
+    if layout is None:
+        return clipped, nrm
+    # match the old tree-path dtype behaviour: leaves keep their dtype
+    return layout.unflatten(clipped), nrm
 
 
 def resolve_server_opt(rc: RoundConfig) -> opt_lib.Optimizer:
@@ -94,7 +108,8 @@ def resolve_server_opt(rc: RoundConfig) -> opt_lib.Optimizer:
 
 def make_round_fn(loss_fn: Callable, rc: RoundConfig,
                   server_opt: Optional[opt_lib.Optimizer] = None,
-                  donate: bool = True, constrain_fn: Optional[Callable] = None):
+                  donate: bool = True, constrain_fn: Optional[Callable] = None,
+                  constrain_flat_fn: Optional[Callable] = None):
     """Builds round_step(y, server_state, frozen, batch, weights, rng).
 
     batch: pytree, leaves (clients, tau, local_batch, ...).
@@ -103,6 +118,15 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
     constrain_fn(tree, clients: bool): optional sharding-constraint hook
     used on the mesh — pins the per-client trainable copies to the data
     axis so GSPMD never replicates C copies of y per device.
+    constrain_flat_fn(arr, clients: bool): same, for the flat delta
+    buffer ((C, size) when clients=True, (size,) when False).
+
+    The aggregation tail (quantize / clip / weighted mean / DP noise)
+    runs over ``core.flat.FlatLayout`` buffers: client deltas are
+    flattened *inside* the vmapped client step, so each per-client pass
+    is one op over (C, size) instead of a tree_map per leaf. With DP
+    and quantization off the result is bit-for-bit the old tree path
+    (same dot_general over the client axis).
     """
     client_opt = opt_lib.get_optimizer(rc.client_opt, rc.client_lr)
     if server_opt is None:
@@ -110,6 +134,12 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
     client_update = make_client_update(loss_fn, client_opt, rc.local_steps)
 
     def round_step(y, server_state, frozen, batch, weights, rng):
+        layout = flat_lib.FlatLayout.of(y)   # static: shapes only
+
+        def flat_client(y0, cb):
+            delta, metrics = client_update(y0, frozen, cb)
+            return layout.flatten(delta), metrics
+
         # --- local training on every sampled client (vmapped over the
         # client axis; under pjit that axis is sharded over `data`) -----
         if constrain_fn is not None:
@@ -117,27 +147,14 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
             yb = jax.tree_util.tree_map(
                 lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), y)
             yb = constrain_fn(yb, clients=True)
-            deltas, metrics = jax.vmap(
-                lambda y0, cb: client_update(y0, frozen, cb))(yb, batch)
-            deltas = constrain_fn(deltas, clients=True)
+            deltas, metrics = jax.vmap(flat_client)(yb, batch)
         else:
             deltas, metrics = jax.vmap(
-                lambda cb: client_update(y, frozen, cb))(batch)
+                lambda cb: flat_client(y, cb))(batch)
+        if constrain_flat_fn is not None:
+            deltas = constrain_flat_fn(deltas, clients=True)
 
-        # --- optional lossy uplink (int-k quantization per client) ------
-        if rc.uplink_bits:
-            from repro.core import compress
-            deltas = jax.vmap(
-                lambda d: compress.fake_quantize_tree(d, rc.uplink_bits)
-            )(deltas)
-
-        # --- optional per-client clipping (DP-FedAvg / DP-FTRL) --------
-        if rc.dp_clip_norm > 0:
-            deltas, norms = jax.vmap(
-                lambda d: clip_delta(d, rc.dp_clip_norm))(deltas)
-            metrics = dict(metrics, update_norm=jnp.mean(norms))
-
-        # --- aggregation: weighted mean over clients --------------------
+        # --- aggregation weights ----------------------------------------
         if rc.uniform_weights or rc.dp_clip_norm > 0:
             # uniform among *participants*: zero weights mark clients the
             # grid scheduler dropped (stragglers / mid-round dropouts) and
@@ -152,27 +169,39 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
             wsum = jnp.asarray(float(rc.clients_per_round), jnp.float32)
         else:
             wsum = jnp.maximum(jnp.sum(w), 1e-12)
-        delta = jax.tree_util.tree_map(
-            lambda d: jnp.tensordot(w.astype(jnp.float32),
-                                    d.astype(jnp.float32), axes=1) / wsum,
-            deltas)
-        if constrain_fn is not None:
-            delta = constrain_fn(delta, clients=False)
 
-        # --- central Gaussian noise (sensitivity C / n under clipping) --
-        if rc.dp_clip_norm > 0 and rc.dp_noise_multiplier > 0:
+        # --- lossy uplink + clip + weighted mean over the flat buffer.
+        # Quantization is one fused per-leaf-scale pass (bit-identical
+        # to the old tree sweep); clipping folds its scale into the
+        # aggregation weights (one norm pass, no scaled (C, size) copy);
+        # the mean is a single dot --------------------------------------
+        if rc.uplink_bits:
+            deltas = flat_lib.fake_quantize(deltas, layout, rc.uplink_bits)
+        if rc.dp_clip_norm > 0:
+            norms = flat_lib.row_norms(deltas, layout.align)
+            w = w * jnp.minimum(1.0, rc.dp_clip_norm
+                                / jnp.maximum(norms, 1e-12))
+            metrics = dict(metrics, update_norm=jnp.mean(norms))
+        flat_delta = flat_lib.weighted_mean(deltas, w, wsum)
+        if constrain_flat_fn is not None:
+            flat_delta = constrain_flat_fn(flat_delta, clients=False)
+
+        # --- central Gaussian noise (sensitivity C / n under clipping):
+        # one PRNG call over the flat buffer; pads are dropped at
+        # unflatten, so only the flat vector's norm sees their noise ----
+        noised = rc.dp_clip_norm > 0 and rc.dp_noise_multiplier > 0
+        if noised:
             sigma = rc.dp_noise_multiplier * rc.dp_clip_norm / rc.clients_per_round
-            leaves, treedef = jax.tree_util.tree_flatten(delta)
-            keys = jax.random.split(rng, len(leaves))
-            noisy = [l + sigma * jax.random.normal(k, l.shape, jnp.float32)
-                     for l, k in zip(leaves, keys)]
-            delta = jax.tree_util.tree_unflatten(treedef, noisy)
+            flat_delta = flat_lib.add_noise(flat_delta, sigma, rng)
 
         # --- ServerOpt on the pseudo-gradient ---------------------------
+        delta = layout.unflatten(flat_delta, dtype=jnp.float32)
         neg = jax.tree_util.tree_map(lambda d: -d, delta)
         y_new, server_state = server_opt.update(y, neg, server_state)
         out_metrics = {"loss": jnp.mean(metrics["client_loss"]),
-                       "delta_norm": opt_lib.tree_global_norm(delta)}
+                       "delta_norm": opt_lib.tree_global_norm(delta)
+                       if noised else jnp.sqrt(
+                           flat_lib.sumsq(flat_delta, layout.align))}
         if "update_norm" in metrics:
             out_metrics["update_norm"] = jnp.mean(metrics["update_norm"])
         return y_new, server_state, out_metrics
@@ -229,41 +258,73 @@ def get_staleness_fn(name="polynomial", **kw) -> Callable[[float], float]:
 def make_client_step(loss_fn: Callable, rc: RoundConfig,
                      client_opt: Optional[opt_lib.Optimizer] = None):
     """Single-client step for the async grid: (y, frozen, client_batch) ->
-    (delta, metrics). Applies the same uplink quantization and DP clipping
-    as the synchronous round engine, in the same order."""
+    (flat_delta, metrics). The delta is born flat — flattened inside the
+    jitted step onto the ``FlatLayout`` of ``y`` — and the same uplink
+    quantization and DP clipping as the synchronous round engine are
+    applied over the flat buffer, in the same order."""
     if client_opt is None:
         client_opt = opt_lib.get_optimizer(rc.client_opt, rc.client_lr)
     client_update = make_client_update(loss_fn, client_opt, rc.local_steps)
 
     def client_step(y, frozen, client_batch):
+        layout = flat_lib.FlatLayout.of(y)
         delta, metrics = client_update(y, frozen, client_batch)
+        flat_delta = layout.flatten(delta)
         if rc.uplink_bits:
-            from repro.core import compress
-            delta = compress.fake_quantize_tree(delta, rc.uplink_bits)
+            flat_delta = flat_lib.fake_quantize(flat_delta, layout,
+                                                rc.uplink_bits)
         if rc.dp_clip_norm > 0:
-            delta, nrm = clip_delta(delta, rc.dp_clip_norm)
+            flat_delta, nrm = flat_lib.clip(flat_delta, rc.dp_clip_norm,
+                                            layout)
             metrics = dict(metrics, update_norm=nrm)
-        return delta, metrics
+        return flat_delta, metrics
 
     return client_step
 
 
+def make_lane_step(loss_fn: Callable, rc: RoundConfig, lane: int,
+                   client_opt: Optional[opt_lib.Optimizer] = None,
+                   constrain_flat_fn: Optional[Callable] = None):
+    """Batched client step for the async grid's fixed-width lanes:
+    (y, frozen, lane_batch) -> (flat_deltas (lane, size), losses (lane,)).
+
+    One vmapped dispatch replaces `lane` sequential jit calls; under a
+    launch/sharding.py mesh, pass ``constrain_flat_fn`` to pin the lane
+    axis to the data mesh axes so clients execute data-parallel.
+    """
+    step = make_client_step(loss_fn, rc, client_opt)
+
+    def lane_step(y, frozen, lane_batch):
+        flat_deltas, metrics = jax.vmap(
+            lambda cb: step(y, frozen, cb))(lane_batch)
+        if constrain_flat_fn is not None:
+            flat_deltas = constrain_flat_fn(flat_deltas, clients=True)
+        return flat_deltas, metrics["client_loss"]
+
+    return lane_step
+
+
 def make_buffered_apply(server_opt: opt_lib.Optimizer):
     """Server-side flush of an async buffer: apply(y, server_state,
-    deltas, weights) with every `deltas` leaf stacked on axis 0 (K, ...)
-    and weights (K,) already including the staleness factor (w_i =
-    staleness_fn(s_i) * p_i). Weighted-mean then ServerOpt on the
-    pseudo-gradient, mirroring the sync engine's aggregation."""
+    flat_deltas, weights) with ``flat_deltas`` the (K, size) stack of
+    flat client deltas and weights (K,) already including the staleness
+    factor (w_i = staleness_fn(s_i) * p_i). Weighted-mean as one dot,
+    then ServerOpt on the pseudo-gradient, mirroring the sync engine.
 
-    def apply_fn(y, server_state, deltas, weights):
+    K is a fixed shape: short buffers (e.g. a drained final flush) are
+    padded with zero-weight rows by the caller, which fall out of the
+    weighted mean — so partial flushes never re-trace.
+    """
+
+    def apply_fn(y, server_state, flat_deltas, weights):
+        layout = flat_lib.FlatLayout.of(y)
         wsum = jnp.maximum(jnp.sum(weights), 1e-12)
-        delta = jax.tree_util.tree_map(
-            lambda d: jnp.tensordot(weights.astype(jnp.float32),
-                                    d.astype(jnp.float32), axes=1) / wsum,
-            deltas)
+        flat_delta = flat_lib.weighted_mean(flat_deltas, weights, wsum)
+        delta = layout.unflatten(flat_delta, dtype=jnp.float32)
         neg = jax.tree_util.tree_map(lambda d: -d, delta)
         y_new, server_state = server_opt.update(y, neg, server_state)
-        return y_new, server_state, {"delta_norm": opt_lib.tree_global_norm(delta)}
+        return y_new, server_state, {"delta_norm": jnp.sqrt(
+            flat_lib.sumsq(flat_delta, layout.align))}
 
     return apply_fn
 

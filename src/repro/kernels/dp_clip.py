@@ -67,6 +67,35 @@ def sumsq(x, block: int = BLOCK, interpret: bool = False):
     return out[0]
 
 
+def _scale_kernel(scale_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...].astype(jnp.float32) * scale_ref[0]
+
+
+def clip_flat(x, clip_norm: float, block: int = BLOCK,
+              interpret: bool = False):
+    """x * min(1, clip_norm/||x||) over a flat f32 vector — the round
+    engine's per-client clip (no accumulate target). Returns
+    (clipped (N,), pre-clip norm). Two fused HBM passes.
+    """
+    n = x.shape[0]
+    nrm = jnp.sqrt(sumsq(x, block=block, interpret=interpret))
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(nrm, 1e-12))
+    xp = _pad_to_block(x, block)
+    grid = (xp.shape[0] // block,)
+    out = pl.pallas_call(
+        _scale_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((block,), lambda i, s: (i,))],
+            out_specs=pl.BlockSpec((block,), lambda i, s: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0],), jnp.float32),
+        interpret=interpret,
+    )(scale.reshape(1), xp)
+    return out[:n], nrm
+
+
 def clip_accumulate(acc, x, clip_norm: float, block: int = BLOCK,
                     interpret: bool = False):
     """acc += x * min(1, clip_norm/||x||). acc, x: (N,) f32.

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import dp_clip as _dp
+from repro.kernels import quantize as _q
+from repro.kernels import ref as _ref
 from repro.kernels import seed_reconstruct as _sr
 from repro.kernels import swa_attention as _swa
 
@@ -32,6 +34,27 @@ def swa_attention(q, k, v, window: int = 0, causal: bool = True,
 def clip_accumulate(acc, x, clip_norm: float):
     """Fused DP clip-and-accumulate over flat f32 vectors."""
     return _dp.clip_accumulate(acc, x, clip_norm, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("clip_norm",))
+def flat_clip(x, clip_norm: float):
+    """Per-vector L2 clip over a flat f32 delta: (clipped, pre-clip
+    norm). Fused two-pass kernel on TPU, reshaped pure-jnp elsewhere."""
+    if _ON_TPU:
+        return _dp.clip_flat(x, clip_norm)
+    return _ref.flat_clip_ref(x, clip_norm)
+
+
+@functools.partial(jax.jit, static_argnames=("n_leaves", "bits", "block"))
+def fake_quantize_flat(x, block_leaf, n_leaves: int = 0, bits: int = 8,
+                       block: int = _q.BLOCK):
+    """Fused per-leaf int8 fake-quantize of a block-aligned flat delta
+    (see quantize.py). Kernel on TPU, segment-reduction ref elsewhere."""
+    if _ON_TPU:
+        return _q.fake_quantize_flat(x, block_leaf, n_leaves, bits=bits,
+                                     block=block)
+    return _ref.fake_quantize_flat_ref(x, block_leaf, bits=bits, block=block,
+                                       n_leaves=n_leaves)
 
 
 @functools.partial(jax.jit, static_argnames=("leaf_id", "shape", "stddev",

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def swa_attention_ref(q, k, v, window: int, causal: bool = True):
@@ -40,6 +41,128 @@ def dp_clip_accumulate_ref(acc, x, clip_norm: float):
     nrm = jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
     scale = jnp.minimum(1.0, clip_norm / jnp.maximum(nrm, 1e-12))
     return acc + x.astype(jnp.float32) * scale, nrm
+
+
+# ---------------------------------------------------------------------------
+# Flat-buffer aggregation fallbacks (core/flat.py dispatches here off-TPU).
+#
+# Every reduction is expressed over a (rows, chunk) block view instead of
+# a (C, N) row sweep: XLA:CPU lowers the former to a vectorized loop and
+# the latter to a scalar one (~20x slower at N=10^7), and the block view
+# is also exactly the layout the TPU kernels tile.
+
+
+def _chunked(x, chunk: int):
+    """(..., N) -> (..., N//chunk, chunk); N must divide (FlatLayout
+    aligns it) — falls back to one chunk otherwise."""
+    n = x.shape[-1]
+    if chunk <= 1 or n == 0 or n % chunk:
+        return x.reshape(x.shape[:-1] + (1, n))
+    return x.reshape(x.shape[:-1] + (n // chunk, chunk))
+
+
+# rows are processed in a few large independent slices: at >=10^7
+# elements per operand XLA:CPU schedules the slices measurably better
+# than one monolithic cascade (and it bounds intermediate live range)
+_ROW_CHUNKS = 4
+_CHUNK_MIN = 1 << 20
+
+
+def _rowwise(x3, one_chunk):
+    """Apply `one_chunk` ((rows, width) -> (rows,)) over the trailing
+    axis of (..., width), slicing the flattened row dim into a few
+    large independent chunks."""
+    width = x3.shape[-1]
+    rows = x3.reshape(-1, width)
+    n = rows.shape[0]
+    if n * width <= _CHUNK_MIN or n < _ROW_CHUNKS:
+        return one_chunk(rows).reshape(x3.shape[:-1])
+    step = -(-n // _ROW_CHUNKS)
+    parts = [one_chunk(rows[i:i + step]) for i in range(0, n, step)]
+    return jnp.concatenate(parts).reshape(x3.shape[:-1])
+
+
+def _sumsq_chunk(rows):
+    """sum(x^2) over each row, by log-halving: pairwise elementwise adds
+    stream at memory bandwidth, where XLA:CPU's reduce op runs a ~5x
+    slower scalar loop at these shapes. The first halving fuses the
+    squaring (and any int8->f32 cast)."""
+    h = rows.shape[-1] // 2
+    if rows.shape[-1] % 2 or h == 0:
+        rows = rows.astype(jnp.float32)
+        return jnp.sum(rows * rows, axis=-1)
+    a = rows[..., :h].astype(jnp.float32)
+    b = rows[..., h:].astype(jnp.float32)
+    y = a * a + b * b
+    while y.shape[-1] > 1 and y.shape[-1] % 2 == 0:
+        h = y.shape[-1] // 2
+        y = y[..., :h] + y[..., h:]
+    return jnp.sum(y, axis=-1)
+
+
+def _maxabs_chunk(rows):
+    """max|x| over each row, same log-halving trick."""
+    h = rows.shape[-1] // 2
+    if rows.shape[-1] % 2 or h == 0:
+        return jnp.max(jnp.abs(rows), axis=-1)
+    y = jnp.maximum(jnp.abs(rows[..., :h]), jnp.abs(rows[..., h:]))
+    while y.shape[-1] > 1 and y.shape[-1] % 2 == 0:
+        h = y.shape[-1] // 2
+        y = jnp.maximum(y[..., :h], y[..., h:])
+    return jnp.max(y, axis=-1)
+
+
+def _last_axis_sumsq(x3):
+    return _rowwise(x3, _sumsq_chunk)
+
+
+def _last_axis_maxabs(x3):
+    return _rowwise(x3, _maxabs_chunk)
+
+
+def flat_sumsq_ref(x, chunk: int = 1024):
+    """Sum of squares of a 1-D flat vector via a two-stage reduction."""
+    return jnp.sum(_last_axis_sumsq(_chunked(x.astype(jnp.float32), chunk)))
+
+
+def row_sumsq_ref(mat, chunk: int = 1024):
+    """(C, N) -> (C,) per-row sum of squares, one fused pass."""
+    part = _last_axis_sumsq(_chunked(mat.astype(jnp.float32), chunk))
+    return jnp.matmul(part, jnp.ones((part.shape[-1],), jnp.float32))
+
+
+def flat_clip_ref(x, clip_norm: float, chunk: int = 1024):
+    """Oracle for the flat per-vector clip: x * min(1, C/||x||).
+    Returns (clipped, pre-clip norm)."""
+    nrm = jnp.sqrt(flat_sumsq_ref(x, chunk))
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(nrm, 1e-12))
+    return x.astype(jnp.float32) * scale, nrm
+
+
+def fake_quantize_flat_ref(mat, block_leaf, bits: int = 8,
+                           block: int = 1024, n_leaves: int = 0):
+    """Per-leaf symmetric int-k fake-quantize over a block-aligned flat
+    buffer. ``mat``: (..., N) with N = len(block_leaf) * block; each
+    block belongs to one leaf (block_leaf: (K,) int). Matches
+    `compress.quantize_leaf` + `dequantize_leaf` exactly: scale is the
+    leaf max-abs / qmax (zero padding never raises a max).
+
+    ``n_leaves`` must be passed when ``block_leaf`` is a traced value
+    (e.g. through a jitted wrapper); with a concrete map it is derived.
+    """
+    qmax = 2.0 ** (bits - 1) - 1
+    if not n_leaves:
+        n_leaves = int(np.max(np.asarray(block_leaf))) + 1 \
+            if len(block_leaf) else 0
+    block_leaf = jnp.asarray(block_leaf, jnp.int32)
+    xc = _chunked(mat.astype(jnp.float32), block)      # (..., K, block)
+    bmax = _last_axis_maxabs(xc)                       # (..., K)
+    lmax = jax.ops.segment_max(jnp.moveaxis(bmax, -1, 0), block_leaf,
+                               num_segments=n_leaves)  # (L, ...)
+    scales = jnp.maximum(jnp.moveaxis(lmax, 0, -1), 1e-12) / qmax
+    sblock = jnp.take(scales, block_leaf, axis=-1)     # (..., K)
+    q = jnp.clip(jnp.round(xc / sblock[..., None]), -qmax, qmax)
+    return (q * sblock[..., None]).reshape(mat.shape)
 
 
 def seed_reconstruct_ref(seed: int, shape, stddev: float):

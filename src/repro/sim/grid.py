@@ -43,6 +43,17 @@ class GridConfig:
     goal_count: int = 5                     # buffer size K per server update
     staleness: Any = "polynomial"           # name or callable (core.fedpt)
     staleness_kw: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # fixed-width client lanes: in-flight client steps are deferred and
+    # executed as one vmapped (lane, ...) batch per flush instead of one
+    # jit dispatch per client. None = auto (lane width == goal_count);
+    # 0 = the sequential per-client reference engine. Virtual-clock
+    # history is identical either way (execution timing never feeds the
+    # event clock); only device dispatch granularity changes.
+    lanes: Optional[int] = None
+    # virtual-seconds budget for the whole async run: the first event
+    # past it ends the run, flushing the partial buffer as one final
+    # short update (padded to goal_count with zero weights)
+    async_deadline: float = math.inf
     # --- rng plumbing ---
     fleet_seed: int = 0                     # profile sampling
     device_seed: int = 13                   # availability/dropout/latency
@@ -191,6 +202,20 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
 # Buffered async (FedBuff)
 
 
+class _LaneCell:
+    """Handle for a client step deferred into a lane batch: filled with
+    this client's own (delta row, loss) when the lane executes — rows
+    are sliced out at fill time so a straggler entry keeps one (size,)
+    row alive, not the whole (lane, size) batch."""
+    __slots__ = ("delta", "loss")
+
+    def __init__(self):
+        self.delta = None
+
+    def resolve(self):
+        return self.delta, self.loss
+
+
 def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                fleet, report, down_bytes, up_bytes, compute_seconds,
                data_rng, dev_rng, seed, data_kind, eval_every, eval_fn, log):
@@ -201,7 +226,11 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
             "goal_count denominator). Use mode='sync' for DP runs.")
     if server_opt is None:
         server_opt = fedpt.resolve_server_opt(rc)
-    client_step = jax.jit(fedpt.make_client_step(loss_fn, rc))
+    lane = grid.goal_count if grid.lanes is None else int(grid.lanes)
+    if lane > 0:
+        lane_step = jax.jit(fedpt.make_lane_step(loss_fn, rc, lane))
+    else:
+        client_step = jax.jit(fedpt.make_client_step(loss_fn, rc))
     apply_fn = jax.jit(fedpt.make_buffered_apply(server_opt),
                        donate_argnums=(0, 1))
     staleness_fn = fedpt.get_staleness_fn(grid.staleness, **grid.staleness_kw)
@@ -213,6 +242,26 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
     # processed in virtual-time order, so "the model right now" is exactly
     # what a client dispatched at the current event time downloads
     state = {"y": y, "sstate": server_opt.init(y), "applied": 0}
+    # lane mode: client steps dispatched since the last flush. They all
+    # trained on the model of the CURRENT server version (y only changes
+    # at flushes), so deferring them until the next flush and running
+    # them as (lane, ...) batches is exactly the sequential semantics —
+    # their completion times never depend on when the compute runs.
+    pending: List = []
+
+    def run_pending():
+        while pending:
+            chunk = pending[:lane]
+            del pending[:len(chunk)]
+            n = len(chunk)
+            # pad short lanes with a repeat of the last real batch: one
+            # fixed (lane, ...) shape -> lane_step never re-traces
+            stacked = {k: np.stack([b[k] for b, _ in chunk]
+                                   + [chunk[-1][0][k]] * (lane - n))
+                       for k in chunk[0][0]}
+            deltas, losses = lane_step(state["y"], frozen, stacked)
+            for i, (_, cell) in enumerate(chunk):
+                cell.delta, cell.loss = deltas[i], losses[i]
 
     def sample_cid(rng):
         return int(rng.integers(0, N))
@@ -220,21 +269,46 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
     def run_client(cid, version):
         b, w = batch_fn(dataset, cid, rc.local_steps, rc.local_batch,
                         data_rng)
-        delta, metrics = client_step(state["y"], frozen, b)
         if rc.uniform_weights or rc.dp_clip_norm > 0:
             w = 1.0  # DP / uniform weighting, as in the sync engine
         # payload size is shape-determined: reuse the once-measured value
         # instead of serializing every delta just to count its bytes
-        return {"delta": delta, "weight": w,
-                "loss": float(metrics["client_loss"]), "up_bytes": up_bytes}
+        if lane > 0:
+            cell = _LaneCell()
+            pending.append((b, cell))
+            return {"cell": cell, "weight": w, "up_bytes": up_bytes}
+        delta, metrics = client_step(state["y"], frozen, b)
+        # loss stays a device scalar: converted once per flush, not per
+        # client (a float() here would force a host round-trip per client)
+        return {"delta": delta, "loss": metrics["client_loss"],
+                "weight": w, "up_bytes": up_bytes}
+
+    def entry_arrays(e):
+        cell = e.work.get("cell")
+        if cell is not None:
+            return cell.resolve()
+        return e.work["delta"], e.work["loss"]
 
     def apply_update(entries, now, version):
-        deltas = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls),
-                                        *[e.delta for e in entries])
-        wts = jnp.asarray([e.weight for e in entries], jnp.float32)
-        y_new, ss, m = apply_fn(state["y"], state["sstate"], deltas, wts)
+        if lane > 0:
+            run_pending()
+        rows, losses = zip(*[entry_arrays(e) for e in entries])
+        wts = [e.weight for e in entries]
+        flat_deltas = jnp.stack(rows)
+        if len(entries) < grid.goal_count:
+            # pad a short (drained) flush to the fixed goal_count shape
+            # with zero-weight rows, so apply_fn never re-traces
+            pad = grid.goal_count - len(entries)
+            flat_deltas = jnp.concatenate(
+                [flat_deltas, jnp.zeros((pad,) + flat_deltas.shape[1:],
+                                        flat_deltas.dtype)])
+            wts = wts + [0.0] * pad
+        y_new, ss, m = apply_fn(state["y"], state["sstate"], flat_deltas,
+                                jnp.asarray(wts, jnp.float32))
         state["y"], state["sstate"] = y_new, ss
-        out = {"delta_norm": float(m["delta_norm"])}
+        # ONE host sync per flush for the buffered losses
+        out = {"loss": float(jnp.mean(jnp.stack(losses))),
+               "delta_norm": float(m["delta_norm"])}
         state["applied"] += 1
         if eval_fn and eval_every and state["applied"] % eval_every == 0:
             out.update(eval_fn(part.merge(y_new, frozen)))
@@ -247,7 +321,7 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         apply_update=apply_update, down_bytes=down_bytes,
         compute_seconds=compute_seconds, rng=dev_rng)
     t_wall = time.time()
-    history = sched.run(rounds)
+    history = sched.run(rounds, deadline=grid.async_deadline)
     spr = (time.time() - t_wall) / max(rounds, 1)
     if log:
         for rec in history[:: max(1, rounds // 10)]:

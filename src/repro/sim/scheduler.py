@@ -149,10 +149,10 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
 
 @dataclasses.dataclass
 class BufferEntry:
-    delta: Any                    # client delta pytree (opaque here)
+    work: Dict[str, Any]          # run_client's result (opaque here; the
+                                  # delta/loss may be lazy lane handles)
     weight: float                 # staleness_fn(s) * p_i
     staleness: int
-    loss: float
 
 
 class BufferedAsyncScheduler:
@@ -163,12 +163,18 @@ class BufferedAsyncScheduler:
         propose a client to dispatch (the scheduler redraws on failed
         availability checks);
     ``run_client(cid, version) -> dict``
-        run local training against the *current* server model (correct
+        start local training against the *current* server model (correct
         because events are processed in virtual-time order, so the model
         at dispatch time is the model the client downloads); must return
-        ``{"delta", "weight", "loss", "up_bytes"}``;
+        ``{"weight", "up_bytes", ...}`` — any further entries (delta,
+        loss, lane handles) are opaque to the scheduler and simply
+        carried to ``apply_update``, so the grid can defer the actual
+        device work into batched client lanes and keep losses on-device
+        (no per-client host sync here);
     ``apply_update(entries, now, version) -> dict``
-        flush the buffer into one server update and return metrics.
+        flush the buffer into one server update and return metrics
+        (e.g. ``loss``/``delta_norm``), which are merged into the
+        per-update history record.
 
     ``down_bytes`` and ``compute_seconds`` are constants of the round
     configuration (payload sizes are shape-determined).
@@ -221,10 +227,27 @@ class BufferedAsyncScheduler:
                                        self.compute_seconds)
         q.push(t, "complete", cid=cid, version=self.version, work=work)
 
-    def run(self, num_updates: int) -> List[Dict[str, float]]:
+    def _flush(self, buffer, now: float, records) -> None:
+        metrics = self.apply_update(buffer, now, self.version)
+        stale = np.array([e.staleness for e in buffer], np.float64)
+        rec = {"round": len(records),
+               "virtual_seconds": now,
+               "staleness_mean": float(stale.mean()),
+               "staleness_max": float(stale.max())}
+        rec.update(metrics or {})
+        records.append(rec)
+        self.version += 1
+
+    def run(self, num_updates: int,
+            deadline: float = math.inf) -> List[Dict[str, float]]:
         """Run until `num_updates` server updates have been applied.
         Returns one record per update (virtual time, staleness stats,
-        buffer losses, plus whatever apply_update reports)."""
+        plus whatever apply_update reports).
+
+        ``deadline`` is a *virtual-seconds* budget: at the first event
+        past it the run stops, flushing the partially-filled buffer as
+        one final short update (the consumer pads it to ``goal_count``
+        with zero weights, so the apply shape never changes)."""
         q = EventQueue()
         buffer: List[BufferEntry] = []
         records: List[Dict[str, float]] = []
@@ -235,6 +258,12 @@ class BufferedAsyncScheduler:
                 raise RuntimeError("async scheduler starved: no in-flight "
                                    "clients and buffer below goal_count")
             ev = q.pop()
+            if ev.time > deadline:
+                # out of virtual time: drain the partial buffer as the
+                # final (padded) server update
+                if buffer:
+                    self._flush(buffer, deadline, records)
+                break
             if ev.kind == "failed":
                 self.dropouts += 1
                 self._dispatch(q, ev.time)
@@ -244,20 +273,11 @@ class BufferedAsyncScheduler:
             self.completions += 1
             self.up_bytes_total += int(work["up_bytes"])
             buffer.append(BufferEntry(
-                delta=work["delta"],
+                work=work,
                 weight=float(self.staleness_fn(s)) * float(work["weight"]),
-                staleness=int(s), loss=float(work["loss"])))
+                staleness=int(s)))
             if len(buffer) >= self.goal_count:
-                metrics = self.apply_update(buffer, ev.time, self.version)
-                stale = np.array([e.staleness for e in buffer], np.float64)
-                rec = {"round": len(records),
-                       "virtual_seconds": ev.time,
-                       "loss": float(np.mean([e.loss for e in buffer])),
-                       "staleness_mean": float(stale.mean()),
-                       "staleness_max": float(stale.max())}
-                rec.update(metrics or {})
-                records.append(rec)
-                self.version += 1
+                self._flush(buffer, ev.time, records)
                 buffer = []
             self._dispatch(q, ev.time)
         return records

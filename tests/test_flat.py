@@ -1,0 +1,351 @@
+"""Flat-buffer aggregation subsystem: layout round-trips over every
+freeze spec the core fixtures use, fused flat aggregation vs the old
+tree-path reference, kernel-vs-ref parity (interpret mode), and async
+client lanes reproducing the sequential scheduler's history.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.partition as part
+from repro.core import compress, fedpt
+from repro.core import flat as flat_lib
+from repro.data import synthetic as syn
+from repro.kernels import ref
+from repro.kernels.dp_clip import clip_flat
+from repro.kernels.quantize import fake_quantize_flat
+from repro.models import paper_models as pm
+from repro.nn import basic
+from repro.optim import optimizers as opt_lib
+from repro.sim import devices as dev_lib
+from repro.sim import grid as simgrid
+from repro.sim import scheduler as sched_lib
+
+
+# ---------------------------------------------------------------------------
+# FlatLayout round-trip, across the freeze specs used by the core tests
+
+
+FREEZE_SPECS = {
+    "none": (),
+    "emnist_paper": pm.EMNIST_FREEZE,
+    "conv1": (r"^conv1/",),
+    "dense_gn": (r"^dense1/", r"^gn/"),
+    "bias_only": (r"bias",),
+}
+
+
+@pytest.mark.parametrize("name,spec", sorted(FREEZE_SPECS.items()))
+def test_flat_layout_roundtrip(name, spec):
+    y, z = part.partition(pm.init_emnist_cnn(3), spec)
+    layout = flat_lib.FlatLayout.of(y)
+    assert layout.size % layout.align == 0
+    assert layout.size >= sum(layout.sizes)
+    vec = layout.flatten(y)
+    assert vec.shape == (layout.size,) and vec.dtype == jnp.float32
+    # tree -> vec -> tree is exact (dtype and bits)
+    y2 = layout.unflatten(vec)
+    for (ka, va), (kb, vb) in zip(basic.flatten_params(y),
+                                  basic.flatten_params(y2)):
+        assert ka == kb and va.dtype == vb.dtype
+        assert bool((va == vb).all()), ka
+    # vec -> tree -> vec is exact, including pad slots
+    vec2 = layout.flatten(layout.unflatten(vec))
+    assert bool((vec == vec2).all())
+
+
+def test_flat_layout_blocks_partition_leaves():
+    y, _ = part.partition(pm.init_emnist_cnn(0), pm.EMNIST_FREEZE)
+    layout = flat_lib.FlatLayout.of(y)
+    bl = layout.block_leaf()
+    assert len(bl) == layout.num_blocks
+    # each leaf owns a contiguous run of whole blocks covering its
+    # padded span
+    for lid, pad in enumerate(layout.padded):
+        assert int(np.sum(bl == lid)) * layout.align == pad
+    assert list(bl) == sorted(bl)
+
+
+def test_flat_layout_empty_tree():
+    layout = flat_lib.FlatLayout.of({})
+    assert layout.size == 0
+    assert layout.flatten({}).shape == (0,)
+    assert layout.unflatten(jnp.zeros((0,))) == {}
+
+
+# ---------------------------------------------------------------------------
+# Fused flat aggregation tail vs the old per-leaf tree reference
+
+
+def _client_deltas(seed, clients, spec=pm.EMNIST_FREEZE):
+    y, _ = part.partition(pm.init_emnist_cnn(seed), spec)
+    ks = jax.random.split(jax.random.key(seed), clients)
+    deltas = [jax.tree_util.tree_map(
+        lambda a, k=k: 0.1 * jax.random.normal(k, a.shape, jnp.float32),
+        y) for k in ks]
+    return y, deltas
+
+
+def _tree_aggregate(deltas, w, clip_norm=0.0, bits=0, wsum=None):
+    """The pre-flat aggregation tail, leaf by leaf (the old engine)."""
+    if bits:
+        deltas = [compress.fake_quantize_tree(d, bits) for d in deltas]
+    if clip_norm > 0:
+        clipped = []
+        for d in deltas:
+            nrm = opt_lib.tree_global_norm(d)
+            s = jnp.minimum(1.0, clip_norm / jnp.maximum(nrm, 1e-12))
+            clipped.append(jax.tree_util.tree_map(lambda x: x * s, d))
+        deltas = clipped
+    wsum = jnp.sum(w) if wsum is None else wsum
+    return jax.tree_util.tree_map(
+        lambda *ds: sum(wi * d for wi, d in zip(w, ds)) / wsum, *deltas)
+
+
+@pytest.mark.parametrize("clip_norm,bits", [(0.0, 0), (0.5, 0), (0.0, 8),
+                                            (0.5, 8)])
+def test_flat_aggregation_matches_tree_reference(clip_norm, bits):
+    C = 5
+    y, deltas = _client_deltas(0, C)
+    layout = flat_lib.FlatLayout.of(y)
+    w = jnp.asarray([1.0, 2.0, 0.5, 1.5, 3.0])
+
+    mat = jnp.stack([layout.flatten(d) for d in deltas])
+    if bits:
+        mat = flat_lib.fake_quantize(mat, layout, bits)
+    weff = w
+    if clip_norm > 0:
+        norms = flat_lib.row_norms(mat, layout.align)
+        weff = w * jnp.minimum(1.0, clip_norm / jnp.maximum(norms, 1e-12))
+    flat_delta = flat_lib.weighted_mean(mat, weff, jnp.sum(w))
+    got = layout.unflatten(flat_delta, dtype=jnp.float32)
+
+    want = _tree_aggregate(deltas, w, clip_norm=clip_norm, bits=bits)
+    for (ka, va), (kb, vb) in zip(basic.flatten_params(got),
+                                  basic.flatten_params(want)):
+        assert ka == kb
+        np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                                   rtol=1e-5, atol=1e-7, err_msg=ka)
+
+
+def test_flat_quantize_matches_tree_bitwise():
+    y, deltas = _client_deltas(1, 1)
+    layout = flat_lib.FlatLayout.of(y)
+    got = flat_lib.fake_quantize(layout.flatten(deltas[0]), layout, 8)
+    want = layout.flatten(compress.fake_quantize_tree(deltas[0], 8))
+    assert bool((got == want).all())
+
+
+def test_clip_delta_flat_path_matches_tree():
+    y, deltas = _client_deltas(2, 1)
+    d = deltas[0]
+    clipped, nrm = fedpt.clip_delta(d, 0.25)
+    ref_norm = opt_lib.tree_global_norm(d)
+    np.testing.assert_allclose(float(nrm), float(ref_norm), rtol=1e-6)
+    s = min(1.0, 0.25 / max(float(ref_norm), 1e-12))
+    for (ka, va), (kb, vb) in zip(basic.flatten_params(clipped),
+                                  basic.flatten_params(d)):
+        np.testing.assert_allclose(np.asarray(va), np.asarray(vb) * s,
+                                   rtol=1e-5, atol=1e-8)
+    n2 = opt_lib.tree_global_norm(clipped)
+    assert float(n2) <= 0.25 * (1 + 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels (interpret mode) vs the pure-JAX fallbacks
+
+
+def test_quantize_kernel_matches_ref():
+    y, deltas = _client_deltas(3, 1)
+    layout = flat_lib.FlatLayout.of(y)
+    x = layout.flatten(deltas[0])
+    bl = layout.block_leaf()
+    got = fake_quantize_flat(x, bl, len(layout.sizes), block=layout.align,
+                             interpret=True)
+    want = ref.fake_quantize_flat_ref(x, bl, bits=8, block=layout.align)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6,
+                               atol=1e-8)
+
+
+def test_clip_flat_kernel_matches_ref():
+    x = jax.random.normal(jax.random.key(0), (5000,), jnp.float32)
+    got, gn = clip_flat(x, 1.5, block=1024, interpret=True)
+    want, wn = ref.flat_clip_ref(x, 1.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-6,
+                               atol=2e-7)
+    np.testing.assert_allclose(float(gn), float(wn), rtol=1e-6)
+
+
+def test_row_sumsq_ref_matches_dense():
+    x = jax.random.normal(jax.random.key(1), (3, 4096), jnp.float32)
+    got = ref.row_sumsq_ref(x, chunk=1024)
+    want = jnp.sum(x * x, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+    # non-multiple falls back to a single chunk
+    got2 = ref.flat_sumsq_ref(x[0, :4097 - 1024], chunk=1024)
+    np.testing.assert_allclose(
+        float(got2), float(jnp.sum(x[0, :4097 - 1024] ** 2)), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Async client lanes == the sequential scheduler, event for event
+
+
+def _tiny_ds(n_clients=10):
+    return syn.make_federated_images(n_clients, 24, (8, 8, 1), 4, seed=0,
+                                     test_examples=16)
+
+
+def _tiny_init(seed):
+    return {"dense": basic.init_dense(seed, "dense", 64, 4, jnp.float32,
+                                      bias=True)}
+
+
+def _tiny_loss(params, b):
+    x = b["images"].reshape(b["images"].shape[0], -1)
+    logits = basic.dense(x, params["dense"])
+    lp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(lp, b["labels"][:, None], 1)), {}
+
+
+RC = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0)
+
+
+@pytest.mark.parametrize("fleet", ["uniform", "pareto-mobile"])
+def test_async_lanes_match_sequential_scheduler(fleet):
+    ds = _tiny_ds()
+    runs = {}
+    for lanes in (0, None, 2):
+        gc = simgrid.GridConfig(mode="async", fleet=fleet, concurrency=5,
+                                goal_count=3, lanes=lanes)
+        runs[lanes] = simgrid.run_grid(_tiny_init, _tiny_loss, ds, RC, 6,
+                                       grid=gc, seed=2)
+    seq = runs[0]
+    for lanes in (None, 2):
+        lane = runs[lanes]
+        # the virtual clock and staleness bookkeeping are EXACTLY the
+        # sequential scheduler's — lanes only change device dispatch
+        for hs, hl in zip(seq.history, lane.history):
+            assert hs["virtual_seconds"] == hl["virtual_seconds"]
+            assert hs["staleness_mean"] == hl["staleness_mean"]
+            assert hs["staleness_max"] == hl["staleness_max"]
+            assert hs["loss"] == pytest.approx(hl["loss"], rel=1e-5)
+        assert seq.scheduler_stats == lane.scheduler_stats
+        assert seq.comm.measured_up_bytes == lane.comm.measured_up_bytes
+        for (ka, va), (kb, vb) in zip(basic.flatten_params(seq.y),
+                                      basic.flatten_params(lane.y)):
+            np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                                       rtol=1e-5, atol=1e-7, err_msg=ka)
+
+
+def test_async_deadline_drains_partial_buffer():
+    """A virtual-time budget ends the run with one short final flush,
+    which the grid pads to goal_count (zero weights) — exercising the
+    fixed-shape apply on a genuinely partial buffer."""
+    ds = _tiny_ds()
+    full = simgrid.run_grid(_tiny_init, _tiny_loss, ds, RC, 6,
+                            grid=simgrid.GridConfig(
+                                mode="async", concurrency=4, goal_count=3),
+                            seed=2)
+    # cut the budget between the 2nd and 3rd updates of the full run
+    cut = (full.history[1]["virtual_seconds"]
+           + full.history[2]["virtual_seconds"]) / 2.0
+    gc = simgrid.GridConfig(mode="async", concurrency=4, goal_count=3,
+                            async_deadline=cut)
+    res = simgrid.run_grid(_tiny_init, _tiny_loss, ds, RC, 6, grid=gc,
+                           seed=2)
+    assert len(res.history) == 3            # 2 full flushes + the drain
+    assert res.history[-1]["virtual_seconds"] == cut
+    assert np.isfinite(res.history[-1]["loss"])
+    # the un-cut prefix is identical to the unconstrained run
+    for a, b in zip(full.history[:2], res.history[:2]):
+        assert a["virtual_seconds"] == b["virtual_seconds"]
+        assert a["loss"] == b["loss"]
+
+
+def test_scheduler_deadline_partial_flush_unit():
+    """Scheduler-level: the drain flush hands apply_update FEWER than
+    goal_count entries, at exactly the deadline time."""
+    fleet = dev_lib.Fleet(name="t", profiles=[dev_lib.DeviceProfile(
+        downlink_bps=1e6, uplink_bps=1e6, compute_multiplier=1.0)] * 2)
+    applied = []
+
+    def run_client(cid, version):
+        return {"weight": 1.0, "up_bytes": 0, "loss": 0.0}
+
+    def apply_update(entries, now, version):
+        applied.append((len(entries), now))
+        return {}
+
+    sched = sched_lib.BufferedAsyncScheduler(
+        fleet=fleet, concurrency=2, goal_count=4,
+        staleness_fn=lambda s: 1.0, sample_cid=lambda rng: 0,
+        run_client=run_client, apply_update=apply_update, down_bytes=0,
+        compute_seconds=1.0, rng=np.random.default_rng(0))
+    # completions land pairwise at t=1, 2, 3...; goal_count 4 would
+    # first fill at t=2, so a 1.5s budget forces a 2-entry drain
+    records = sched.run(10, deadline=1.5)
+    assert applied == [(2, 1.5)]            # partial final flush only
+    assert records[-1]["virtual_seconds"] == 1.5
+    assert len(records) == 1
+
+
+def test_buffered_apply_padded_flush_does_not_retrace():
+    """A short (drained) final buffer is padded to goal_count with zero
+    weights: same trace, same result as an explicit short-shape apply."""
+    y, _ = part.partition(_tiny_init(0), ())
+    layout = flat_lib.FlatLayout.of(y)
+    sopt = opt_lib.sgd(1.0)
+    traces = {"n": 0}
+
+    def counting_apply(y, ss, deltas, weights):
+        traces["n"] += 1
+        return fedpt.make_buffered_apply(sopt)(y, ss, deltas, weights)
+
+    apply_fn = jax.jit(counting_apply)
+    K = 4
+    ks = jax.random.split(jax.random.key(0), K)
+    rows = jnp.stack([0.01 * jax.random.normal(k, (layout.size,)) for k in ks])
+    w = jnp.asarray([1.0, 2.0, 1.0, 0.5])
+
+    y1, ss1, _ = apply_fn(y, sopt.init(y), rows, w)
+    # "partial" flush of 2 entries padded to K with zero weight
+    rows_pad = rows.at[2:].set(0.0)
+    w_pad = jnp.asarray([1.0, 2.0, 0.0, 0.0])
+    y2, ss2, _ = apply_fn(y, sopt.init(y), rows_pad, w_pad)
+    assert traces["n"] == 1, "fixed goal_count shape must not re-trace"
+
+    # zero-weight padding is inert: equals the true 2-entry mean
+    flat_ref = flat_lib.weighted_mean(rows[:2], w_pad[:2], jnp.sum(w_pad[:2]))
+    want = jax.tree_util.tree_map(
+        lambda a, d: a + d, y, layout.unflatten(flat_ref, jnp.float32))
+    for (ka, va), (kb, vb) in zip(basic.flatten_params(y2),
+                                  basic.flatten_params(want)):
+        np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                                   rtol=1e-6, atol=1e-8, err_msg=ka)
+
+
+def test_sync_round_engine_unchanged_with_flat_tail():
+    """Flat tail == old tree tail on the jitted round engine (weighted
+    mean bit-for-bit; clip/quant within fp tolerance)."""
+    ds = _tiny_ds()
+    rc = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0)
+    res = simgrid.run_grid(_tiny_init, _tiny_loss, ds, rc, 3, seed=5)
+    # reference: explicit per-leaf sequential aggregation of round 0
+    y, frozen = part.partition(_tiny_init(5), ())
+    rng = np.random.default_rng(5 + 77)
+    cids = syn.sample_cohort(rng, ds.num_clients, 4)
+    batch, w = syn.cohort_batch(ds, cids, 2, 8, rng)
+    cu = fedpt.make_client_update(_tiny_loss, opt_lib.sgd(0.1), 2)
+    deltas = [cu(y, frozen, {k: v[i] for k, v in batch.items()})[0]
+              for i in range(4)]
+    agg = _tree_aggregate(deltas, jnp.asarray(w))
+    y1 = jax.tree_util.tree_map(lambda a, d: a + d, y, agg)
+    round_fn, sopt = fedpt.make_round_fn(_tiny_loss, rc)
+    y1_grid, _, _ = jax.jit(round_fn)(y, sopt.init(y), frozen, batch,
+                                      jnp.asarray(w), jax.random.key(0))
+    for (ka, va), (kb, vb) in zip(basic.flatten_params(y1_grid),
+                                  basic.flatten_params(y1)):
+        np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                                   rtol=2e-5, atol=2e-6, err_msg=ka)
