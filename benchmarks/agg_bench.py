@@ -20,9 +20,17 @@ back — the engine unflattens once per round in both worlds).
 
 Emits the harness's ``name,us_per_call,derived`` CSV rows and writes
 ``BENCH_agg.json`` next to the repo root. ``--smoke`` runs a tiny cell
-once and asserts tree/flat agreement instead of timing (CI tier-1).
+per pipeline, asserts tree/flat agreement AND times it; with ``--gate
+BENCH_agg.json`` the smoke timings become a CI regression gate — each
+pipeline's flat_us must stay within ``--gate-tolerance`` (default 3x,
+generous on purpose: it catches order-of-magnitude regressions, not
+shared-runner noise) of the committed baseline's ``smoke`` section.
+``--fresh-out`` writes the fresh smoke numbers as JSON (uploaded as a
+workflow artifact by CI).
 
-    PYTHONPATH=src python -m benchmarks.agg_bench [--smoke] [--reps 5]
+    PYTHONPATH=src python -m benchmarks.agg_bench [--reps 5]
+    PYTHONPATH=src python -m benchmarks.agg_bench --smoke \
+        [--gate BENCH_agg.json] [--gate-tolerance 3.0] [--fresh-out f.json]
 """
 from __future__ import annotations
 
@@ -177,25 +185,93 @@ def run_cell(pipeline: str, params: int, clients: int, reps: int,
             "flat_us": t_flat * 1e6, "speedup": t_tree / t_flat}
 
 
+def run_smoke(reps: int):
+    cells = []
+    for pipeline in ("mean", "clip", "dp", "full"):
+        cell = run_cell(pipeline, 300_000, 4, reps=reps, check=True)
+        cells.append(cell)
+        print(f"agg/smoke/{pipeline},{cell['flat_us']:.0f},"
+              f"speedup={cell['speedup']:.2f};leaves={cell['leaves']}")
+        sys.stdout.flush()
+    print("smoke OK: flat == tree on every pipeline")
+    return cells
+
+
+def gate_smoke(cells, baseline_path: str, tolerance: float,
+               floor_us: float = 20_000.0) -> int:
+    """Regression gate: fresh smoke flat_us vs the committed baseline.
+    Returns the number of violations (0 = pass).
+
+    The limit is ``max(tolerance * baseline, floor_us)``: smoke cells
+    run ~1-20ms, where shared-runner scheduling noise alone spans a few
+    x — the absolute floor keeps sub-floor jitter from flaking the gate
+    while an order-of-magnitude regression (e.g. a path that silently
+    falls back to per-leaf sweeps) still blows through it."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    ref = {c["pipeline"]: c for c in base.get("smoke", [])}
+    if not ref:
+        raise SystemExit(
+            f"bench gate ERROR: {baseline_path} has no 'smoke' section — "
+            "not a performance regression; regenerate the baseline with "
+            "--smoke --fresh-out (or the full bench) and commit it")
+    bad = 0
+    for c in cells:
+        b = ref.get(c["pipeline"])
+        if b is None:
+            raise SystemExit(
+                f"bench gate ERROR: baseline {baseline_path} is missing "
+                f"pipeline {c['pipeline']!r} — not a performance "
+                "regression; regenerate and commit the baseline")
+        limit = max(tolerance * b["flat_us"], floor_us)
+        verdict = "ok" if c["flat_us"] <= limit else "REGRESSION"
+        print(f"gate/{c['pipeline']}: flat {c['flat_us']:.0f}us vs "
+              f"baseline {b['flat_us']:.0f}us (limit {limit:.0f}us = "
+              f"max({tolerance:g}x, {floor_us:.0f}us floor)) -> {verdict}")
+        if c["flat_us"] > limit:
+            bad += 1
+    return bad
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny cells, correctness asserts, no JSON")
+                    help="tiny cells: correctness asserts + quick timings")
     ap.add_argument("--reps", type=int, default=4)
+    ap.add_argument("--gate", default=None, metavar="BASELINE_JSON",
+                    help="with --smoke: fail if any pipeline's flat_us "
+                         "exceeds gate-tolerance x the baseline's smoke "
+                         "timing")
+    ap.add_argument("--gate-tolerance", type=float, default=3.0)
+    ap.add_argument("--gate-floor-us", type=float, default=20_000.0,
+                    help="absolute per-cell limit floor (container noise)")
+    ap.add_argument("--fresh-out", default=None, metavar="JSON",
+                    help="with --smoke: write the fresh smoke cells here")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_agg.json"))
     args = ap.parse_args(argv)
 
     if args.smoke:
-        for pipeline in ("mean", "clip", "dp", "full"):
-            cell = run_cell(pipeline, 300_000, 4, reps=1, check=True)
-            print(f"agg/smoke/{pipeline},{cell['flat_us']:.0f},"
-                  f"speedup={cell['speedup']:.2f};leaves={cell['leaves']}")
-            sys.stdout.flush()
-        print("smoke OK: flat == tree on every pipeline")
+        cells = run_smoke(reps=max(1, min(args.reps, 3)))
+        if args.fresh_out:
+            with open(args.fresh_out, "w") as f:
+                json.dump({"backend": jax.default_backend(),
+                           "devices": jax.device_count(),
+                           "smoke": cells}, f, indent=1)
+            print(f"wrote {args.fresh_out}")
+        if args.gate:
+            bad = gate_smoke(cells, args.gate, args.gate_tolerance,
+                             floor_us=args.gate_floor_us)
+            if bad:
+                sys.exit(f"bench gate FAILED: {bad} pipeline(s) regressed "
+                         f"past {args.gate_tolerance:g}x baseline")
+            print("bench gate passed")
         return
 
+    # the full bench also records the smoke cells, so a regenerated
+    # BENCH_agg.json always carries the baseline the CI gate compares to
+    smoke_cells = run_smoke(reps=args.reps)
     cells = []
     for params in (1_000_000, 4_000_000, 10_000_000):
         for clients in (8, 16):
@@ -228,6 +304,7 @@ def main(argv=None):
     out = {"backend": jax.default_backend(),
            "devices": jax.device_count(),
            "clip": CLIP, "sigma": SIGMA,
+           "smoke": smoke_cells,
            "headline": head,
            "paper_scale": paper,
            "best_10M_16c": _head([best]),

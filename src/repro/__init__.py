@@ -1,0 +1,15 @@
+"""FedPT reproduction package.
+
+One process-wide jax config knob lives here: sharding-invariant PRNG.
+The simulation grid executes the same program on one device or over a
+``launch/mesh.py`` mesh and promises histories that agree to fp32
+round-off — which requires random draws (DP noise above all) whose
+values do not depend on how the output array is partitioned. The legacy
+threefry lowering is not partition-invariant; the partitionable
+implementation is, at the cost of changing the raw stream (PRNG-derived
+trajectories differ from pre-mesh versions of this repo, exactly like
+PR 2's one-key-per-flat-buffer change did).
+"""
+import jax
+
+jax.config.update("jax_threefry_partitionable", True)

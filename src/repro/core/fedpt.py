@@ -304,27 +304,61 @@ def make_lane_step(loss_fn: Callable, rc: RoundConfig, lane: int,
     return lane_step
 
 
-def make_buffered_apply(server_opt: opt_lib.Optimizer):
+def make_buffered_apply(server_opt: opt_lib.Optimizer,
+                        flush_dp=None,
+                        constrain_flat_fn: Optional[Callable] = None):
     """Server-side flush of an async buffer: apply(y, server_state,
-    flat_deltas, weights) with ``flat_deltas`` the (K, size) stack of
-    flat client deltas and weights (K,) already including the staleness
-    factor (w_i = staleness_fn(s_i) * p_i). Weighted-mean as one dot,
-    then ServerOpt on the pseudo-gradient, mirroring the sync engine.
+    flat_deltas, weights[, rng]) with ``flat_deltas`` the (K, size) stack
+    of flat client deltas and weights (K,) already including the
+    staleness factor (w_i = staleness_fn(s_i) * p_i). Weighted-mean as
+    one dot, then ServerOpt on the pseudo-gradient, mirroring the sync
+    engine.
 
     K is a fixed shape: short buffers (e.g. a drained final flush) are
     padded with zero-weight rows by the caller, which fall out of the
     weighted mean — so partial flushes never re-trace.
+
+    ``flush_dp`` (a :class:`repro.core.dp.FlushDPConfig`) turns on
+    per-flush DP: the mean uses the FIXED ``goal_count`` denominator —
+    sigma is calibrated once per flush and zero-weight padding rows of a
+    drained buffer change neither the denominator nor the noise scale —
+    and ``rng`` (one key per flush) drives ONE Gaussian draw over the
+    flat buffer. Client deltas must arrive clipped (``make_client_step``
+    does this when ``rc.dp_clip_norm > 0``) with staleness weights
+    <= 1, so per-flush sensitivity is ``clip_norm / goal_count``.
+
+    ``constrain_flat_fn`` (see ``launch/sharding.flat_constrainer``)
+    pins the buffer's K axis to the data mesh axes and its size axis to
+    "model": the weighted mean then reduces the sharded buffer in place
+    (a cross-data-axis collective) — the K rows are never gathered onto
+    one device.
     """
 
-    def apply_fn(y, server_state, flat_deltas, weights):
+    def apply_fn(y, server_state, flat_deltas, weights, rng=None):
         layout = flat_lib.FlatLayout.of(y)
-        wsum = jnp.maximum(jnp.sum(weights), 1e-12)
+        if constrain_flat_fn is not None:
+            flat_deltas = constrain_flat_fn(flat_deltas, clients=True)
+        if flush_dp is not None:
+            wsum = jnp.asarray(float(flush_dp.goal_count), jnp.float32)
+        else:
+            wsum = jnp.maximum(jnp.sum(weights), 1e-12)
         flat_delta = flat_lib.weighted_mean(flat_deltas, weights, wsum)
+        if constrain_flat_fn is not None:
+            flat_delta = constrain_flat_fn(flat_delta, clients=False)
+        noised = flush_dp is not None and flush_dp.noise_multiplier > 0
+        if noised:
+            if rng is None:
+                raise ValueError("flush DP noise needs a per-flush rng key")
+            flat_delta = flat_lib.add_noise(flat_delta, flush_dp.sigma, rng)
         delta = layout.unflatten(flat_delta, dtype=jnp.float32)
         neg = jax.tree_util.tree_map(lambda d: -d, delta)
         y_new, server_state = server_opt.update(y, neg, server_state)
-        return y_new, server_state, {"delta_norm": jnp.sqrt(
-            flat_lib.sumsq(flat_delta, layout.align))}
+        # with noise on pad slots, the flat vector's norm overstates the
+        # model update — report the unflattened norm instead (sync engine
+        # does the same)
+        norm = (opt_lib.tree_global_norm(delta) if noised
+                else jnp.sqrt(flat_lib.sumsq(flat_delta, layout.align)))
+        return y_new, server_state, {"delta_norm": norm}
 
     return apply_fn
 

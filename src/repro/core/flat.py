@@ -195,6 +195,22 @@ def weighted_mean(mat: jnp.ndarray, weights: jnp.ndarray,
                       mat.astype(jnp.float32)) / wsum
 
 
+def pad_rows(mat: jnp.ndarray, rows: int) -> jnp.ndarray:
+    """Pad a (k, size) stack to (rows, size) with zero rows (k <= rows).
+
+    The async grid's drained final flush uses this to keep the buffered
+    apply at its fixed ``goal_count`` shape: padding rows carry zero
+    weight, so they fall out of the weighted mean — and under per-flush
+    DP the fixed-denominator mean and noise sigma are unchanged by them.
+    """
+    if mat.shape[0] > rows:
+        raise ValueError(f"cannot pad {mat.shape[0]} rows down to {rows}")
+    if mat.shape[0] == rows:
+        return mat
+    pad = jnp.zeros((rows - mat.shape[0],) + mat.shape[1:], mat.dtype)
+    return jnp.concatenate([mat, pad])
+
+
 def add_noise(vec: jnp.ndarray, sigma: float, rng) -> jnp.ndarray:
     """Add N(0, sigma^2) to the flat vector: ONE PRNG call instead of
     one per leaf. Pad slots receive noise too — ``unflatten`` discards

@@ -89,10 +89,13 @@ def run_one(arch: str, shape: str, multi_pod: bool = False,
     if mesh is None:
         mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
+    # jax.set_mesh only exists on newer jax; entering the Mesh object is
+    # the 0.4.x-compatible way to make it the ambient mesh
+    set_mesh = getattr(jax, "set_mesh", None) or (lambda m: m)
     try:
         job = specs_lib.build_job(arch, shape, mesh,
                                   cfg_override=cfg_override)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             jitted = jax.jit(job.fn, in_shardings=job.in_shardings)
             lowered = jitted.lower(*job.args)
             t_lower = time.time() - t0
@@ -100,6 +103,9 @@ def run_one(arch: str, shape: str, multi_pod: bool = False,
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            # older jax returns a one-element list of the per-device dict
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
         coll = collective_stats(hlo)
         res = {
@@ -110,7 +116,12 @@ def run_one(arch: str, shape: str, multi_pod: bool = False,
                 "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
                 "output_bytes": getattr(mem, "output_size_in_bytes", None),
                 "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
-                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+                # peak_memory_in_bytes only exists on TPU backends; the
+                # arg+out+temp sum is the CPU approximation
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None)
+                or (getattr(mem, "argument_size_in_bytes", 0)
+                    + getattr(mem, "output_size_in_bytes", 0)
+                    + getattr(mem, "temp_size_in_bytes", 0)) or None,
             },
             "cost": {k: cost.get(k) for k in
                      ("flops", "bytes accessed", "transcendentals")

@@ -53,5 +53,36 @@ def data_axes(mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+# Named meshes the simulation grid accepts (``GridConfig.mesh``). Debug
+# presets exist so the multi-device CI job (8 forced host devices) can
+# exercise the sharded code paths without the 256-chip production shape.
+MESH_PRESETS = {
+    "single": make_single_device_mesh,
+    "debug": make_debug_mesh,                            # (data=2, model=2)
+    "debug-pod": lambda: make_debug_mesh(
+        (2, 2, 2), ("pod", "data", "model")),            # 8 devices
+    "production": make_production_mesh,
+    "production-multipod": lambda: make_production_mesh(multi_pod=True),
+}
+
+
+def resolve_mesh(spec):
+    """``None`` | preset name | mesh object -> mesh object (or ``None``).
+
+    This is the one place grid/spec configs turn a *description* of a
+    mesh into device state, so configs stay picklable and importing a
+    config never touches jax devices."""
+    if spec is None:
+        return None
+    if isinstance(spec, str):
+        try:
+            factory = MESH_PRESETS[spec]
+        except KeyError:
+            raise ValueError(f"unknown mesh preset {spec!r}; options: "
+                             f"{sorted(MESH_PRESETS)}") from None
+        return factory()
+    return spec
+
+
 def axis_size(mesh, name: str) -> int:
     return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)

@@ -26,6 +26,7 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.launch import mesh as mesh_lib
 from repro.nn import basic
 
 
@@ -132,6 +133,32 @@ def param_shardings(params_struct, cfg: ModelConfig, mesh):
 def replicated(tree, mesh):
     return jax.tree_util.tree_map(
         lambda _: NamedSharding(mesh, P()), tree)
+
+
+def flat_constrainer(mesh):
+    """``constrain_flat_fn(arr, clients: bool)`` for this mesh — the one
+    sharding rule of the flat aggregation plane, shared by the dry-run
+    specs (``launch/specs.py``) and the simulation grid
+    (``sim/grid.py``) so the two cannot drift.
+
+    The ``(C, size)`` client-delta buffer pins its client/lane axis to
+    the data axes (``("pod", "data")`` when both exist) and its size
+    axis to ``"model"`` (GSPMD pads uneven splits), so a tensor-parallel
+    mesh never materializes C full-size fp32 vectors per data shard; the
+    aggregated ``(size,)`` vector stays model-sharded until ``unflatten``
+    reshards each leaf to its parameter layout. The weighted mean's
+    client-axis reduction then lowers to the cross-data-axis collective
+    directly on the sharded buffer — no gather of the K rows first."""
+    dax = mesh_lib.data_axes(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+    client_axes = dax if len(dax) > 1 else (dax[0] if dax else None)
+
+    def constrain_flat(arr, clients: bool):
+        spec = P(client_axes, model) if clients else P(model)
+        return jax.lax.with_sharding_constraint(
+            arr, NamedSharding(mesh, spec))
+
+    return constrain_flat
 
 
 def batch_sharding(tree_struct, mesh, batch_axes=("pod", "data"),

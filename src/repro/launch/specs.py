@@ -154,18 +154,9 @@ def make_train_step(cfg: ModelConfig, mesh, y_struct):
                 x, NamedSharding(mesh, spec))
         return jax.tree_util.tree_map(one, tree, shard_y)
 
-    def constrain_flat(arr, clients: bool):
-        # the flat delta buffer: (C, size) client deltas shard their
-        # client axis over the data mesh axes and the size axis over
-        # "model" (GSPMD pads uneven splits), so a tensor-parallel mesh
-        # never materializes C full-size fp32 vectors per data shard;
-        # the aggregated (size,) vector stays model-sharded until
-        # unflatten reshards each leaf to its parameter layout
-        model = "model" if "model" in mesh.axis_names else None
-        spec = (P(dax if len(dax) > 1 else dax[0], model) if clients
-                else P(model))
-        return jax.lax.with_sharding_constraint(
-            arr, NamedSharding(mesh, spec))
+    # the flat delta buffer's sharding rule lives in launch/sharding.py
+    # (shared with the simulation grid's mesh execution path)
+    constrain_flat = shard_lib.flat_constrainer(mesh)
 
     def loss_fn(params, mb):
         return dlm.train_loss(params, cfg, mb)

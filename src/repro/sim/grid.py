@@ -14,6 +14,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
+from collections import Counter
 from typing import Any, Callable, Dict, List, Optional, Union
 
 import jax
@@ -21,8 +22,11 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core.partition as part
-from repro.core import comm, fedpt
+from repro.core import comm, dp as dp_lib, fedpt
+from repro.core import flat as flat_lib
 from repro.data import synthetic as syn
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as shard_lib
 from repro.sim import devices as dev_lib
 from repro.sim import scheduler as sched_lib
 from repro.sim import wire
@@ -54,6 +58,17 @@ class GridConfig:
     # past it ends the run, flushing the partial buffer as one final
     # short update (padded to goal_count with zero weights)
     async_deadline: float = math.inf
+    # --- mesh execution ---
+    # None = single-device dispatch. A launch/mesh.py preset name
+    # ("single", "debug", "debug-pod", "production", ...) or a mesh
+    # object shards the grid's device work end-to-end: lane-batched
+    # client steps run data-parallel with the lane axis on the mesh's
+    # ("pod", "data") axes and the flat delta's size axis on "model",
+    # and the buffered apply reduces the sharded (K, size) buffer in
+    # place (no gather). The virtual clock, staleness bookkeeping and
+    # wire metering are mesh-independent; histories match the
+    # single-device run to fp32 round-off.
+    mesh: Any = None
     # --- rng plumbing ---
     fleet_seed: int = 0                     # profile sampling
     device_seed: int = 13                   # availability/dropout/latency
@@ -70,6 +85,9 @@ class GridResult:
     fleet: dev_lib.Fleet
     mode: str
     scheduler_stats: Dict[str, int]
+    # per-flush DP accounting (async mode with dp_noise_multiplier > 0):
+    # flushes, padded_flushes, sigma, noise_multiplier, epsilon, delta
+    dp: Optional[Dict[str, float]] = None
 
 
 def num_clients(ds) -> int:
@@ -135,7 +153,10 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
 def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
               fleet, report, down_bytes, up_bytes, compute_seconds,
               data_rng, dev_rng, seed, data_kind, eval_every, eval_fn, log):
-    round_fn, sopt = fedpt.make_round_fn(loss_fn, rc, server_opt=server_opt)
+    mesh = mesh_lib.resolve_mesh(grid.mesh)
+    constrain_flat = shard_lib.flat_constrainer(mesh) if mesh else None
+    round_fn, sopt = fedpt.make_round_fn(loss_fn, rc, server_opt=server_opt,
+                                         constrain_flat_fn=constrain_flat)
     round_fn = jax.jit(round_fn, donate_argnums=(0, 1))
     sstate = sopt.init(y)
     N = num_clients(dataset)
@@ -219,21 +240,47 @@ class _LaneCell:
 def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                fleet, report, down_bytes, up_bytes, compute_seconds,
                data_rng, dev_rng, seed, data_kind, eval_every, eval_fn, log):
-    if rc.dp_noise_multiplier > 0:
-        raise NotImplementedError(
-            "DP noise is not implemented for the async grid: buffered "
-            "aggregation needs its own noise calibration (per-flush, fixed "
-            "goal_count denominator). Use mode='sync' for DP runs.")
     if server_opt is None:
         server_opt = fedpt.resolve_server_opt(rc)
+    # per-flush DP: the flush (goal_count buffered deltas, fixed
+    # denominator) is the unit of composition — see core/dp.py
+    flush_dp = accountant = None
+    if rc.dp_noise_multiplier > 0:
+        if rc.dp_clip_norm <= 0:
+            raise ValueError("async DP noise needs dp_clip_norm > 0 "
+                             "(per-client clipping bounds the flush "
+                             "sensitivity)")
+        flush_dp = dp_lib.FlushDPConfig(
+            clip_norm=rc.dp_clip_norm,
+            noise_multiplier=rc.dp_noise_multiplier,
+            goal_count=grid.goal_count)
+        accountant = dp_lib.FlushAccountant(flush_dp)
+    mesh = mesh_lib.resolve_mesh(grid.mesh)
+    constrain_flat = shard_lib.flat_constrainer(mesh) if mesh else None
     lane = grid.goal_count if grid.lanes is None else int(grid.lanes)
     if lane > 0:
-        lane_step = jax.jit(fedpt.make_lane_step(loss_fn, rc, lane))
+        lane_step = jax.jit(fedpt.make_lane_step(
+            loss_fn, rc, lane, constrain_flat_fn=constrain_flat))
     else:
         client_step = jax.jit(fedpt.make_client_step(loss_fn, rc))
-    apply_fn = jax.jit(fedpt.make_buffered_apply(server_opt),
-                       donate_argnums=(0, 1))
+    apply_fn = jax.jit(fedpt.make_buffered_apply(
+        server_opt, flush_dp=flush_dp, constrain_flat_fn=constrain_flat),
+        donate_argnums=(0, 1))
     staleness_fn = fedpt.get_staleness_fn(grid.staleness, **grid.staleness_kw)
+    if flush_dp is not None:
+        # the per-flush sensitivity bound (clip_norm / goal_count)
+        # assumes aggregation weights in [0, 1]; a custom staleness fn
+        # exceeding 1 would silently invalidate the reported epsilon
+        inner_staleness = staleness_fn
+
+        def staleness_fn(s):
+            w = inner_staleness(s)
+            if not 0.0 <= w <= 1.0:
+                raise ValueError(
+                    f"staleness weight {w} for staleness {s} is outside "
+                    "[0, 1]: per-flush DP calibrates sigma for weights "
+                    "<= 1 (use a non-amplifying staleness_fn with DP)")
+            return w
     N = num_clients(dataset)
     batch_fn = (syn.client_batch_images if data_kind == "images"
                 else syn.client_batch_tokens)
@@ -276,12 +323,13 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         if lane > 0:
             cell = _LaneCell()
             pending.append((b, cell))
-            return {"cell": cell, "weight": w, "up_bytes": up_bytes}
+            return {"cell": cell, "weight": w, "up_bytes": up_bytes,
+                    "cid": cid}
         delta, metrics = client_step(state["y"], frozen, b)
         # loss stays a device scalar: converted once per flush, not per
         # client (a float() here would force a host round-trip per client)
         return {"delta": delta, "loss": metrics["client_loss"],
-                "weight": w, "up_bytes": up_bytes}
+                "weight": w, "up_bytes": up_bytes, "cid": cid}
 
     def entry_arrays(e):
         cell = e.work.get("cell")
@@ -294,17 +342,24 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
             run_pending()
         rows, losses = zip(*[entry_arrays(e) for e in entries])
         wts = [e.weight for e in entries]
-        flat_deltas = jnp.stack(rows)
-        if len(entries) < grid.goal_count:
-            # pad a short (drained) flush to the fixed goal_count shape
-            # with zero-weight rows, so apply_fn never re-traces
-            pad = grid.goal_count - len(entries)
-            flat_deltas = jnp.concatenate(
-                [flat_deltas, jnp.zeros((pad,) + flat_deltas.shape[1:],
-                                        flat_deltas.dtype)])
-            wts = wts + [0.0] * pad
-        y_new, ss, m = apply_fn(state["y"], state["sstate"], flat_deltas,
-                                jnp.asarray(wts, jnp.float32))
+        # pad a short (drained) flush to the fixed goal_count shape with
+        # zero-weight rows, so apply_fn never re-traces — and under DP
+        # the fixed-denominator mean and per-flush sigma never change
+        flat_deltas = flat_lib.pad_rows(jnp.stack(rows), grid.goal_count)
+        wts = wts + [0.0] * (grid.goal_count - len(entries))
+        args = (state["y"], state["sstate"], flat_deltas,
+                jnp.asarray(wts, jnp.float32))
+        if flush_dp is not None:
+            # one PRNG key per flush, from the same stream family as the
+            # sync engine's per-round keys
+            args += (jax.random.key(seed * 100_003 + state["applied"]),)
+            # dispatch samples clients WITH replacement, so one client
+            # may own several rows of this flush; the accountant scales
+            # that flush's sensitivity by the observed multiplicity
+            counts = Counter(e.work["cid"] for e in entries)
+            accountant.record_flush(len(entries),
+                                    multiplicity=max(counts.values()))
+        y_new, ss, m = apply_fn(*args)
         state["y"], state["sstate"] = y_new, ss
         # ONE host sync per flush for the buffered losses
         out = {"loss": float(jnp.mean(jnp.stack(losses))),
@@ -337,4 +392,5 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
     return GridResult(y=state["y"], frozen=frozen, history=history,
                       comm=report, seconds_per_round=spr,
                       virtual_seconds=vt, fleet=fleet, mode="async",
-                      scheduler_stats=stats)
+                      scheduler_stats=stats,
+                      dp=accountant.summary() if accountant else None)

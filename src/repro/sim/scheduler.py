@@ -230,8 +230,12 @@ class BufferedAsyncScheduler:
     def _flush(self, buffer, now: float, records) -> None:
         metrics = self.apply_update(buffer, now, self.version)
         stale = np.array([e.staleness for e in buffer], np.float64)
+        # buffer_fill < goal_count only for the deadline-drained final
+        # flush (the consumer pads it back to the fixed apply shape);
+        # recorded so DP audits and tests can see the padding happened
         rec = {"round": len(records),
                "virtual_seconds": now,
+               "buffer_fill": float(len(buffer)),
                "staleness_mean": float(stale.mean()),
                "staleness_max": float(stale.max())}
         rec.update(metrics or {})

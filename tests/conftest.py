@@ -7,6 +7,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 import pytest
 
+# hypothesis is a pinned CI dep but not guaranteed in every container;
+# skip the property-test modules (not the whole collection) without it
+try:
+    import hypothesis  # noqa: F401
+    collect_ignore = []
+except ImportError:
+    collect_ignore = ["test_attention.py", "test_dp.py",
+                      "test_fedpt_core.py", "test_kernels.py",
+                      "test_optim_data.py"]
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -85,3 +85,96 @@ def test_noise_energy_scales_with_trainable_dim():
     ef = sum(float(jnp.sum(x ** 2)) for x in jax.tree_util.tree_leaves(nf))
     ep = sum(float(jnp.sum(x ** 2)) for x in jax.tree_util.tree_leaves(np_))
     assert ep < ef / 5.0
+
+
+# ---------------------------------------------------------------------------
+# Per-flush async DP (FlushDPConfig / FlushAccountant)
+
+
+def test_flush_dp_config_sigma():
+    cfg = dp.FlushDPConfig(clip_norm=0.5, noise_multiplier=2.0,
+                           goal_count=10)
+    assert cfg.sensitivity == pytest.approx(0.05)
+    assert cfg.sigma == pytest.approx(0.1)
+    with pytest.raises(ValueError):
+        dp.FlushDPConfig(clip_norm=0.0, noise_multiplier=1.0, goal_count=5)
+    with pytest.raises(ValueError):
+        dp.FlushDPConfig(clip_norm=1.0, noise_multiplier=1.0, goal_count=0)
+
+
+def test_flush_accountant_composition():
+    cfg = dp.FlushDPConfig(clip_norm=1.0, noise_multiplier=1.13,
+                           goal_count=5)
+    acc = dp.FlushAccountant(cfg)
+    assert acc.epsilon() == 0.0
+    eps = []
+    for t in range(1, 21):
+        acc.record_flush(n_real=5)
+        eps.append(acc.epsilon(1e-5))
+    # epsilon grows monotonically with flushes, sublinearly (RDP)
+    assert all(a < b for a, b in zip(eps, eps[1:]))
+    assert eps[-1] < 20 * eps[0]
+    # more noise -> less epsilon for the same T
+    quiet = dp.FlushAccountant(dp.FlushDPConfig(1.0, 4.0, 5))
+    for _ in range(20):
+        quiet.record_flush(5)
+    assert quiet.epsilon(1e-5) < eps[-1]
+    # z = 0 is unbounded
+    loud = dp.FlushAccountant(dp.FlushDPConfig(1.0, 0.0, 5))
+    loud.record_flush(5)
+    assert loud.epsilon() == float("inf")
+
+
+def test_flush_accountant_multiplicity_scales_sensitivity():
+    """A client owning m rows of one flush moves the mean by m x the
+    single-row sensitivity: the accountant composes m^2 in RDP, so the
+    reported epsilon must exceed the distinct-contributors bound."""
+    cfg = dp.FlushDPConfig(clip_norm=1.0, noise_multiplier=2.0,
+                           goal_count=8)
+    distinct, repeated = dp.FlushAccountant(cfg), dp.FlushAccountant(cfg)
+    for _ in range(10):
+        distinct.record_flush(8, multiplicity=1)
+        repeated.record_flush(8, multiplicity=2)
+    assert repeated.epsilon(1e-5) > distinct.epsilon(1e-5)
+    assert repeated.max_multiplicity == 2
+    with pytest.raises(ValueError):
+        distinct.record_flush(8, multiplicity=0)
+
+
+def test_flush_accountant_padding_spends_same_budget():
+    """A padded (drained) flush is the SAME mechanism — sigma and the
+    per-flush epsilon cost do not depend on the fill."""
+    cfg = dp.FlushDPConfig(clip_norm=1.0, noise_multiplier=2.0,
+                           goal_count=8)
+    a, b = dp.FlushAccountant(cfg), dp.FlushAccountant(cfg)
+    for _ in range(4):
+        a.record_flush(n_real=8)
+        b.record_flush(n_real=2)         # heavily padded flushes
+    assert a.epsilon(1e-5) == b.epsilon(1e-5)
+    assert b.padded_flushes == 4 and a.padded_flushes == 0
+    assert a.summary()["sigma"] == b.summary()["sigma"]
+
+
+def test_buffered_apply_fixed_denominator_and_noise():
+    """make_buffered_apply under flush DP: mean divides by goal_count
+    regardless of weights, and the noise is one sigma-scaled draw."""
+    from repro.core import flat as flat_lib
+    y = {"w": jnp.zeros((300,), jnp.float32)}
+    layout = flat_lib.FlatLayout.of(y)
+    K = 4
+    cfg = dp.FlushDPConfig(clip_norm=1.0, noise_multiplier=0.5,
+                           goal_count=K)
+    apply_fn = fedpt.make_buffered_apply(opt_lib.sgd(1.0), flush_dp=cfg)
+    rows = jnp.stack([layout.flatten({"w": jnp.full((300,), float(i + 1))})
+                      for i in range(K)])
+    w = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+    rng = jax.random.key(0)
+    y2, _, _ = apply_fn(y, opt_lib.sgd(1.0).init(y), rows, w, rng)
+    # mean = (1*1 + 1*2 + 0 + 0) / K = 0.75 on every true slot
+    noise = flat_lib.add_noise(layout.zeros(), cfg.sigma, rng)
+    want = 0.75 + layout.unflatten(noise, jnp.float32)["w"]
+    np.testing.assert_allclose(np.asarray(y2["w"]), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+    # rng is required when noise is on
+    with pytest.raises(ValueError, match="rng"):
+        apply_fn(y, opt_lib.sgd(1.0).init(y), rows, w)

@@ -156,6 +156,7 @@ def test_clip_delta_flat_path_matches_tree():
 # Pallas kernels (interpret mode) vs the pure-JAX fallbacks
 
 
+@pytest.mark.interpret
 def test_quantize_kernel_matches_ref():
     y, deltas = _client_deltas(3, 1)
     layout = flat_lib.FlatLayout.of(y)
@@ -168,6 +169,7 @@ def test_quantize_kernel_matches_ref():
                                atol=1e-8)
 
 
+@pytest.mark.interpret
 def test_clip_flat_kernel_matches_ref():
     x = jax.random.normal(jax.random.key(0), (5000,), jnp.float32)
     got, gn = clip_flat(x, 1.5, block=1024, interpret=True)

@@ -18,6 +18,7 @@ from repro.kernels.swa_attention import swa_attention
 # sliding-window flash attention
 
 
+@pytest.mark.interpret
 @pytest.mark.parametrize("B,H,S,D,window,dtype", [
     (1, 1, 128, 128, 0, jnp.float32),
     (2, 2, 256, 128, 64, jnp.float32),
@@ -39,6 +40,7 @@ def test_swa_attention_matches_oracle(B, H, S, D, window, dtype):
                                np.asarray(want), atol=tol, rtol=tol)
 
 
+@pytest.mark.interpret
 @given(st.integers(1, 3), st.integers(1, 2),
        st.sampled_from([128, 192, 256]), st.sampled_from([0, 32, 100]))
 @settings(max_examples=6, deadline=None)
@@ -54,6 +56,7 @@ def test_swa_attention_property_sweep(B, H, S, window):
                                rtol=3e-5)
 
 
+@pytest.mark.interpret
 def test_swa_window_actually_windows():
     """Row S-1 must ignore keys older than the window."""
     B, H, S, D, W = 1, 1, 256, 128, 64
@@ -74,6 +77,7 @@ def test_swa_window_actually_windows():
 # DP clip-accumulate
 
 
+@pytest.mark.interpret
 @pytest.mark.parametrize("n,clip", [(1000, 0.5), (32768, 3.0),
                                     (100_001, 1.0), (5, 10.0)])
 def test_dp_clip_matches_oracle(n, clip):
@@ -86,6 +90,7 @@ def test_dp_clip_matches_oracle(n, clip):
     np.testing.assert_allclose(float(nrm), float(wn), rtol=1e-6)
 
 
+@pytest.mark.interpret
 @given(st.integers(1, 50_000), st.floats(0.1, 20.0))
 @settings(max_examples=8, deadline=None)
 def test_sumsq_property(n, scale):
@@ -98,6 +103,7 @@ def test_sumsq_property(n, scale):
 # seed_reconstruct
 
 
+@pytest.mark.interpret
 def test_seed_reconstruct_deterministic_and_invariant():
     a = seed_reconstruct(42, 7, (300, 200), 0.05, interpret=True)
     b = seed_reconstruct(42, 7, (300, 200), 0.05, interpret=True)
@@ -110,6 +116,7 @@ def test_seed_reconstruct_deterministic_and_invariant():
     assert bool((a == e).all()), "blocking must not change the stream"
 
 
+@pytest.mark.interpret
 @pytest.mark.parametrize("shape,std", [((1024, 256), 0.02), ((17, 130), 1.0),
                                        ((4096,), 0.5)])
 def test_seed_reconstruct_moments(shape, std):

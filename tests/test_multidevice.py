@@ -1,0 +1,243 @@
+"""Mesh-sharded grid execution (CI `multidevice` job).
+
+These tests need >= 8 visible host devices; the CI job provides them via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (see
+.github/workflows/ci.yml). They assert the tentpole contract: an async
+grid run sharded over a ``launch/mesh.py`` debug mesh reproduces the
+single-device lane run — the virtual clock and staleness bookkeeping
+exactly, losses/params to fp32 round-off — and the per-flush DP path
+keeps its fixed ``goal_count`` denominator and noise scale under
+sharding, zero-weight padding rows included.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.partition as part
+from repro.core import dp as dp_lib
+from repro.core import fedpt
+from repro.core import flat as flat_lib
+from repro.data import synthetic as syn
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as shard_lib
+from repro.nn import basic
+from repro.optim import optimizers as opt_lib
+from repro.sim import grid as simgrid
+
+pytestmark = [
+    pytest.mark.multidevice,
+    pytest.mark.skipif(
+        jax.device_count() < 8,
+        reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8"),
+]
+
+
+def init_fn(seed):
+    return {"dense": basic.init_dense(seed, "dense", 64, 4, jnp.float32,
+                                      bias=True)}
+
+
+def loss_fn(params, b):
+    x = b["images"].reshape(b["images"].shape[0], -1)
+    logits = basic.dense(x, params["dense"])
+    lp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(lp, b["labels"][:, None], 1)), {}
+
+
+def make_ds(n_clients=12):
+    return syn.make_federated_images(n_clients, 30, (8, 8, 1), 4, seed=0,
+                                     test_examples=32)
+
+
+RC = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0)
+RC_DP = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0,
+                          dp_clip_norm=0.5, dp_noise_multiplier=0.4)
+
+
+def assert_histories_match(ref, got, keys_exact=("virtual_seconds",
+                                                "buffer_fill",
+                                                "staleness_mean",
+                                                "staleness_max")):
+    assert len(ref.history) == len(got.history)
+    for ha, hb in zip(ref.history, got.history):
+        for k in keys_exact:
+            assert ha[k] == hb[k], k          # clock/bookkeeping: exact
+        assert ha["loss"] == pytest.approx(hb["loss"], rel=1e-5, abs=1e-6)
+    assert ref.scheduler_stats == got.scheduler_stats
+    assert ref.comm.measured_up_bytes == got.comm.measured_up_bytes
+    for (ka, va), (kb, vb) in zip(basic.flatten_params(ref.y),
+                                  basic.flatten_params(got.y)):
+        np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                                   rtol=1e-5, atol=1e-6, err_msg=ka)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole acceptance: mesh run == single-device lane run, fp32 round-off
+
+
+@pytest.mark.parametrize("mesh_name", ["debug", "debug-pod"])
+def test_async_grid_mesh_matches_single_device(mesh_name):
+    ds = make_ds()
+    runs = {}
+    for mesh in (None, mesh_name):
+        gc = simgrid.GridConfig(mode="async", fleet="pareto-mobile",
+                                concurrency=6, goal_count=3, mesh=mesh)
+        runs[mesh] = simgrid.run_grid(init_fn, loss_fn, ds, RC, 8,
+                                      grid=gc, seed=2)
+    assert_histories_match(runs[None], runs[mesh_name])
+
+
+def test_sync_grid_mesh_matches_single_device():
+    ds = make_ds()
+    runs = {}
+    for mesh in (None, "debug"):
+        gc = simgrid.GridConfig(mode="sync", mesh=mesh)
+        runs[mesh] = simgrid.run_grid(init_fn, loss_fn, ds, RC, 4,
+                                      grid=gc, seed=1)
+    for ha, hb in zip(runs[None].history, runs["debug"].history):
+        assert ha["virtual_seconds"] == hb["virtual_seconds"]
+        assert ha["loss"] == pytest.approx(hb["loss"], rel=1e-5)
+
+
+def test_async_grid_mesh_dp_matches_single_device():
+    """Per-flush DP under sharding: sharding-invariant noise (the repo
+    forces partitionable threefry) + fixed-denominator mean => histories
+    agree to fp32 round-off, and the accountants agree exactly."""
+    ds = make_ds()
+    runs = {}
+    for mesh in (None, "debug"):
+        gc = simgrid.GridConfig(mode="async", concurrency=5, goal_count=3,
+                                mesh=mesh)
+        runs[mesh] = simgrid.run_grid(init_fn, loss_fn, ds, RC_DP, 6,
+                                      grid=gc, seed=3)
+    assert_histories_match(runs[None], runs["debug"])
+    assert runs[None].dp == runs["debug"].dp
+    assert runs["debug"].dp["flushes"] == 6
+    assert runs["debug"].dp["sigma"] == pytest.approx(0.4 * 0.5 / 3)
+
+
+def test_mesh_resolution_and_flat_shardings():
+    mesh = mesh_lib.resolve_mesh("debug")
+    assert mesh is mesh_lib.resolve_mesh(mesh)      # objects pass through
+    with pytest.raises(ValueError, match="mesh preset"):
+        mesh_lib.resolve_mesh("galaxy-brain")
+    constrain = shard_lib.flat_constrainer(mesh)
+    mat = jnp.zeros((4, 4096), jnp.float32)
+    out = jax.jit(lambda m: constrain(m, clients=True))(mat)
+    assert out.sharding.spec == jax.sharding.PartitionSpec("data", "model")
+    vec = jax.jit(lambda v: constrain(v, clients=False))(mat[0])
+    assert vec.sharding.spec == jax.sharding.PartitionSpec("model")
+    pod = mesh_lib.resolve_mesh("debug-pod")
+    out3 = jax.jit(
+        lambda m: shard_lib.flat_constrainer(pod)(m, clients=True))(mat)
+    assert out3.sharding.spec == jax.sharding.PartitionSpec(
+        ("pod", "data"), "model")
+
+
+# ---------------------------------------------------------------------------
+# Padded partial flush on a (2,2) debug mesh: zero-weight padding rows
+# must perturb neither the sharded weighted mean nor the per-flush sigma
+
+
+def _apply_pair(flush_dp=None):
+    """(sharded apply on the debug mesh, unsharded reference apply)."""
+    mesh = mesh_lib.resolve_mesh("debug")
+    sopt = opt_lib.sgd(1.0)
+    sharded = jax.jit(fedpt.make_buffered_apply(
+        sopt, flush_dp=flush_dp,
+        constrain_flat_fn=shard_lib.flat_constrainer(mesh)))
+    plain = jax.jit(fedpt.make_buffered_apply(sopt, flush_dp=flush_dp))
+    return sharded, plain
+
+
+def test_padded_flush_mean_unperturbed_on_mesh():
+    y, _ = part.partition(init_fn(0), ())
+    layout = flat_lib.FlatLayout.of(y)
+    sopt = opt_lib.sgd(1.0)
+    sharded, plain = _apply_pair()
+    K = 4
+    ks = jax.random.split(jax.random.key(0), K)
+    rows = jnp.stack([0.01 * jax.random.normal(k, (layout.size,))
+                      for k in ks])
+    w = jnp.asarray([1.0, 0.5, 0.0, 0.0])
+    # padding rows are inert even when they hold garbage: zero weight
+    rows_garbage = rows.at[2:].set(7.7)
+    for padded in (flat_lib.pad_rows(rows[:2], K), rows_garbage):
+        ym, _, mm = sharded(y, sopt.init(y), padded, w)
+        yr, _, mr = plain(y, sopt.init(y), rows.at[2:].set(0.0), w)
+        assert mm["delta_norm"] == pytest.approx(float(mr["delta_norm"]),
+                                                 rel=1e-5)
+        for (ka, va), (kb, vb) in zip(basic.flatten_params(ym),
+                                      basic.flatten_params(yr)):
+            np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                                       rtol=1e-5, atol=1e-7, err_msg=ka)
+
+
+def test_padded_flush_dp_fixed_denominator_on_mesh():
+    """With per-flush DP the mean divides by goal_count regardless of
+    fill, sigma never changes, and the sharded apply reproduces the
+    manually-composed single-device mechanism."""
+    y, _ = part.partition(init_fn(0), ())
+    layout = flat_lib.FlatLayout.of(y)
+    sopt = opt_lib.sgd(1.0)
+    K = 4
+    flush_dp = dp_lib.FlushDPConfig(clip_norm=1.0, noise_multiplier=0.5,
+                                    goal_count=K)
+    sharded, _ = _apply_pair(flush_dp)
+    ks = jax.random.split(jax.random.key(1), K)
+    rows = jnp.stack([0.01 * jax.random.normal(k, (layout.size,))
+                      for k in ks])
+    w_full = jnp.asarray([1.0, 0.8, 0.6, 0.4])
+    w_pad = jnp.asarray([1.0, 0.8, 0.0, 0.0])
+    rng = jax.random.key(9)
+
+    def manual(mat, w):
+        flat = flat_lib.weighted_mean(mat, w, jnp.asarray(float(K)))
+        flat = flat_lib.add_noise(flat, flush_dp.sigma, rng)
+        return jax.tree_util.tree_map(
+            lambda a, d: a + d, y, layout.unflatten(flat, jnp.float32))
+
+    for mat, w in ((rows, w_full), (flat_lib.pad_rows(rows[:2], K), w_pad)):
+        ym, _, _ = sharded(y, sopt.init(y), mat, w, rng)
+        want = manual(mat, w)
+        for (ka, va), (kb, vb) in zip(basic.flatten_params(ym),
+                                      basic.flatten_params(want)):
+            np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                                       rtol=1e-5, atol=1e-6, err_msg=ka)
+    # same rng, different data: outputs differ by exactly the mean gap —
+    # i.e. the noise term is identical for a full and a padded flush
+    yf, _, _ = sharded(y, sopt.init(y), rows, w_full, rng)
+    yp, _, _ = sharded(y, sopt.init(y), flat_lib.pad_rows(rows[:2], K),
+                       w_pad, rng)
+    gap = flat_lib.weighted_mean(rows, w_full, jnp.asarray(float(K))) \
+        - flat_lib.weighted_mean(flat_lib.pad_rows(rows[:2], K), w_pad,
+                                 jnp.asarray(float(K)))
+    gap_tree = flat_lib.FlatLayout.of(y).unflatten(gap, jnp.float32)
+    for (ka, vf), (_, vp), (_, vg) in zip(basic.flatten_params(yf),
+                                          basic.flatten_params(yp),
+                                          basic.flatten_params(gap_tree)):
+        np.testing.assert_allclose(np.asarray(vf - vp), np.asarray(vg),
+                                   rtol=1e-4, atol=1e-6, err_msg=ka)
+
+
+def test_async_grid_mesh_dp_deadline_drain():
+    """End-to-end: a deadline-drained DP run on the (2,2) debug mesh
+    matches the single-device drain, padded flush and all."""
+    ds = make_ds()
+    base = simgrid.GridConfig(mode="async", concurrency=4, goal_count=3)
+    full = simgrid.run_grid(init_fn, loss_fn, ds, RC_DP, 6,
+                            grid=base, seed=2)
+    cut = (full.history[1]["virtual_seconds"]
+           + full.history[2]["virtual_seconds"]) / 2.0
+    runs = {}
+    for mesh in (None, "debug"):
+        gc = dataclasses.replace(base, async_deadline=cut, mesh=mesh)
+        runs[mesh] = simgrid.run_grid(init_fn, loss_fn, ds, RC_DP, 6,
+                                      grid=gc, seed=2)
+    assert runs["debug"].history[-1]["buffer_fill"] < base.goal_count
+    assert runs["debug"].dp["padded_flushes"] == 1
+    assert runs[None].dp == runs["debug"].dp
+    assert_histories_match(runs[None], runs["debug"])

@@ -1,6 +1,7 @@
 """Simulation grid: bit-for-bit equivalence with the plain federated
 loop, byte-exact wire metering, straggler/dropout handling, and buffered
 async aggregation with staleness weighting."""
+import dataclasses
 import math
 
 import jax
@@ -260,13 +261,69 @@ def test_async_grid_end_to_end():
     assert res.comm.upload_fedpt == per_up  # analytic agrees with the wire
 
 
-def test_async_grid_rejects_dp_noise():
+def test_async_grid_dp_per_flush():
+    """Async DP composes per flush: noise is drawn once per buffered
+    server update with the fixed goal_count denominator, the run is
+    replay-deterministic, and the accountant reports the composition."""
+    ds = make_ds(n_clients=10)
+    rc = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0,
+                           dp_clip_norm=0.5, dp_noise_multiplier=0.4)
+    gc = simgrid.GridConfig(mode="async", concurrency=5, goal_count=3)
+    a = simgrid.run_grid(init_fn, loss_fn, ds, rc, 6, grid=gc, seed=4)
+    b = simgrid.run_grid(init_fn, loss_fn, ds, rc, 6, grid=gc, seed=4)
+    # deterministic: per-flush keys come from the seed stream
+    assert [h["loss"] for h in a.history] == [h["loss"] for h in b.history]
+    for (pa, la), (pb, lb) in zip(basic.flatten_params(a.y),
+                                  basic.flatten_params(b.y)):
+        assert bool(jnp.all(la == lb)), pa
+    assert a.dp == b.dp
+    assert a.dp["flushes"] == 6 and a.dp["padded_flushes"] == 0
+    assert a.dp["sigma"] == pytest.approx(0.4 * 0.5 / 3)
+    assert a.dp["max_multiplicity"] >= 1   # with-replacement dispatch
+    assert 0 < a.dp["epsilon"] < math.inf
+    # the noise path actually fires: same config with z=0 diverges
+    rc0 = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0,
+                            dp_clip_norm=0.5)
+    c = simgrid.run_grid(init_fn, loss_fn, ds, rc0, 6, grid=gc, seed=4)
+    assert c.dp is None
+    assert any(h["loss"] != hc["loss"] or h["delta_norm"] != hc["delta_norm"]
+               for h, hc in zip(a.history, c.history))
+    # ... but the virtual clock / staleness bookkeeping is unaffected
+    for h, hc in zip(a.history, c.history):
+        assert h["virtual_seconds"] == hc["virtual_seconds"]
+        assert h["staleness_mean"] == hc["staleness_mean"]
+
+
+def test_async_grid_dp_noise_requires_clip():
     ds = make_ds(n_clients=6)
-    rc = fedpt.RoundConfig(4, 2, 8, dp_clip_norm=1.0,
-                           dp_noise_multiplier=0.5)
-    with pytest.raises(NotImplementedError):
+    rc = fedpt.RoundConfig(4, 2, 8, dp_noise_multiplier=0.5)
+    with pytest.raises(ValueError, match="dp_clip_norm"):
         simgrid.run_grid(init_fn, loss_fn, ds, rc, 1,
                          grid=simgrid.GridConfig(mode="async"))
+
+
+def test_async_grid_dp_drained_flush_keeps_noise_scale():
+    """The deadline-drained final buffer is padded to goal_count with
+    zero weights: same fixed denominator, same sigma, and the accountant
+    records it as one (padded) flush."""
+    ds = make_ds(n_clients=10)
+    rc = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0,
+                           dp_clip_norm=0.5, dp_noise_multiplier=0.4)
+    gc = simgrid.GridConfig(mode="async", concurrency=4, goal_count=3)
+    full = simgrid.run_grid(init_fn, loss_fn, ds, rc, 6, grid=gc, seed=2)
+    cut = (full.history[1]["virtual_seconds"]
+           + full.history[2]["virtual_seconds"]) / 2.0
+    gcd = dataclasses.replace(gc, async_deadline=cut)
+    res = simgrid.run_grid(init_fn, loss_fn, ds, rc, 6, grid=gcd, seed=2)
+    assert res.history[-1]["buffer_fill"] < gc.goal_count
+    assert res.dp["flushes"] == len(res.history)
+    assert res.dp["padded_flushes"] == 1
+    assert res.dp["sigma"] == full.dp["sigma"]
+    # the un-cut prefix replays the unconstrained run exactly (identical
+    # per-flush keys and fixed denominator)
+    for a, b in zip(full.history[:2], res.history[:2]):
+        assert a["loss"] == b["loss"]
+        assert a["delta_norm"] == b["delta_norm"]
 
 
 def test_grid_rejects_oversized_cohort():
