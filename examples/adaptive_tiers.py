@@ -6,6 +6,11 @@ per-leaf mask-weighted aggregation keeps every block learning from the
 clients that can afford it, and each tier pays only its own uplink.
 
     PYTHONPATH=src python examples/adaptive_tiers.py
+
+(This drives the original leaf-level prototype in core/adaptive.py on a
+hand-rolled loop. For tiers over the full simulation grid — capability
+-> tier assignment, tier-grouped lanes, per-tier wire billing — see
+`GridConfig.plan` and examples/async_heterogeneous.py --tiers.)
 """
 import jax
 import jax.numpy as jnp

@@ -10,16 +10,35 @@ straggler deadline on the same fleet. Communication is *measured* at the
 wire (serialized payload bytes), not estimated.
 
     PYTHONPATH=src python examples/async_heterogeneous.py
+
+With ``--tiers`` the fleet additionally gets a three-tier trainability
+plan (core/plan.py): capable phones train the full trainable tree,
+mid-tier phones freeze conv2, weak phones train only the norm + head.
+The run is compared against the same fleet all-`full`, with per-tier
+wire traffic from the CommReport ledger — the mixed fleet must bill
+strictly fewer uplink bytes.
+
+    PYTHONPATH=src python examples/async_heterogeneous.py --tiers
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import fedpt
+from repro.core.plan import TrainPlan
 from repro.data import synthetic as syn
 from repro.models import paper_models as pm
 from repro.sim import GridConfig, run_grid
 
 MB = 1024.0 * 1024.0
+
+parser = argparse.ArgumentParser(description=__doc__)
+parser.add_argument("--tiers", action="store_true",
+                    help="mixed-tier trainability plan vs all-full")
+parser.add_argument("--rounds", type=int, default=12,
+                    help="server updates per run (CI smoke uses fewer)")
+args = parser.parse_args()
 
 ds = syn.make_federated_images(num_clients=40, examples_per_client=50,
                                shape=(28, 28, 1), num_classes=62, alpha=1.0)
@@ -36,18 +55,39 @@ rc = fedpt.RoundConfig(clients_per_round=10, local_steps=2, local_batch=16,
                        client_opt="sgd", client_lr=0.05,
                        server_opt="sgd", server_lr=0.5, uplink_bits=8)
 
-RUNS = {
-    "sync + deadline": GridConfig(mode="sync", fleet="pareto-mobile",
-                                  over_selection=1.3,
-                                  straggler_deadline=120.0),
-    "async (FedBuff)": GridConfig(mode="async", fleet="pareto-mobile",
-                                  concurrency=12, goal_count=6,
-                                  staleness="polynomial"),
-}
+# tier 0 trains the whole (dense1-frozen) trainable tree; weaker tiers
+# freeze progressively more of it and upload progressively less
+TIERS = TrainPlan.of({
+    "full": (),
+    "mid": (r"^conv2/",),
+    "lite": (r"^conv1/", r"^conv2/"),
+})
 
+if args.tiers:
+    RUNS = {
+        "async all-full": GridConfig(mode="async", fleet="pareto-mobile",
+                                     concurrency=12, goal_count=6,
+                                     staleness="polynomial"),
+        "async tiered": GridConfig(mode="async", fleet="pareto-mobile",
+                                   concurrency=12, goal_count=6,
+                                   staleness="polynomial", plan=TIERS),
+    }
+else:
+    RUNS = {
+        "sync + deadline": GridConfig(mode="sync", fleet="pareto-mobile",
+                                      over_selection=1.3,
+                                      straggler_deadline=120.0),
+        "async (FedBuff)": GridConfig(mode="async", fleet="pareto-mobile",
+                                      concurrency=12, goal_count=6,
+                                      staleness="polynomial"),
+    }
+
+results = {}
 for name, gc in RUNS.items():
     res = run_grid(lambda s: pm.init_emnist_cnn(s), loss_fn, ds, rc,
-                   rounds=12, grid=gc, freeze_spec=pm.EMNIST_FREEZE, seed=0)
+                   rounds=args.rounds, grid=gc,
+                   freeze_spec=pm.EMNIST_FREEZE, seed=0)
+    results[name] = res
     st = res.scheduler_stats
     print(f"\n== {name} on fleet '{res.fleet.name}' ==")
     print(f"  loss {res.history[0]['loss']:.3f} -> "
@@ -57,7 +97,7 @@ for name, gc in RUNS.items():
     print(f"  dispatches {st['dispatches']}, uploads {st['uploads']}, "
           f"dropouts {st['dropouts']}, offline {st['offline']}, "
           f"deadline drops {st['deadline_drops']}")
-    if name.startswith("async"):
+    if res.mode == "async":
         stale = [h["staleness_max"] for h in res.history]
         print(f"  staleness max seen: {max(stale):.0f} "
               f"(down-weighted 1/sqrt(1+s))")
@@ -67,3 +107,19 @@ for name, gc in RUNS.items():
           f"across {res.comm.transfers} transfers")
     print(f"  analytic ledger: {res.comm.reduction:.1f}x reduction vs "
           f"full-model FedAvg (uplink alone {res.comm.uplink_reduction:.1f}x)")
+    if res.tier_stats:
+        print("  tier      clients  dispatches  uploads      up KiB  "
+              "KiB/upload")
+        for tname, rec in res.tier_stats.items():
+            per = rec["up_bytes_per_upload"] / 1024.0
+            print(f"  {tname:<9s} {rec['clients']:>7d} {rec['transfers']:>11d}"
+                  f" {rec['uploads']:>8d} {rec['up_bytes'] / 1024.0:>11.1f}"
+                  f" {per:>11.2f}")
+
+if args.tiers:
+    full = results["async all-full"].comm.measured_up_bytes
+    mixed = results["async tiered"].comm.measured_up_bytes
+    print(f"\nmixed-tier uplink: {mixed / MB:.2f} MB vs all-full "
+          f"{full / MB:.2f} MB "
+          f"({(1.0 - mixed / max(full, 1)) * 100.0:.0f}% less)")
+    assert mixed < full, "tiered fleet must bill fewer uplink bytes"

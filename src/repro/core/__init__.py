@@ -7,16 +7,19 @@ NOTE: function names that would shadow their submodule (``partition``,
 submodules remain importable as ``repro.core.partition`` etc.
 """
 from repro.core.partition import (partition as partition_params,
-                                  merge, summarize, trainable_fraction)
+                                  merge, summarize, summarize_plan,
+                                  partition_plan, trainable_fraction)
 from repro.core.reconstruct import (reconstruct as reconstruct_frozen,
                                     make_reconstructor, init_partitioned,
                                     verify_roundtrip)
 from repro.core.fedpt import (RoundConfig, make_round_fn, make_client_update,
                               clip_delta, make_eval_fn)
 from repro.core.flat import FlatLayout
+from repro.core.plan import TrainPlan, Tier, CompiledPlan, compile_plan
 from repro.core.dp import (DPFTRLConfig, dp_ftrl_server_opt, tree_noise,
                            NOISE_TO_EPS)
 from repro.core.comm import CommReport, report_for
 
 # restore submodule attributes clobbered by the re-exports above
-from repro.core import partition, reconstruct, fedpt, dp, comm, flat  # noqa: E402,F811
+from repro.core import (partition, reconstruct, fedpt, dp, comm,  # noqa: E402,F811
+                        flat, plan)

@@ -14,6 +14,13 @@ Aggregation is per-leaf mask-weighted:  Δ[l] = Σ_i w_i m_i[l] Δ_i[l] /
 
 Communication: client i uploads only its tier's trainable bytes —
 `tier_comm_report` gives the per-tier ledger.
+
+NOTE: this module is the original leaf-level prototype (kept for its
+tests and example). The production path is ``core/plan.py``: a
+``TrainPlan`` compiles tiers into static block sub-layouts of the flat
+aggregation buffer and threads them through the round engine, the async
+lanes, the scheduler, and per-tier wire billing
+(``sim.GridConfig.plan``).
 """
 from __future__ import annotations
 

@@ -48,6 +48,13 @@ class CommReport:
     measured_down_bytes: int = 0
     measured_up_bytes: int = 0
     transfers: int = 0
+    # per-trainability-tier breakdown of the measured totals (filled by
+    # the grid when a core/plan.py TrainPlan is active): tier name ->
+    # {down_bytes, up_bytes, transfers, uploads}. Uplink is billed at
+    # the tier's sliced payload; downlink is tier-invariant (every tier
+    # downloads the full trainable tree — see core/plan.py).
+    tier_traffic: Dict[str, Dict[str, int]] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def download_full(self) -> int:
@@ -102,9 +109,36 @@ class CommReport:
         self.measured_up_bytes += int(up_bytes)
         self.transfers += int(transfers)
 
+    def add_tier_measured(self, tier: str, down_bytes: int, up_bytes: int,
+                          transfers: int = 1, uploads: int = 0) -> None:
+        """Accumulate observed bytes for one trainability tier AND the
+        global totals (callers meter through one entry point — never
+        call both this and ``add_measured`` for the same transfers)."""
+        rec = self.tier_traffic.setdefault(
+            tier, {"down_bytes": 0, "up_bytes": 0, "transfers": 0,
+                   "uploads": 0})
+        rec["down_bytes"] += int(down_bytes)
+        rec["up_bytes"] += int(up_bytes)
+        rec["transfers"] += int(transfers)
+        rec["uploads"] += int(uploads)
+        self.add_measured(down_bytes, up_bytes, transfers)
+
     @property
     def measured_total_bytes(self) -> int:
         return self.measured_down_bytes + self.measured_up_bytes
+
+    def tier_table(self) -> Dict[str, Dict[str, float]]:
+        """Per-tier measured traffic with MB columns (README's tier
+        table / the tiered example's report)."""
+        mb = 1024.0 * 1024.0
+        out = {}
+        for name, rec in self.tier_traffic.items():
+            out[name] = dict(rec)
+            out[name]["down_mb"] = rec["down_bytes"] / mb
+            out[name]["up_mb"] = rec["up_bytes"] / mb
+            out[name]["up_bytes_per_upload"] = (
+                rec["up_bytes"] / rec["uploads"] if rec["uploads"] else 0.0)
+        return out
 
 
 def report_for(trainable, frozen, rounds: int = 1,

@@ -49,13 +49,17 @@ class RoundConfig:
 
 def make_client_update(loss_fn: Callable, client_opt: opt_lib.Optimizer,
                        local_steps: int):
-    """Returns f(y, frozen, client_batch) -> (delta, metrics).
+    """Returns f(y, frozen, client_batch[, grad_mask]) -> (delta, metrics).
 
     client_batch: pytree with leading axis tau (one microbatch per local
-    step). Gradients are taken wrt y only.
+    step). Gradients are taken wrt y only. ``grad_mask`` (optional 0/1
+    tree over y) zeroes the gradient of frozen-for-this-tier leaves each
+    local step — exact freezing under SGD-family ClientOpts — and the
+    final delta is masked again (belt & braces) so a tiered client's
+    upload is structurally zero outside its tier.
     """
 
-    def client_update(y0, frozen, client_batch):
+    def client_update(y0, frozen, client_batch, grad_mask=None):
         opt_state = client_opt.init(y0)
 
         def local_step(carry, mb):
@@ -67,12 +71,18 @@ def make_client_update(loss_fn: Callable, client_opt: opt_lib.Optimizer,
                 return (out[0], out[1]) if isinstance(out, tuple) else (out, {})
             (loss, _aux), grads = jax.value_and_grad(loss_of_y,
                                                      has_aux=True)(y)
+            if grad_mask is not None:
+                grads = jax.tree_util.tree_map(
+                    lambda g, m: g * m.astype(g.dtype), grads, grad_mask)
             y, st = client_opt.update(y, grads, st)
             return (y, st), loss
 
         (y_fin, _), losses = jax.lax.scan(local_step, (y0, opt_state),
                                           client_batch)
         delta = opt_lib.tree_sub(y_fin, y0)
+        if grad_mask is not None:
+            delta = jax.tree_util.tree_map(
+                lambda d, m: d * m.astype(d.dtype), delta, grad_mask)
         return delta, {"client_loss": jnp.mean(losses)}
 
     return client_update
@@ -109,17 +119,36 @@ def resolve_server_opt(rc: RoundConfig) -> opt_lib.Optimizer:
 def make_round_fn(loss_fn: Callable, rc: RoundConfig,
                   server_opt: Optional[opt_lib.Optimizer] = None,
                   donate: bool = True, constrain_fn: Optional[Callable] = None,
-                  constrain_flat_fn: Optional[Callable] = None):
-    """Builds round_step(y, server_state, frozen, batch, weights, rng).
+                  constrain_flat_fn: Optional[Callable] = None,
+                  constrain_batch_fn: Optional[Callable] = None,
+                  plan=None):
+    """Builds round_step(y, server_state, frozen, batch, weights, rng) —
+    or, under a non-trivial trainability ``plan``,
+    round_step(y, server_state, frozen, batch, weights, tiers, rng).
 
     batch: pytree, leaves (clients, tau, local_batch, ...).
     weights: (clients,) float — e.g. #examples per client (paper's p_i).
+    tiers: (clients,) int32 tier index per cohort slot (plan mode only).
     rng: PRNG key for DP noise (ignored when DP is off).
     constrain_fn(tree, clients: bool): optional sharding-constraint hook
     used on the mesh — pins the per-client trainable copies to the data
     axis so GSPMD never replicates C copies of y per device.
     constrain_flat_fn(arr, clients: bool): same, for the flat delta
     buffer ((C, size) when clients=True, (size,) when False).
+    constrain_batch_fn(tree): same, for the cohort input batch — pins
+    each leaf's leading (client) axis to the data mesh axes (see
+    ``launch/sharding.cohort_constrainer``), so SYNC-mode inputs land
+    data-parallel instead of replicated.
+    plan: a ``core.plan.CompiledPlan``. Trivial plans (one tier, nothing
+    extra frozen) take the exact single-spec path below — bit for bit.
+    Non-trivial plans mask each client's gradients with its tier's leaf
+    mask every local step (exact freezing under SGD-family ClientOpts),
+    so frozen-for-this-tier blocks contribute zero delta; aggregation
+    divides per block by the tier-mask-weighted participant sum, so
+    those blocks also carry zero *weight*. Under DP the denominator
+    stays the fixed ``clients_per_round`` — clipping the masked row
+    bounds per-client sensitivity unchanged, so clip norms and sigma
+    are tier-independent.
 
     The aggregation tail (quantize / clip / weighted mean / DP noise)
     runs over ``core.flat.FlatLayout`` buffers: client deltas are
@@ -132,12 +161,24 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
     if server_opt is None:
         server_opt = resolve_server_opt(rc)
     client_update = make_client_update(loss_fn, client_opt, rc.local_steps)
+    tiered = plan is not None and not plan.trivial
 
-    def round_step(y, server_state, frozen, batch, weights, rng):
+    def _round_step(y, server_state, frozen, batch, weights, tiers, rng):
         layout = flat_lib.FlatLayout.of(y)   # static: shapes only
+        if constrain_batch_fn is not None:
+            batch = constrain_batch_fn(batch)
+        if tiered:
+            # (n_tiers,) per leaf, indexed by each client's runtime tier
+            stacked_masks = jax.tree_util.tree_map(
+                lambda *ms: jnp.stack(ms), *plan.leaf_masks())
 
-        def flat_client(y0, cb):
-            delta, metrics = client_update(y0, frozen, cb)
+        def flat_client(y0, cb, tier):
+            if tiered:
+                mask = jax.tree_util.tree_map(lambda s: s[tier],
+                                              stacked_masks)
+                delta, metrics = client_update(y0, frozen, cb, mask)
+            else:
+                delta, metrics = client_update(y0, frozen, cb)
             return layout.flatten(delta), metrics
 
         # --- local training on every sampled client (vmapped over the
@@ -147,10 +188,17 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
             yb = jax.tree_util.tree_map(
                 lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), y)
             yb = constrain_fn(yb, clients=True)
-            deltas, metrics = jax.vmap(flat_client)(yb, batch)
+            if tiered:
+                deltas, metrics = jax.vmap(flat_client)(yb, batch, tiers)
+            else:
+                deltas, metrics = jax.vmap(
+                    lambda yc, cb: flat_client(yc, cb, None))(yb, batch)
+        elif tiered:
+            deltas, metrics = jax.vmap(
+                lambda cb, t: flat_client(y, cb, t))(batch, tiers)
         else:
             deltas, metrics = jax.vmap(
-                lambda cb: flat_client(y, cb))(batch)
+                lambda cb: flat_client(y, cb, None))(batch)
         if constrain_flat_fn is not None:
             deltas = constrain_flat_fn(deltas, clients=True)
 
@@ -182,7 +230,15 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
             w = w * jnp.minimum(1.0, rc.dp_clip_norm
                                 / jnp.maximum(norms, 1e-12))
             metrics = dict(metrics, update_norm=jnp.mean(norms))
-        flat_delta = flat_lib.weighted_mean(deltas, w, wsum)
+        if tiered and rc.dp_clip_norm <= 0:
+            # per-block mask-weighted mean: blocks a tier froze carry
+            # zero weight for its clients; blocks nobody trained stay 0
+            bmask = jnp.asarray(plan.block_masks())[tiers]     # (C, NB)
+            flat_delta = flat_lib.block_masked_mean(deltas, w, bmask,
+                                                    layout.align)
+        else:
+            # fixed denominator (DP) or single tier: plain weighted mean
+            flat_delta = flat_lib.weighted_mean(deltas, w, wsum)
         if constrain_flat_fn is not None:
             flat_delta = constrain_flat_fn(flat_delta, clients=False)
 
@@ -205,6 +261,13 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
         if "update_norm" in metrics:
             out_metrics["update_norm"] = jnp.mean(metrics["update_norm"])
         return y_new, server_state, out_metrics
+
+    if tiered:
+        round_step = _round_step     # (y, sstate, frozen, batch, w, tiers, rng)
+    else:
+        def round_step(y, server_state, frozen, batch, weights, rng):
+            return _round_step(y, server_state, frozen, batch, weights,
+                               None, rng)
 
     return round_step, server_opt
 
@@ -256,20 +319,43 @@ def get_staleness_fn(name="polynomial", **kw) -> Callable[[float], float]:
 
 
 def make_client_step(loss_fn: Callable, rc: RoundConfig,
-                     client_opt: Optional[opt_lib.Optimizer] = None):
+                     client_opt: Optional[opt_lib.Optimizer] = None,
+                     tier=None, plan=None, scatter: bool = True):
     """Single-client step for the async grid: (y, frozen, client_batch) ->
     (flat_delta, metrics). The delta is born flat — flattened inside the
     jitted step onto the ``FlatLayout`` of ``y`` — and the same uplink
     quantization and DP clipping as the synchronous round engine are
-    applied over the flat buffer, in the same order."""
+    applied over the flat buffer, in the same order.
+
+    ``tier`` (a ``core.plan.TierSlice``, with its ``plan`` the owning
+    ``CompiledPlan``) builds the step for ONE trainability tier: ``y``
+    is split structurally — the tier's extra-frozen leaves join the
+    frozen side, so XLA allocates no grad buffers or optimizer state
+    for them — and the delta is the tier's *contiguous* ``(tier_size,)``
+    flat slice. Quantization scales and the DP clip norm computed on
+    the slice equal those of the zero-scattered full row (absent blocks
+    are exactly zero), so per-client DP sensitivity is unchanged by
+    tiering. With ``scatter=True`` the step returns the slice scattered
+    to global ``(size,)`` width; ``scatter=False`` returns the raw
+    contiguous slice (the wire payload)."""
     if client_opt is None:
         client_opt = opt_lib.get_optimizer(rc.client_opt, rc.client_lr)
     client_update = make_client_update(loss_fn, client_opt, rc.local_steps)
+    if tier is not None and plan is None:
+        raise ValueError("a tiered client step needs the owning "
+                         "CompiledPlan (plan=...)")
 
     def client_step(y, frozen, client_batch):
-        layout = flat_lib.FlatLayout.of(y)
-        delta, metrics = client_update(y, frozen, client_batch)
-        flat_delta = layout.flatten(delta)
+        if tier is None:
+            layout = flat_lib.FlatLayout.of(y)
+            delta, metrics = client_update(y, frozen, client_batch)
+            flat_delta = layout.flatten(delta)
+        else:
+            y_t, extra = plan.split(y, tier)
+            layout = flat_lib.FlatLayout.of(y_t)
+            delta, metrics = client_update(y_t, part.merge(frozen, extra),
+                                           client_batch)
+            flat_delta = layout.flatten(delta)
         if rc.uplink_bits:
             flat_delta = flat_lib.fake_quantize(flat_delta, layout,
                                                 rc.uplink_bits)
@@ -277,6 +363,8 @@ def make_client_step(loss_fn: Callable, rc: RoundConfig,
             flat_delta, nrm = flat_lib.clip(flat_delta, rc.dp_clip_norm,
                                             layout)
             metrics = dict(metrics, update_norm=nrm)
+        if tier is not None and scatter:
+            flat_delta = plan.scatter(flat_delta, tier)
         return flat_delta, metrics
 
     return client_step
@@ -284,19 +372,31 @@ def make_client_step(loss_fn: Callable, rc: RoundConfig,
 
 def make_lane_step(loss_fn: Callable, rc: RoundConfig, lane: int,
                    client_opt: Optional[opt_lib.Optimizer] = None,
-                   constrain_flat_fn: Optional[Callable] = None):
+                   constrain_flat_fn: Optional[Callable] = None,
+                   tier=None, plan=None):
     """Batched client step for the async grid's fixed-width lanes:
     (y, frozen, lane_batch) -> (flat_deltas (lane, size), losses (lane,)).
 
     One vmapped dispatch replaces `lane` sequential jit calls; under a
     launch/sharding.py mesh, pass ``constrain_flat_fn`` to pin the lane
     axis to the data mesh axes so clients execute data-parallel.
+
+    With a ``tier``/``plan`` pair the lane is tier-homogeneous (the grid
+    groups pending clients by tier, so each tier traces exactly once):
+    the vmapped steps run at the tier's ``(lane, tier_size)`` width —
+    grad buffers and the clip/quantize tail all shrink with the tier —
+    and ONE static-index scatter widens the batch to the global
+    ``(lane, size)`` buffer before the sharding constraint, so
+    frozen-for-this-tier blocks enter the aggregation as exact zeros.
     """
-    step = make_client_step(loss_fn, rc, client_opt)
+    step = make_client_step(loss_fn, rc, client_opt, tier=tier, plan=plan,
+                            scatter=False)
 
     def lane_step(y, frozen, lane_batch):
         flat_deltas, metrics = jax.vmap(
             lambda cb: step(y, frozen, cb))(lane_batch)
+        if tier is not None:
+            flat_deltas = plan.scatter(flat_deltas, tier)
         if constrain_flat_fn is not None:
             flat_deltas = constrain_flat_fn(flat_deltas, clients=True)
         return flat_deltas, metrics["client_loss"]
@@ -306,13 +406,27 @@ def make_lane_step(loss_fn: Callable, rc: RoundConfig, lane: int,
 
 def make_buffered_apply(server_opt: opt_lib.Optimizer,
                         flush_dp=None,
-                        constrain_flat_fn: Optional[Callable] = None):
+                        constrain_flat_fn: Optional[Callable] = None,
+                        plan=None):
     """Server-side flush of an async buffer: apply(y, server_state,
     flat_deltas, weights[, rng]) with ``flat_deltas`` the (K, size) stack
     of flat client deltas and weights (K,) already including the
     staleness factor (w_i = staleness_fn(s_i) * p_i). Weighted-mean as
     one dot, then ServerOpt on the pseudo-gradient, mirroring the sync
     engine.
+
+    ``plan`` (a non-trivial ``core.plan.CompiledPlan``) switches to the
+    tiered signature apply(y, server_state, flat_deltas, weights,
+    tier_ids[, rng]): ``tier_ids`` (K,) int32 names each row's tier, and
+    the per-row tier block masks make frozen-for-this-tier blocks
+    contribute zero delta (rows are re-masked, belt & braces — tiered
+    client steps already scatter exact zeros there) and zero *weight*:
+    without DP the mean divides per block by the mask-weighted
+    participant sum (blocks nobody trained keep delta 0); with
+    ``flush_dp`` the denominator stays the FIXED ``goal_count`` — the
+    masked, clipped row still has sensitivity ``clip_norm/goal_count``,
+    so sigma is tier-independent. Padding rows carry weight 0 and tier 0;
+    both denominators ignore them.
 
     K is a fixed shape: short buffers (e.g. a drained final flush) are
     padded with zero-weight rows by the caller, which fall out of the
@@ -334,15 +448,26 @@ def make_buffered_apply(server_opt: opt_lib.Optimizer,
     one device.
     """
 
-    def apply_fn(y, server_state, flat_deltas, weights, rng=None):
+    tiered = plan is not None and not plan.trivial
+
+    def _apply(y, server_state, flat_deltas, weights, tier_ids, rng):
         layout = flat_lib.FlatLayout.of(y)
         if constrain_flat_fn is not None:
             flat_deltas = constrain_flat_fn(flat_deltas, clients=True)
+        if tiered:
+            bmask = jnp.asarray(plan.block_masks())[tier_ids]   # (K, NB)
+            K = flat_deltas.shape[0]
+            flat_deltas = (flat_deltas.reshape(K, -1, layout.align)
+                           * bmask[:, :, None]).reshape(K, -1)
         if flush_dp is not None:
             wsum = jnp.asarray(float(flush_dp.goal_count), jnp.float32)
+            flat_delta = flat_lib.weighted_mean(flat_deltas, weights, wsum)
+        elif tiered:
+            flat_delta = flat_lib.block_masked_mean(flat_deltas, weights,
+                                                    bmask, layout.align)
         else:
             wsum = jnp.maximum(jnp.sum(weights), 1e-12)
-        flat_delta = flat_lib.weighted_mean(flat_deltas, weights, wsum)
+            flat_delta = flat_lib.weighted_mean(flat_deltas, weights, wsum)
         if constrain_flat_fn is not None:
             flat_delta = constrain_flat_fn(flat_delta, clients=False)
         noised = flush_dp is not None and flush_dp.noise_multiplier > 0
@@ -359,6 +484,15 @@ def make_buffered_apply(server_opt: opt_lib.Optimizer,
         norm = (opt_lib.tree_global_norm(delta) if noised
                 else jnp.sqrt(flat_lib.sumsq(flat_delta, layout.align)))
         return y_new, server_state, {"delta_norm": norm}
+
+    if tiered:
+        def apply_fn(y, server_state, flat_deltas, weights, tier_ids,
+                     rng=None):
+            return _apply(y, server_state, flat_deltas, weights,
+                          jnp.asarray(tier_ids, jnp.int32), rng)
+    else:
+        def apply_fn(y, server_state, flat_deltas, weights, rng=None):
+            return _apply(y, server_state, flat_deltas, weights, None, rng)
 
     return apply_fn
 

@@ -116,6 +116,60 @@ class FlatLayout:
     def zeros(self) -> jnp.ndarray:
         return jnp.zeros((self.size,), jnp.float32)
 
+    # -- block sub-layouts (core/plan.py trainability tiers) -------------
+
+    def leaf_blocks(self, leaf_on) -> np.ndarray:
+        """(k,) int32 global block ids owned by the leaves ``leaf_on``
+        selects (bool per leaf, layout order). Because every leaf owns
+        whole ``align`` blocks, any per-leaf subset of the tree is a
+        per-block subset of the flat vector — the static index map that
+        makes a tier's payload a contiguous slice of its own."""
+        if len(leaf_on) != len(self.sizes):
+            raise ValueError(f"leaf_on has {len(leaf_on)} entries for "
+                             f"{len(self.sizes)} leaves")
+        per_leaf = self.block_leaf()
+        keep = np.asarray(leaf_on, bool)[per_leaf]
+        return np.nonzero(keep)[0].astype(np.int32)
+
+    def block_mask(self, leaf_on) -> np.ndarray:
+        """(num_blocks,) float32 0/1 mask over align-blocks for the
+        leaves ``leaf_on`` selects."""
+        mask = np.zeros((self.num_blocks,), np.float32)
+        mask[self.leaf_blocks(leaf_on)] = 1.0
+        return mask
+
+
+def gather_blocks(vec: jnp.ndarray, block_ids: np.ndarray,
+                  align: int = ALIGN) -> jnp.ndarray:
+    """(size,) or (k, size) -> the selected blocks as ONE contiguous
+    vector/matrix ((n*align,) or (k, n*align)). Static index map: the
+    gather is a single XLA take over the block view."""
+    ids = jnp.asarray(block_ids, jnp.int32)
+    if vec.ndim == 1:
+        return vec.reshape(-1, align)[ids].reshape(-1)
+    k = vec.shape[0]
+    return vec.reshape(k, -1, align)[:, ids].reshape(k, -1)
+
+
+def scatter_blocks(sub: jnp.ndarray, block_ids: np.ndarray,
+                   num_blocks: int, align: int = ALIGN) -> jnp.ndarray:
+    """Inverse of :func:`gather_blocks`: place a contiguous block slice
+    back into a zero-filled full-width vector ((size,) or (k, size)).
+    Unselected blocks are exactly zero, so a scattered tier delta
+    contributes nothing outside its tier's trainable blocks."""
+    ids = jnp.asarray(block_ids, jnp.int32)
+    if sub.ndim == 1:
+        out = jnp.zeros((num_blocks, align), jnp.float32)
+        return out.at[ids].set(sub.reshape(-1, align)).reshape(-1)
+    k = sub.shape[0]
+    out = jnp.zeros((k, num_blocks, align), jnp.float32)
+    return out.at[:, ids].set(sub.reshape(k, -1, align)).reshape(k, -1)
+
+
+def expand_block_mask(mask: jnp.ndarray, align: int = ALIGN) -> jnp.ndarray:
+    """(num_blocks,) 0/1 -> (size,) elementwise mask (static repeat)."""
+    return jnp.repeat(jnp.asarray(mask, jnp.float32), align)
+
 
 # ---------------------------------------------------------------------------
 # Flat ops used by the round engine. Each dispatches: fused Pallas kernel
@@ -193,6 +247,23 @@ def weighted_mean(mat: jnp.ndarray, weights: jnp.ndarray,
     """
     return jnp.matmul(weights.astype(jnp.float32),
                       mat.astype(jnp.float32)) / wsum
+
+
+def block_masked_mean(mat: jnp.ndarray, weights: jnp.ndarray,
+                      block_masks: jnp.ndarray,
+                      align: int = ALIGN) -> jnp.ndarray:
+    """(C, size), (C,), (C, num_blocks) -> (size,): the trainability-tier
+    aggregation rule, shared by the sync round engine and the async
+    buffered apply so the two cannot drift numerically.
+
+    Per block j: sum_c w_c mat_c[j] / max(sum_c w_c m_c[j], eps) — a
+    client contributes zero weight on blocks its tier froze (its rows
+    are already zero there), and blocks nobody trained keep delta 0.
+    Reduces to :func:`weighted_mean` when every mask is all-ones."""
+    w = weights.astype(jnp.float32)
+    num = jnp.matmul(w, mat.astype(jnp.float32))
+    den = jnp.repeat(jnp.maximum(jnp.matmul(w, block_masks), 1e-12), align)
+    return num / den
 
 
 def pad_rows(mat: jnp.ndarray, rows: int) -> jnp.ndarray:

@@ -56,20 +56,64 @@ def trainable_fraction(params, freeze_spec) -> float:
 
 
 def summarize(params, freeze_spec) -> Dict[str, float]:
-    """The paper's Table-1/2/3 row for an arbitrary model + freeze spec."""
-    from repro.core import comm
+    """The paper's Table-1/2/3 row for an arbitrary model + freeze spec
+    — the one-tier special case of :func:`summarize_plan`."""
+    from repro.core import plan as plan_lib
+    row = dict(summarize_plan(params, freeze_spec,
+                              plan_lib.TrainPlan.single())[0])
+    row.pop("tier")
+    return row
+
+
+def partition_plan(params, freeze_spec, plan):
+    """Per-tier (trainable, frozen) splits under a trainability plan.
+
+    ``freeze_spec`` defines the *global* trainable tree (the union every
+    tier shares); each tier's additive spec moves more of it to the
+    frozen side. Returns ``(compiled_plan, [(train_t, frozen_t), ...])``
+    — tier t's frozen tree is the global frozen tree plus the leaves the
+    tier declines to train, so ``merge(train_t, frozen_t)`` is always
+    the full model. A one-tier plan with no extra spec reproduces
+    ``partition`` exactly.
+    """
+    from repro.core import plan as plan_lib
     y, z = partition(params, freeze_spec)
-    ny, nz = basic.tree_size(y), basic.tree_size(z)
-    rep = comm.report_for(y, z)
-    total = ny + nz
-    return {
-        "total_params": total,
-        "trainable_params": ny,
-        "frozen_params": nz,
-        "trainable_pct": 100.0 * ny / total,
-        # download (y + seed) + upload (delta y), vs 2x full model — the
-        # single source of truth for this formula is comm.CommReport
-        "comm_reduction": rep.reduction,
-        "trainable_bytes": rep.trainable_bytes,
-        "frozen_bytes": rep.full_bytes - rep.trainable_bytes,
-    }
+    cplan = plan_lib.compile_plan(plan, y)
+    splits = []
+    for t in cplan.tiers:
+        y_t, extra = cplan.split(y, t)
+        splits.append((y_t, merge(z, extra)))
+    return cplan, splits
+
+
+def summarize_plan(params, freeze_spec, plan) -> list:
+    """Per-tier Table-1 rows: same columns as :func:`summarize` plus the
+    tier name.
+
+    These are the paper's *analytic* per-spec numbers — tier t's row is
+    what Table 1 would print had the whole fleet used tier t's combined
+    spec (downlink = tier trainable + seed). The simulation grid's
+    *measured* ledger differs on the downlink: in a mixed fleet every
+    tier must download the full global trainable tree (other tiers keep
+    training the blocks this tier froze, so their current values cannot
+    be regenerated from the seed); only the uplink is tier-sliced."""
+    from repro.core import comm
+    cplan, splits = partition_plan(params, freeze_spec, plan)
+    rows = []
+    for t, (y_t, z_t) in zip(cplan.tiers, splits):
+        ny, nz = basic.tree_size(y_t), basic.tree_size(z_t)
+        rep = comm.report_for(y_t, z_t)
+        total = ny + nz
+        rows.append({
+            "tier": t.name,
+            "total_params": total,
+            "trainable_params": ny,
+            "frozen_params": nz,
+            "trainable_pct": 100.0 * ny / total,
+            # download (y + seed) + upload (delta y), vs 2x full model —
+            # the single source of truth is comm.CommReport
+            "comm_reduction": rep.reduction,
+            "trainable_bytes": rep.trainable_bytes,
+            "frozen_bytes": rep.full_bytes - rep.trainable_bytes,
+        })
+    return rows

@@ -1,0 +1,240 @@
+"""Heterogeneous trainability tiers: per-client freeze plans.
+
+FedPT's headline trade-off freezes ONE fixed portion of the model for
+every client. Real fleets are heterogeneous — weak devices should train
+*less* of the model than strong ones (the paper's §5 future work; FedPLT
+and Partial Variable Training show this is where the scalability wins
+live). A :class:`TrainPlan` promotes the single global ``freeze_spec``
+into a first-class set of named **tiers**:
+
+* the *global* trainable tree ``y`` stays what ``freeze_spec`` says it
+  is — the union of everything any tier trains (tier 0's set);
+* each tier adds an **additive** freeze spec over ``y``: regexes naming
+  the leaves that tier does NOT train. Tier 0 is conventionally ``full``
+  (no extra freezing); higher tiers freeze supersets and suit weaker
+  devices;
+* compiling a plan against ``y`` (:func:`compile_plan`) turns each tier
+  into a static *sub-layout* of the global :class:`~repro.core.flat.FlatLayout`:
+  a 0/1 block mask plus a gather/scatter index map, exploiting the
+  layout's whole-block-per-leaf padding. A tier's delta is therefore a
+  contiguous ``(tier_size,)`` slice that scatters into the global
+  ``(K, size)`` aggregation buffer with one static-index op.
+
+Aggregation semantics (mirroring ``core/adaptive.py``'s per-leaf rule,
+now per block over the flat plane): a client contributes zero delta and
+zero *weight* on blocks its tier froze, so
+
+    delta[j] = sum_i w_i m_{t(i)}[j] delta_i[j] / sum_i w_i m_{t(i)}[j]
+
+and blocks nobody trained this round/flush keep ``delta = 0``. Under DP
+the denominator stays the FIXED cohort/goal count — clipping the masked
+row bounds per-client sensitivity exactly as before, so clip norms and
+noise calibration are unchanged by tiering.
+
+Communication: tier t uploads only its own trainable blocks — the wire
+(``sim/wire.py``) and the ledger (``core/comm.py``) bill each transfer
+at tier-sliced byte counts. Downlink stays the full trainable tree plus
+seed for every tier: frozen-for-this-tier blocks are still *trained by
+other tiers*, so their current values cannot be regenerated from the
+seed and must be downloaded for the forward pass.
+
+A one-tier plan covering all clients is the pre-plan single-spec system,
+bit for bit: :func:`compile_plan` marks it ``trivial`` and every
+consumer routes trivial plans through the original code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flat as flat_lib
+from repro.nn import basic
+
+
+@dataclasses.dataclass(frozen=True)
+class Tier:
+    """One named trainability tier: ``freeze_spec`` regexes are ADDITIVE
+    over the global trainable tree (paths the tier does not train)."""
+    name: str
+    freeze_spec: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "freeze_spec", tuple(self.freeze_spec))
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainPlan:
+    """Ordered tiers, most capable first (tier 0 = fewest frozen leaves).
+
+    Construct from a dict (``TrainPlan.of({"full": (), "lite": (r"^conv",)})``),
+    a sequence of (name, spec) pairs, or pass ``Tier`` objects directly.
+    """
+    tiers: Tuple[Tier, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "tiers", tuple(self.tiers))
+        if not self.tiers:
+            raise ValueError("a TrainPlan needs at least one tier")
+        names = [t.name for t in self.tiers]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tier names: {names}")
+
+    @classmethod
+    def of(cls, spec: Union["TrainPlan", Dict[str, Sequence[str]],
+                            Sequence]) -> "TrainPlan":
+        if isinstance(spec, TrainPlan):
+            return spec
+        if isinstance(spec, dict):
+            return cls(tuple(Tier(n, tuple(s)) for n, s in spec.items()))
+        tiers = []
+        for item in spec:
+            if isinstance(item, Tier):
+                tiers.append(item)
+            else:
+                name, fs = item
+                tiers.append(Tier(name, tuple(fs)))
+        return cls(tuple(tiers))
+
+    @classmethod
+    def single(cls, name: str = "full") -> "TrainPlan":
+        """The pre-plan world: one tier, nothing extra frozen."""
+        return cls((Tier(name, ()),))
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(t.name for t in self.tiers)
+
+    def __len__(self) -> int:
+        return len(self.tiers)
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSlice:
+    """A tier compiled against the global FlatLayout: static block mask
+    and gather/scatter index map. All fields are Python/numpy statics —
+    closing over a TierSlice adds no jit arguments."""
+    name: str
+    index: int
+    freeze_spec: Tuple[str, ...]
+    leaf_on: Tuple[bool, ...]     # per global-layout leaf: trained here?
+    block_ids: np.ndarray         # (tier_blocks,) int32 global block ids
+    size: int                     # tier_blocks * align (padded flat width)
+    param_count: int              # true (unpadded) trainable params
+    trainable_bytes: int          # true bytes — what the wire bills
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.block_ids)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledPlan:
+    """A TrainPlan bound to one trainable tree ``y``.
+
+    ``layout`` is the global flat layout; ``tiers[t]`` the per-tier
+    sub-layout. ``trivial`` plans (one tier training every leaf) are the
+    signal for consumers to keep the original single-spec code path —
+    the acceptance contract is that a trivial plan reproduces it bit for
+    bit.
+    """
+    plan: TrainPlan
+    layout: flat_lib.FlatLayout
+    paths: Tuple[str, ...]        # leaf paths, layout (tree_flatten) order
+    tiers: Tuple[TierSlice, ...]
+
+    @property
+    def trivial(self) -> bool:
+        return len(self.tiers) == 1 and all(self.tiers[0].leaf_on)
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return self.plan.names
+
+    def block_masks(self) -> np.ndarray:
+        """(n_tiers, num_blocks) float32 stacked 0/1 block masks — the
+        per-row tier masks the round engine indexes with runtime tier
+        ids."""
+        return np.stack([self.layout.block_mask(t.leaf_on)
+                         for t in self.tiers])
+
+    def leaf_masks(self) -> List[Dict[str, Any]]:
+        """Per-tier 0/1 leaf-mask trees over ``y`` (gradient masking in
+        the mixed-tier sync engine)."""
+        out = []
+        for t in self.tiers:
+            flat = {p: jnp.asarray(1.0 if on else 0.0, jnp.float32)
+                    for p, on in zip(self.paths, t.leaf_on)}
+            out.append(basic.unflatten_params(flat))
+        return out
+
+    # -- per-tier structural split (async lane steps) --------------------
+
+    def split(self, y, tier: TierSlice):
+        """(tier-trainable subtree, tier-extra-frozen subtree) of ``y``.
+        Leaf order inside the subtree matches the global layout order, so
+        the subtree's own FlatLayout is exactly the tier's contiguous
+        block slice."""
+        flat = dict(basic.flatten_params(y))
+        train = {p: flat[p] for p, on in zip(self.paths, tier.leaf_on) if on}
+        frozen = {p: flat[p] for p, on in zip(self.paths, tier.leaf_on)
+                  if not on}
+        return basic.unflatten_params(train), basic.unflatten_params(frozen)
+
+    # -- gather / scatter over the flat plane ----------------------------
+
+    def gather(self, vec: jnp.ndarray, tier: TierSlice) -> jnp.ndarray:
+        """Global (size,)/(k, size) -> contiguous tier slice."""
+        return flat_lib.gather_blocks(vec, tier.block_ids, self.layout.align)
+
+    def scatter(self, sub: jnp.ndarray, tier: TierSlice) -> jnp.ndarray:
+        """Contiguous (tier_size,)/(k, tier_size) slice -> zero-filled
+        global width."""
+        return flat_lib.scatter_blocks(sub, tier.block_ids,
+                                       self.layout.num_blocks,
+                                       self.layout.align)
+
+
+def _tier_slice(plan: TrainPlan, layout: flat_lib.FlatLayout,
+                paths: Sequence[str], sizes, dtypes, index: int) -> TierSlice:
+    tier = plan.tiers[index]
+    leaf_on = tuple(not any(re.search(p, path) for p in tier.freeze_spec)
+                    for path in paths)
+    block_ids = layout.leaf_blocks(leaf_on)
+    pcount = sum(n for n, on in zip(sizes, leaf_on) if on)
+    tbytes = sum(n * np.dtype(d).itemsize
+                 for n, d, on in zip(sizes, dtypes, leaf_on) if on)
+    return TierSlice(name=tier.name, index=index,
+                     freeze_spec=tier.freeze_spec, leaf_on=leaf_on,
+                     block_ids=block_ids,
+                     size=len(block_ids) * layout.align,
+                     param_count=int(pcount), trainable_bytes=int(tbytes))
+
+
+def compile_plan(plan, y) -> CompiledPlan:
+    """Bind a plan (TrainPlan / dict / sequence) to the trainable tree.
+
+    Validates that every tier trains at least one leaf of a non-empty
+    ``y`` — a tier that freezes all of it would dispatch clients that
+    upload nothing and learn nothing, which is a fleet-configuration
+    bug, not a tier. (An empty ``y`` — the global freeze_spec froze the
+    whole model — compiles to zero-size tiers so analytic summaries
+    still work; the grid rejects it elsewhere.)
+    """
+    plan = TrainPlan.of(plan)
+    layout = flat_lib.FlatLayout.of(y)
+    paths = tuple(p for p, _ in basic.flatten_params(y))
+    if len(paths) != len(layout.sizes):
+        raise ValueError("trainable tree has non-dict structure the "
+                         "path-based plan cannot address")
+    tiers = tuple(_tier_slice(plan, layout, paths, layout.sizes,
+                              layout.dtypes, i) for i in range(len(plan)))
+    for t in tiers:
+        if paths and not any(t.leaf_on):
+            raise ValueError(f"tier {t.name!r} freezes every trainable "
+                             "leaf — it would train nothing")
+    return CompiledPlan(plan=plan, layout=layout, paths=paths, tiers=tiers)

@@ -154,16 +154,19 @@ def make_train_step(cfg: ModelConfig, mesh, y_struct):
                 x, NamedSharding(mesh, spec))
         return jax.tree_util.tree_map(one, tree, shard_y)
 
-    # the flat delta buffer's sharding rule lives in launch/sharding.py
-    # (shared with the simulation grid's mesh execution path)
+    # the flat delta buffer's and the cohort input batch's sharding
+    # rules live in launch/sharding.py (shared with the simulation
+    # grid's mesh execution path, so the two cannot drift)
     constrain_flat = shard_lib.flat_constrainer(mesh)
+    constrain_batch = shard_lib.cohort_constrainer(mesh)
 
     def loss_fn(params, mb):
         return dlm.train_loss(params, cfg, mb)
 
     round_step, server_opt = fedpt.make_round_fn(
         loss_fn, rc, constrain_fn=constrain,
-        constrain_flat_fn=constrain_flat)
+        constrain_flat_fn=constrain_flat,
+        constrain_batch_fn=constrain_batch)
 
     def train_step(y, sstate, frozen, batch, weights, seed):
         rng = jax.random.key(seed[0])

@@ -6,7 +6,9 @@ aggregation), and wire-level communication metering.
 ``fl.runtime.run_federated`` is the homogeneous-synchronous special case
 of ``sim.grid.run_grid``.
 """
-from repro.sim.devices import DeviceProfile, Fleet, make_fleet, FLEET_PRESETS
+from repro.sim.devices import (DeviceProfile, Fleet, make_fleet,
+                               FLEET_PRESETS, assign_tiers,
+                               capability_score)
 from repro.sim.grid import GridConfig, GridResult, run_grid
 from repro.sim.scheduler import (EventQueue, SyncRoundPlan, plan_sync_round,
                                  BufferedAsyncScheduler)

@@ -113,6 +113,56 @@ def _cross_silo(num_clients: int,
             for i in range(num_clients)]
 
 
+# ---------------------------------------------------------------------------
+# Capability -> trainability tier assignment (core/plan.py TrainPlan)
+
+
+def capability_score(p: DeviceProfile) -> float:
+    """Scalar capability of a device: geometric-mean link speed over the
+    compute slowdown. Higher = more capable = lower (more-trainable)
+    tier. Uplink dominates the FedPT round trip (0.25 vs 0.75 MB/s
+    reference links), and slow compute delays the upload just the same,
+    so both enter the score."""
+    link = (p.downlink_bps * p.uplink_bps) ** 0.5
+    return link / max(p.compute_multiplier, 1e-9)
+
+
+def assign_tiers(fleet: Fleet, n_tiers: int,
+                 assignment="capability") -> np.ndarray:
+    """(num_clients,) int32 tier index per client, tier 0 = most capable.
+
+    ``assignment`` is ``"capability"`` (quantile-split the fleet's
+    capability scores into ``n_tiers`` equal buckets; ties break toward
+    the more capable tier, so a homogeneous fleet lands entirely in
+    tier 0 — i.e. the plan's ``full`` tier), a callable
+    ``profile -> tier index``, or an explicit per-client index sequence.
+    """
+    n = len(fleet)
+    if callable(assignment):
+        tiers = np.asarray([int(assignment(p)) for p in fleet.profiles],
+                           np.int32)
+    elif isinstance(assignment, str):
+        if assignment != "capability":
+            raise ValueError(f"unknown tier assignment {assignment!r}; "
+                             "options: 'capability', a callable, or an "
+                             "explicit per-client index array")
+        scores = np.asarray([capability_score(p) for p in fleet.profiles])
+        # tier t's lower boundary sits at quantile 1 - (t+1)/n_tiers;
+        # strictly-below comparison sends boundary ties upward
+        cuts = np.quantile(scores, [1.0 - (t + 1) / n_tiers
+                                    for t in range(n_tiers - 1)])
+        tiers = (scores[:, None] < cuts[None, :]).sum(1).astype(np.int32)
+    else:
+        tiers = np.asarray(assignment, np.int32)
+        if tiers.shape != (n,):
+            raise ValueError(f"explicit tier assignment has shape "
+                             f"{tiers.shape}, fleet has {n} clients")
+    if tiers.size and (tiers.min() < 0 or tiers.max() >= n_tiers):
+        raise ValueError(f"tier indices must be in [0, {n_tiers}); got "
+                         f"range [{tiers.min()}, {tiers.max()}]")
+    return tiers
+
+
 FLEET_PRESETS: Dict[str, Callable[[int, np.random.Generator],
                                   List[DeviceProfile]]] = {
     "uniform": _uniform,

@@ -24,6 +24,7 @@ import numpy as np
 import repro.core.partition as part
 from repro.core import comm, dp as dp_lib, fedpt
 from repro.core import flat as flat_lib
+from repro.core import plan as plan_lib
 from repro.data import synthetic as syn
 from repro.launch import mesh as mesh_lib
 from repro.launch import sharding as shard_lib
@@ -69,6 +70,16 @@ class GridConfig:
     # wire metering are mesh-independent; histories match the
     # single-device run to fp32 round-off.
     mesh: Any = None
+    # --- trainability tiers (core/plan.py) ---
+    # None = every client trains the full freeze_spec trainable tree
+    # (the pre-plan system, bit for bit — as is a one-tier plan). A
+    # TrainPlan / {name: extra_freeze_spec} dict / (name, spec) sequence
+    # assigns each client a tier: weak devices train (and upload) less.
+    plan: Any = None
+    # "capability" (quantile-split devices.capability_score, most
+    # capable -> tier 0), an explicit per-client tier-index array, or a
+    # callable DeviceProfile -> tier index
+    tier_assignment: Any = "capability"
     # --- rng plumbing ---
     fleet_seed: int = 0                     # profile sampling
     device_seed: int = 13                   # availability/dropout/latency
@@ -88,6 +99,12 @@ class GridResult:
     # per-flush DP accounting (async mode with dp_noise_multiplier > 0):
     # flushes, padded_flushes, sigma, noise_multiplier, epsilon, delta
     dp: Optional[Dict[str, float]] = None
+    # trainability-tier breakdown (GridConfig.plan set): tier name ->
+    # {clients, down_bytes, up_bytes, transfers, uploads, ...}; the
+    # same per-tier traffic also lives in comm.tier_traffic
+    tier_stats: Optional[Dict[str, Dict[str, float]]] = None
+    # the CompiledPlan the run used (None without a plan)
+    plan: Any = None
 
 
 def num_clients(ds) -> int:
@@ -128,6 +145,23 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
     up_bytes = _uplink_bytes(y, rc.uplink_bits)  # shape-determined
     compute_seconds = rc.local_steps * grid.base_step_time
 
+    # trainability plan: capability->tier per client, tier-sliced uplink
+    # payloads (downlink stays the full y + seed for every tier — other
+    # tiers keep training the blocks a tier froze, so their current
+    # values cannot be regenerated from the seed)
+    if grid.plan is not None:
+        cplan = plan_lib.compile_plan(grid.plan, y)
+        tier_of_client = dev_lib.assign_tiers(fleet, len(cplan.tiers),
+                                              grid.tier_assignment)
+        tier_up = np.asarray(
+            [p["up"] for p in
+             wire.tier_payloads(y, cplan, rc.uplink_bits).values()],
+            np.int64)
+    else:
+        cplan = None
+        tier_of_client = None
+        tier_up = None
+
     data_rng = np.random.default_rng(seed + 77)  # == run_federated's stream
     dev_rng = np.random.default_rng([seed, grid.device_seed])
 
@@ -135,7 +169,8 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
                   up_bytes=up_bytes, compute_seconds=compute_seconds,
                   data_rng=data_rng, dev_rng=dev_rng, seed=seed,
                   data_kind=data_kind, eval_every=eval_every,
-                  eval_fn=eval_fn, log=log)
+                  eval_fn=eval_fn, log=log, cplan=cplan,
+                  tier_of_client=tier_of_client, tier_up=tier_up)
     if grid.mode == "sync":
         return _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid,
                          server_opt, **common)
@@ -150,13 +185,41 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
 # Synchronous cohorts
 
 
+def _tier_stats(report, cplan, tier_of_client):
+    """GridResult.tier_stats: the comm ledger's per-tier traffic plus
+    the fleet census (how many clients each tier owns)."""
+    if cplan is None:
+        return None
+    out = {}
+    for t in cplan.tiers:
+        rec = dict(report.tier_traffic.get(
+            t.name, {"down_bytes": 0, "up_bytes": 0, "transfers": 0,
+                     "uploads": 0}))
+        rec["clients"] = int(np.sum(tier_of_client == t.index))
+        # measured wire cost per upload (int8-aware), matching
+        # CommReport.tier_table(); the analytic fp32 slice size keeps
+        # its own key
+        rec["up_bytes_per_upload"] = (rec["up_bytes"] / rec["uploads"]
+                                      if rec["uploads"] else 0.0)
+        rec["trainable_bytes"] = t.trainable_bytes
+        out[t.name] = rec
+    return out
+
+
 def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
               fleet, report, down_bytes, up_bytes, compute_seconds,
-              data_rng, dev_rng, seed, data_kind, eval_every, eval_fn, log):
+              data_rng, dev_rng, seed, data_kind, eval_every, eval_fn, log,
+              cplan, tier_of_client, tier_up):
     mesh = mesh_lib.resolve_mesh(grid.mesh)
     constrain_flat = shard_lib.flat_constrainer(mesh) if mesh else None
+    constrain_batch = shard_lib.cohort_constrainer(mesh) if mesh else None
+    # a trivial (one-tier, nothing-extra-frozen) plan routes through the
+    # exact pre-plan engine: same trace, same history, bit for bit
+    tiered = cplan is not None and not cplan.trivial
     round_fn, sopt = fedpt.make_round_fn(loss_fn, rc, server_opt=server_opt,
-                                         constrain_flat_fn=constrain_flat)
+                                         constrain_flat_fn=constrain_flat,
+                                         constrain_batch_fn=constrain_batch,
+                                         plan=cplan)
     round_fn = jax.jit(round_fn, donate_argnums=(0, 1))
     sstate = sopt.init(y)
     N = num_clients(dataset)
@@ -170,8 +233,12 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
     t0 = None
     for r in range(rounds):
         cids = syn.sample_cohort(data_rng, N, m)
+        # tier-sliced uplink payloads feed the virtual clock: a lite
+        # client's smaller delta clears the 0.25 MB/s uplink sooner
+        cohort_up = (tier_up[tier_of_client[cids]] if cplan is not None
+                     else up_bytes)
         plan = sched_lib.plan_sync_round(
-            fleet, cids, down_bytes, up_bytes, compute_seconds, C, dev_rng,
+            fleet, cids, down_bytes, cohort_up, compute_seconds, C, dev_rng,
             deadline=grid.straggler_deadline)
         # the C slots the compiled round engine sees: participants in
         # arrival order, padded (weight 0) with the remaining cohort in
@@ -184,8 +251,10 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         batch, w = syn.cohort_batch(dataset, sel, rc.local_steps,
                                     rc.local_batch, data_rng, kind=data_kind)
         w = np.where(kept, w, 0.0).astype(np.float32)
-        y, sstate, metrics = round_fn(y, sstate, frozen, batch,
-                                      jnp.asarray(w),
+        args = (y, sstate, frozen, batch, jnp.asarray(w))
+        if tiered:
+            args += (jnp.asarray(tier_of_client[sel], jnp.int32),)
+        y, sstate, metrics = round_fn(*args,
                                       jax.random.key(seed * 100_003 + r))
         if r == 0:
             jax.block_until_ready(y)
@@ -194,8 +263,23 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         vt += plan.round_seconds
         n_dispatched = int(np.sum(plan.dispatched))
         n_uploads = n_dispatched - plan.dropouts
-        report.add_measured(down_bytes * n_dispatched, up_bytes * n_uploads,
-                            transfers=n_dispatched)
+        if cplan is not None:
+            # bill per tier: dispatches pay the (tier-invariant)
+            # downlink, uploads pay the tier-sliced uplink
+            cohort_tiers = tier_of_client[plan.cids]
+            uploaded = np.isfinite(plan.arrival)
+            for t in cplan.tiers:
+                sel_t = cohort_tiers == t.index
+                nd = int(np.sum(plan.dispatched & sel_t))
+                nu = int(np.sum(uploaded & sel_t))
+                if nd or nu:
+                    report.add_tier_measured(
+                        t.name, down_bytes * nd, int(tier_up[t.index]) * nu,
+                        transfers=nd, uploads=nu)
+        else:
+            report.add_measured(down_bytes * n_dispatched,
+                                up_bytes * n_uploads,
+                                transfers=n_dispatched)
         stats["dispatches"] += n_dispatched
         stats["uploads"] += n_uploads
         stats["offline"] += plan.offline
@@ -216,7 +300,9 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
     spr = (time.time() - t0) / max(rounds - 1, 1) if t0 else float("nan")
     return GridResult(y=y, frozen=frozen, history=history, comm=report,
                       seconds_per_round=spr, virtual_seconds=vt,
-                      fleet=fleet, mode="sync", scheduler_stats=stats)
+                      fleet=fleet, mode="sync", scheduler_stats=stats,
+                      tier_stats=_tier_stats(report, cplan, tier_of_client),
+                      plan=cplan)
 
 
 # ---------------------------------------------------------------------------
@@ -239,9 +325,13 @@ class _LaneCell:
 
 def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                fleet, report, down_bytes, up_bytes, compute_seconds,
-               data_rng, dev_rng, seed, data_kind, eval_every, eval_fn, log):
+               data_rng, dev_rng, seed, data_kind, eval_every, eval_fn, log,
+               cplan, tier_of_client, tier_up):
     if server_opt is None:
         server_opt = fedpt.resolve_server_opt(rc)
+    # trivial plans keep the pre-plan engine (lane-exact acceptance);
+    # per-tier metering still runs off the scheduler's tier counters
+    tiered = cplan is not None and not cplan.trivial
     # per-flush DP: the flush (goal_count buffered deltas, fixed
     # denominator) is the unit of composition — see core/dp.py
     flush_dp = accountant = None
@@ -258,14 +348,27 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
     mesh = mesh_lib.resolve_mesh(grid.mesh)
     constrain_flat = shard_lib.flat_constrainer(mesh) if mesh else None
     lane = grid.goal_count if grid.lanes is None else int(grid.lanes)
+    # one engine per tier: lanes are tier-homogeneous (pending clients
+    # group by tier below), so each tier's lane step traces exactly once
+    # at its own (lane, tier_size) width
+    tier_keys = [t.index for t in cplan.tiers] if tiered else [None]
     if lane > 0:
-        lane_step = jax.jit(fedpt.make_lane_step(
-            loss_fn, rc, lane, constrain_flat_fn=constrain_flat))
+        lane_steps = {
+            k: jax.jit(fedpt.make_lane_step(
+                loss_fn, rc, lane, constrain_flat_fn=constrain_flat,
+                tier=None if k is None else cplan.tiers[k],
+                plan=None if k is None else cplan))
+            for k in tier_keys}
     else:
-        client_step = jax.jit(fedpt.make_client_step(loss_fn, rc))
+        client_steps = {
+            k: jax.jit(fedpt.make_client_step(
+                loss_fn, rc,
+                tier=None if k is None else cplan.tiers[k],
+                plan=None if k is None else cplan))
+            for k in tier_keys}
     apply_fn = jax.jit(fedpt.make_buffered_apply(
-        server_opt, flush_dp=flush_dp, constrain_flat_fn=constrain_flat),
-        donate_argnums=(0, 1))
+        server_opt, flush_dp=flush_dp, constrain_flat_fn=constrain_flat,
+        plan=cplan), donate_argnums=(0, 1))
     staleness_fn = fedpt.get_staleness_fn(grid.staleness, **grid.staleness_kw)
     if flush_dp is not None:
         # the per-flush sensitivity bound (clip_norm / goal_count)
@@ -289,47 +392,57 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
     # processed in virtual-time order, so "the model right now" is exactly
     # what a client dispatched at the current event time downloads
     state = {"y": y, "sstate": server_opt.init(y), "applied": 0}
-    # lane mode: client steps dispatched since the last flush. They all
-    # trained on the model of the CURRENT server version (y only changes
-    # at flushes), so deferring them until the next flush and running
-    # them as (lane, ...) batches is exactly the sequential semantics —
-    # their completion times never depend on when the compute runs.
-    pending: List = []
+    # lane mode: client steps dispatched since the last flush, grouped
+    # by trainability tier (each group is one lane batch at its tier's
+    # width). They all trained on the model of the CURRENT server
+    # version (y only changes at flushes), so deferring them until the
+    # next flush and running them as (lane, ...) batches is exactly the
+    # sequential semantics — their completion times never depend on when
+    # the compute runs.
+    pending: Dict[Any, List] = {k: [] for k in tier_keys}
 
     def run_pending():
-        while pending:
-            chunk = pending[:lane]
-            del pending[:len(chunk)]
-            n = len(chunk)
-            # pad short lanes with a repeat of the last real batch: one
-            # fixed (lane, ...) shape -> lane_step never re-traces
-            stacked = {k: np.stack([b[k] for b, _ in chunk]
-                                   + [chunk[-1][0][k]] * (lane - n))
-                       for k in chunk[0][0]}
-            deltas, losses = lane_step(state["y"], frozen, stacked)
-            for i, (_, cell) in enumerate(chunk):
-                cell.delta, cell.loss = deltas[i], losses[i]
+        for key, queue in pending.items():
+            while queue:
+                chunk = queue[:lane]
+                del queue[:len(chunk)]
+                n = len(chunk)
+                # pad short lanes with a repeat of the last real batch:
+                # one fixed (lane, ...) shape -> lane_step never re-traces
+                stacked = {k: np.stack([b[k] for b, _ in chunk]
+                                       + [chunk[-1][0][k]] * (lane - n))
+                           for k in chunk[0][0]}
+                deltas, losses = lane_steps[key](state["y"], frozen, stacked)
+                for i, (_, cell) in enumerate(chunk):
+                    cell.delta, cell.loss = deltas[i], losses[i]
 
     def sample_cid(rng):
         return int(rng.integers(0, N))
+
+    def tier_of(cid):
+        return int(tier_of_client[cid]) if cplan is not None else None
 
     def run_client(cid, version):
         b, w = batch_fn(dataset, cid, rc.local_steps, rc.local_batch,
                         data_rng)
         if rc.uniform_weights or rc.dp_clip_norm > 0:
             w = 1.0  # DP / uniform weighting, as in the sync engine
-        # payload size is shape-determined: reuse the once-measured value
-        # instead of serializing every delta just to count its bytes
+        # payload size is shape-determined: reuse the once-measured
+        # (tier-sliced, when a plan is active) value instead of
+        # serializing every delta just to count its bytes
+        t = tier_of(cid)
+        up = int(tier_up[t]) if cplan is not None else up_bytes
+        key = t if tiered else None
         if lane > 0:
             cell = _LaneCell()
-            pending.append((b, cell))
-            return {"cell": cell, "weight": w, "up_bytes": up_bytes,
-                    "cid": cid}
-        delta, metrics = client_step(state["y"], frozen, b)
+            pending[key].append((b, cell))
+            return {"cell": cell, "weight": w, "up_bytes": up,
+                    "cid": cid, "tier": t}
+        delta, metrics = client_steps[key](state["y"], frozen, b)
         # loss stays a device scalar: converted once per flush, not per
         # client (a float() here would force a host round-trip per client)
         return {"delta": delta, "loss": metrics["client_loss"],
-                "weight": w, "up_bytes": up_bytes, "cid": cid}
+                "weight": w, "up_bytes": up, "cid": cid, "tier": t}
 
     def entry_arrays(e):
         cell = e.work.get("cell")
@@ -349,6 +462,12 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         wts = wts + [0.0] * (grid.goal_count - len(entries))
         args = (state["y"], state["sstate"], flat_deltas,
                 jnp.asarray(wts, jnp.float32))
+        if tiered:
+            # per-row tier ids drive the apply's block masks; padding
+            # rows carry tier 0 + weight 0 and fall out of both means
+            tids = ([e.work["tier"] for e in entries]
+                    + [0] * (grid.goal_count - len(entries)))
+            args += (jnp.asarray(tids, jnp.int32),)
         if flush_dp is not None:
             # one PRNG key per flush, from the same stream family as the
             # sync engine's per-round keys
@@ -374,7 +493,8 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         goal_count=grid.goal_count, staleness_fn=staleness_fn,
         sample_cid=sample_cid, run_client=run_client,
         apply_update=apply_update, down_bytes=down_bytes,
-        compute_seconds=compute_seconds, rng=dev_rng)
+        compute_seconds=compute_seconds, rng=dev_rng,
+        tier_of=tier_of if cplan is not None else None)
     t_wall = time.time()
     history = sched.run(rounds, deadline=grid.async_deadline)
     spr = (time.time() - t_wall) / max(rounds, 1)
@@ -383,8 +503,18 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
             print(f"  update {rec['round']}: " + " ".join(
                 f"{k}={v:.4f}" for k, v in rec.items() if k != "round"))
 
-    report.add_measured(down_bytes * sched.dispatches, sched.up_bytes_total,
-                        transfers=sched.dispatches)
+    if cplan is not None:
+        for t in cplan.tiers:
+            nd = sched.tier_dispatches.get(t.index, 0)
+            if nd or sched.tier_uploads.get(t.index, 0):
+                report.add_tier_measured(
+                    t.name, down_bytes * nd,
+                    sched.tier_up_bytes.get(t.index, 0), transfers=nd,
+                    uploads=sched.tier_uploads.get(t.index, 0))
+    else:
+        report.add_measured(down_bytes * sched.dispatches,
+                            sched.up_bytes_total,
+                            transfers=sched.dispatches)
     stats = {"dispatches": sched.dispatches, "uploads": sched.completions,
              "offline": 0, "dropouts": sched.dropouts,
              "deadline_drops": 0}
@@ -393,4 +523,6 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                       comm=report, seconds_per_round=spr,
                       virtual_seconds=vt, fleet=fleet, mode="async",
                       scheduler_stats=stats,
-                      dp=accountant.summary() if accountant else None)
+                      dp=accountant.summary() if accountant else None,
+                      tier_stats=_tier_stats(report, cplan, tier_of_client),
+                      plan=cplan)

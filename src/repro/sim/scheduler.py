@@ -25,6 +25,7 @@ import dataclasses
 import heapq
 import itertools
 import math
+from collections import Counter
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -90,13 +91,19 @@ class SyncRoundPlan:
 
 
 def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
-                    down_bytes: int, up_bytes: int, compute_seconds: float,
+                    down_bytes: int, up_bytes, compute_seconds: float,
                     clients_needed: int, rng: np.random.Generator,
                     deadline: float = math.inf) -> SyncRoundPlan:
     """Simulate one synchronous round over the cohort `cids` (possibly
-    over-selected: len(cids) >= clients_needed) and decide who counts."""
+    over-selected: len(cids) >= clients_needed) and decide who counts.
+
+    ``up_bytes`` is a scalar, or a per-cohort-member array when clients
+    upload tier-sliced payloads of different sizes (core/plan.py): a
+    lite-tier phone's smaller delta clears the uplink sooner, and the
+    virtual clock sees it."""
     cids = np.asarray(cids, np.int64)
     m = len(cids)
+    up_arr = np.broadcast_to(np.asarray(up_bytes, np.int64), (m,))
     # fixed-count rng draws so the stream is deterministic regardless of
     # outcomes (and entirely separate from the data-sampling stream)
     avail_u = rng.random(m)
@@ -116,7 +123,7 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
             # never uploads; the server just never hears back
             continue
         will_complete[i] = True
-        t = p.round_trip_seconds(down_bytes, up_bytes, compute_seconds)
+        t = p.round_trip_seconds(down_bytes, int(up_arr[i]), compute_seconds)
         arrival[i] = t
         q.push(t, "complete", idx=i)
 
@@ -178,13 +185,21 @@ class BufferedAsyncScheduler:
 
     ``down_bytes`` and ``compute_seconds`` are constants of the round
     configuration (payload sizes are shape-determined).
+
+    ``tier_of(cid) -> int`` (optional) names each client's trainability
+    tier (core/plan.py): the tier is recorded on every dispatch — the
+    payload of the queued event carries it, and the per-tier counters
+    (``tier_dispatches``/``tier_uploads``/``tier_up_bytes``) let the
+    grid bill wire traffic tier by tier, mid-round dropouts included
+    (they consumed a tier-invariant downlink but never upload).
     """
 
     def __init__(self, fleet: dev_lib.Fleet, concurrency: int,
                  goal_count: int, staleness_fn: Callable[[float], float],
                  sample_cid: Callable, run_client: Callable,
                  apply_update: Callable, down_bytes: int,
-                 compute_seconds: float, rng: np.random.Generator):
+                 compute_seconds: float, rng: np.random.Generator,
+                 tier_of: Optional[Callable[[int], int]] = None):
         if goal_count < 1:
             raise ValueError("goal_count must be >= 1")
         self.fleet = fleet
@@ -197,12 +212,16 @@ class BufferedAsyncScheduler:
         self.down_bytes = int(down_bytes)
         self.compute_seconds = float(compute_seconds)
         self.rng = rng
+        self.tier_of = tier_of
         # counters (read by the grid for the comm ledger)
         self.dispatches = 0
         self.dropouts = 0
         self.completions = 0
         self.up_bytes_total = 0
         self.version = 0
+        self.tier_dispatches: Counter = Counter()
+        self.tier_uploads: Counter = Counter()
+        self.tier_up_bytes: Counter = Counter()
 
     def _dispatch(self, q: EventQueue, now: float) -> None:
         # redraw until the availability check passes (bounded, so a fleet
@@ -215,17 +234,21 @@ class BufferedAsyncScheduler:
         else:
             raise RuntimeError("no available client after 1000 draws")
         self.dispatches += 1
+        tier = int(self.tier_of(cid)) if self.tier_of is not None else None
+        if tier is not None:
+            self.tier_dispatches[tier] += 1
         if self.rng.random() < p.dropout:
             # dies after download + local work, before upload
             t = now + (self.down_bytes / p.downlink_bps
                        + self.compute_seconds * p.compute_multiplier)
-            q.push(t, "failed", cid=cid)
+            q.push(t, "failed", cid=cid, tier=tier)
             return
         work = self.run_client(cid, self.version)
         t = now + p.round_trip_seconds(self.down_bytes,
                                        int(work["up_bytes"]),
                                        self.compute_seconds)
-        q.push(t, "complete", cid=cid, version=self.version, work=work)
+        q.push(t, "complete", cid=cid, version=self.version, work=work,
+               tier=tier)
 
     def _flush(self, buffer, now: float, records) -> None:
         metrics = self.apply_update(buffer, now, self.version)
@@ -276,6 +299,9 @@ class BufferedAsyncScheduler:
             s = self.version - ev.payload["version"]
             self.completions += 1
             self.up_bytes_total += int(work["up_bytes"])
+            if ev.payload.get("tier") is not None:
+                self.tier_uploads[ev.payload["tier"]] += 1
+                self.tier_up_bytes[ev.payload["tier"]] += int(work["up_bytes"])
             buffer.append(BufferEntry(
                 work=work,
                 weight=float(self.staleness_fn(s)) * float(work["weight"]),

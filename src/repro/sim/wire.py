@@ -137,6 +137,28 @@ def uplink_bytes(delta, bits: int = 0) -> int:
     return len(encode_uplink(delta, bits))
 
 
+def tier_payloads(y, cplan, bits: int = 0) -> dict:
+    """Per-tier wire payload sizes under a trainability plan:
+    ``{tier name: {"down": bytes, "up": bytes}}``.
+
+    Uplink is the tier's *sliced* delta — only the leaves the tier
+    trains are serialized (measured for fp32/int8, analytic int-k
+    otherwise). Downlink is tier-invariant: every tier downloads the
+    full trainable tree + seed, because blocks a tier froze are still
+    trained by other tiers and cannot be regenerated from the seed.
+    """
+    down = downlink_bytes(y)
+    out = {}
+    for t in cplan.tiers:
+        y_t, _ = cplan.split(y, t)
+        if bits in (0, 8):
+            up = uplink_bytes(y_t, bits=bits)
+        else:
+            up = compress.quantized_uplink_bytes(y_t, bits)
+        out[t.name] = {"down": down, "up": up}
+    return out
+
+
 def assert_matches_analytic(y, frozen, uplink_bits: int = 0) -> None:
     """Cross-check: measured wire bytes == the analytic ledger. Raises
     AssertionError on drift (used by tests and the grid's paranoia mode)."""

@@ -141,6 +141,47 @@ def test_flush_accountant_multiplicity_scales_sensitivity():
         distinct.record_flush(8, multiplicity=0)
 
 
+def test_flush_accountant_multiplicity_sensitivity_is_quadratic():
+    """Multiplicity m composes as m^2 in RDP: epsilon grows monotonically
+    in m, and one m=2 flush costs exactly what four m=1 flushes cost
+    (2^2 = 4 in the sum), matching the m * clip/goal_count sensitivity."""
+    cfg = dp.FlushDPConfig(clip_norm=1.0, noise_multiplier=2.0,
+                           goal_count=8)
+    eps = []
+    for m in (1, 2, 3, 4):
+        acc = dp.FlushAccountant(cfg)
+        for _ in range(6):
+            acc.record_flush(8, multiplicity=m)
+        eps.append(acc.epsilon(1e-5))
+    assert eps[0] < eps[1] < eps[2] < eps[3]
+    one_m2 = dp.FlushAccountant(cfg)
+    one_m2.record_flush(8, multiplicity=2)
+    four_m1 = dp.FlushAccountant(cfg)
+    for _ in range(4):
+        four_m1.record_flush(8, multiplicity=1)
+    assert one_m2.epsilon(1e-5) == pytest.approx(four_m1.epsilon(1e-5))
+    assert one_m2.flushes == 1 and four_m1.flushes == 4
+
+
+def test_flush_accountant_repeated_client_stream():
+    """A realistic repeated-client stream: flushes record the observed
+    per-flush multiplicity as they come; the summary reports the max and
+    the epsilon reflects the whole stream, not only the worst flush."""
+    cfg = dp.FlushDPConfig(clip_norm=0.5, noise_multiplier=1.5,
+                           goal_count=4)
+    acc = dp.FlushAccountant(cfg)
+    for m in (1, 1, 2, 1, 3, 1):
+        acc.record_flush(4, multiplicity=m)
+    s = acc.summary(1e-5)
+    assert s["flushes"] == 6 and s["max_multiplicity"] == 3
+    # strictly between the all-m=1 and all-m=3 compositions
+    lo, hi = dp.FlushAccountant(cfg), dp.FlushAccountant(cfg)
+    for _ in range(6):
+        lo.record_flush(4, multiplicity=1)
+        hi.record_flush(4, multiplicity=3)
+    assert lo.epsilon(1e-5) < s["epsilon"] < hi.epsilon(1e-5)
+
+
 def test_flush_accountant_padding_spends_same_budget():
     """A padded (drained) flush is the SAME mechanism — sigma and the
     per-flush epsilon cost do not depend on the fill."""

@@ -223,6 +223,52 @@ def test_padded_flush_dp_fixed_denominator_on_mesh():
                                    rtol=1e-4, atol=1e-6, err_msg=ka)
 
 
+def test_async_grid_mixed_tier_mesh_matches_single_device():
+    """Trainability tiers under mesh sharding: tier-grouped lanes run at
+    tier width and scatter into the sharded (K, size) buffer; the mixed
+    fleet's history matches single-device to fp32 round-off, and the
+    per-tier wire ledger is mesh-independent (exact)."""
+    ds = make_ds()
+    plan = {"full": (), "mid": (r"/bias$",), "lite": (r"/kernel$",)}
+    assign = [0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2]
+    runs = {}
+    for mesh in (None, "debug"):
+        gc = simgrid.GridConfig(mode="async", fleet="pareto-mobile",
+                                concurrency=6, goal_count=3, mesh=mesh,
+                                plan=plan, tier_assignment=assign)
+        runs[mesh] = simgrid.run_grid(init_fn, loss_fn, ds, RC, 8,
+                                      grid=gc, seed=2)
+    assert_histories_match(runs[None], runs["debug"])
+    assert runs[None].comm.tier_traffic == runs["debug"].comm.tier_traffic
+    st = runs["debug"].tier_stats
+    assert set(st) == {"full", "mid", "lite"}
+    assert sum(r["up_bytes"] for r in st.values()) \
+        == runs["debug"].comm.measured_up_bytes
+
+
+def test_sync_grid_mixed_tier_mesh_matches_single_device():
+    """Mixed-tier SYNC cohorts on the debug mesh (per-row tier masks in
+    the round engine + the cohort-input batch constrainer) reproduce the
+    single-device run to fp32 round-off."""
+    ds = make_ds()
+    plan = {"full": (), "lite": (r"/bias$",)}
+    assign = [0, 1] * 6
+    runs = {}
+    for mesh in (None, "debug"):
+        gc = simgrid.GridConfig(mode="sync", mesh=mesh, plan=plan,
+                                tier_assignment=assign)
+        runs[mesh] = simgrid.run_grid(init_fn, loss_fn, ds, RC, 4,
+                                      grid=gc, seed=1)
+    for ha, hb in zip(runs[None].history, runs["debug"].history):
+        assert ha["virtual_seconds"] == hb["virtual_seconds"]
+        assert ha["loss"] == pytest.approx(hb["loss"], rel=1e-5)
+    assert runs[None].comm.tier_traffic == runs["debug"].comm.tier_traffic
+    for (ka, va), (kb, vb) in zip(basic.flatten_params(runs[None].y),
+                                  basic.flatten_params(runs["debug"].y)):
+        np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                                   rtol=1e-5, atol=1e-6, err_msg=ka)
+
+
 def test_async_grid_mesh_dp_deadline_drain():
     """End-to-end: a deadline-drained DP run on the (2,2) debug mesh
     matches the single-device drain, padded flush and all."""

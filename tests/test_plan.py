@@ -1,0 +1,203 @@
+"""Trainability plans (core/plan.py): compilation to block sub-layouts,
+gather/scatter index maps, capability->tier assignment, per-tier
+summaries and tier-sliced wire payloads."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.partition as part
+from repro.core import comm, flat as flat_lib, plan as plan_lib
+from repro.nn import basic
+from repro.sim import devices as dev_lib
+from repro.sim import wire
+
+
+def init_fn(seed):
+    return {"enc": basic.init_dense(seed, "enc", 48, 16, jnp.float32,
+                                    bias=True),
+            "head": basic.init_dense(seed + 1, "head", 16, 4, jnp.float32,
+                                     bias=True)}
+
+
+PLAN = {"full": (), "mid": (r"^head/",), "lite": (r"^head/", r"/bias$")}
+
+
+def test_train_plan_construction():
+    p = plan_lib.TrainPlan.of(PLAN)
+    assert p.names == ("full", "mid", "lite")
+    assert plan_lib.TrainPlan.of(p) is p
+    q = plan_lib.TrainPlan.of([("a", ()), plan_lib.Tier("b", (r"x",))])
+    assert q.names == ("a", "b")
+    assert len(plan_lib.TrainPlan.single()) == 1
+    with pytest.raises(ValueError, match="duplicate"):
+        plan_lib.TrainPlan.of([("a", ()), ("a", ())])
+    with pytest.raises(ValueError, match="at least one"):
+        plan_lib.TrainPlan(())
+
+
+def test_compile_plan_block_sublayouts():
+    y, _ = part.partition(init_fn(0), ())
+    cp = plan_lib.compile_plan(PLAN, y)
+    assert not cp.trivial
+    assert cp.layout.size == sum(cp.layout.padded)
+    full, mid, lite = cp.tiers
+    # full trains everything; mid drops the head; lite also drops biases
+    assert all(full.leaf_on)
+    assert full.size == cp.layout.size
+    assert mid.size < full.size and lite.size < mid.size
+    assert lite.param_count == 48 * 16  # enc kernel only
+    # block ids are whole-block selections in ascending order
+    for t in cp.tiers:
+        assert t.size == len(t.block_ids) * cp.layout.align
+        assert np.all(np.diff(t.block_ids) > 0) or len(t.block_ids) <= 1
+    # stacked masks match per-tier masks
+    bm = cp.block_masks()
+    assert bm.shape == (3, cp.layout.num_blocks)
+    assert np.all(bm[0] == 1.0)
+    with pytest.raises(ValueError, match="train nothing|trains? nothing"
+                                         "|every trainable"):
+        plan_lib.compile_plan({"dead": (r".",)}, y)
+
+
+def test_trivial_detection():
+    y, _ = part.partition(init_fn(0), ())
+    assert plan_lib.compile_plan(plan_lib.TrainPlan.single(), y).trivial
+    # a one-tier plan that freezes something is NOT trivial
+    assert not plan_lib.compile_plan({"only": (r"/bias$",)}, y).trivial
+    # a two-tier plan is never trivial, even if tier 1 freezes nothing
+    assert not plan_lib.compile_plan({"a": (), "b": ()}, y).trivial
+
+
+def test_gather_scatter_roundtrip():
+    y, _ = part.partition(init_fn(1), ())
+    cp = plan_lib.compile_plan(PLAN, y)
+    vec = jnp.arange(cp.layout.size, dtype=jnp.float32) + 1.0
+    for t in cp.tiers:
+        sub = cp.gather(vec, t)
+        assert sub.shape == (t.size,)
+        back = cp.scatter(sub, t)
+        mask = flat_lib.expand_block_mask(cp.layout.block_mask(t.leaf_on),
+                                          cp.layout.align)
+        np.testing.assert_array_equal(np.asarray(back),
+                                      np.asarray(vec * mask))
+        # row-batched forms agree with the vector forms
+        mat = jnp.stack([vec, 2.0 * vec])
+        np.testing.assert_array_equal(np.asarray(cp.gather(mat, t)[1]),
+                                      np.asarray(cp.gather(2.0 * vec, t)))
+        np.testing.assert_array_equal(
+            np.asarray(cp.scatter(cp.gather(mat, t), t)[0]),
+            np.asarray(back))
+
+
+def test_split_matches_gather():
+    """The tier subtree's own FlatLayout IS the contiguous block slice:
+    flatten(split) == gather(flatten(full)) — the property that lets a
+    tier's delta scatter straight into the global buffer."""
+    y, _ = part.partition(init_fn(2), ())
+    cp = plan_lib.compile_plan(PLAN, y)
+    gvec = cp.layout.flatten(y)
+    for t in cp.tiers:
+        y_t, extra = cp.split(y, t)
+        lt = flat_lib.FlatLayout.of(y_t)
+        assert lt.size == t.size
+        np.testing.assert_array_equal(np.asarray(lt.flatten(y_t)),
+                                      np.asarray(cp.gather(gvec, t)))
+        # split halves reassemble the full tree
+        merged = part.merge(y_t, extra)
+        for (pa, la), (pb, lb) in zip(basic.flatten_params(y),
+                                      basic.flatten_params(merged)):
+            assert pa == pb and bool(jnp.all(la == lb))
+
+
+def test_summarize_plan_rows_and_delegation():
+    params = init_fn(0)
+    rows = part.summarize_plan(params, (), PLAN)
+    assert [r["tier"] for r in rows] == ["full", "mid", "lite"]
+    # monotone: freezing more raises the comm reduction, shrinks uplink
+    assert rows[0]["comm_reduction"] < rows[1]["comm_reduction"] \
+        < rows[2]["comm_reduction"]
+    assert rows[0]["trainable_bytes"] > rows[1]["trainable_bytes"] \
+        > rows[2]["trainable_bytes"]
+    for r in rows:
+        assert r["total_params"] == rows[0]["total_params"]
+    # the one-tier path IS summarize (old API as a one-tier plan)
+    s = part.summarize(params, (r"/bias$",))
+    row = part.summarize_plan(params, (r"/bias$",),
+                              plan_lib.TrainPlan.single())[0]
+    assert {k: v for k, v in row.items() if k != "tier"} == s
+
+
+def test_summarize_survives_all_frozen_spec():
+    """summarize() must keep working when the global freeze_spec freezes
+    the whole model (trainable_params == 0), as freeze-fraction sweeps
+    do — compile_plan only rejects dead TIERS of a non-empty tree."""
+    params = init_fn(0)
+    s = part.summarize(params, (r".",))
+    assert s["trainable_params"] == 0 and s["trainable_pct"] == 0.0
+    assert s["total_params"] == part.summarize(params, ())["total_params"]
+    cp = plan_lib.compile_plan(plan_lib.TrainPlan.single(), {})
+    assert cp.trivial and cp.tiers[0].size == 0
+
+
+def test_wire_tier_payloads():
+    y, _ = part.partition(init_fn(0), ())
+    cp = plan_lib.compile_plan(PLAN, y)
+    pay = wire.tier_payloads(y, cp)
+    # full tier == the global payloads; downlink is tier-invariant
+    assert pay["full"]["up"] == wire.uplink_bytes(y)
+    down = wire.downlink_bytes(y)
+    assert all(p["down"] == down for p in pay.values())
+    assert pay["lite"]["up"] < pay["mid"]["up"] < pay["full"]["up"]
+    # true bytes, not padded: lite uplink = enc kernel fp32 bytes
+    assert pay["lite"]["up"] == 48 * 16 * 4
+    # int8 slicing goes through the measured wire format
+    pay8 = wire.tier_payloads(y, cp, bits=8)
+    y_lite, _ = cp.split(y, cp.tiers[2])
+    assert pay8["lite"]["up"] == wire.uplink_bytes(y_lite, bits=8)
+
+
+def test_assign_tiers_capability():
+    uni = dev_lib.make_fleet(8, "uniform")
+    # homogeneous fleet: ties break toward the most capable tier -> all
+    # clients land in tier 0 (the plan's "full")
+    np.testing.assert_array_equal(dev_lib.assign_tiers(uni, 3),
+                                  np.zeros(8, np.int32))
+    par = dev_lib.make_fleet(60, "pareto-mobile", seed=3)
+    tiers = dev_lib.assign_tiers(par, 3)
+    counts = np.bincount(tiers, minlength=3)
+    assert counts.sum() == 60 and all(c > 0 for c in counts)
+    # roughly equal quantile buckets
+    assert counts.max() - counts.min() <= 6
+    # more capable clients get lower tiers
+    scores = np.array([dev_lib.capability_score(p) for p in par.profiles])
+    assert scores[tiers == 0].min() >= scores[tiers == 2].max()
+
+
+def test_assign_tiers_explicit_and_callable():
+    fleet = dev_lib.make_fleet(4, "uniform")
+    np.testing.assert_array_equal(
+        dev_lib.assign_tiers(fleet, 2, [0, 1, 0, 1]), [0, 1, 0, 1])
+    by_compute = dev_lib.assign_tiers(
+        fleet, 2, lambda p: 0 if p.compute_multiplier <= 1.0 else 1)
+    np.testing.assert_array_equal(by_compute, [0, 0, 0, 0])
+    with pytest.raises(ValueError, match="shape"):
+        dev_lib.assign_tiers(fleet, 2, [0, 1])
+    with pytest.raises(ValueError, match="tier indices"):
+        dev_lib.assign_tiers(fleet, 2, [0, 1, 2, 0])
+    with pytest.raises(ValueError, match="unknown tier assignment"):
+        dev_lib.assign_tiers(fleet, 2, "galaxy-brain")
+
+
+def test_tier_comm_report_ledger():
+    rep = comm.CommReport(full_bytes=1000, trainable_bytes=100)
+    rep.add_tier_measured("full", 100, 50, transfers=2, uploads=2)
+    rep.add_tier_measured("lite", 100, 5, transfers=1, uploads=1)
+    rep.add_tier_measured("full", 50, 25, transfers=1, uploads=1)
+    assert rep.measured_down_bytes == 250
+    assert rep.measured_up_bytes == 80
+    assert rep.transfers == 4
+    assert rep.tier_traffic["full"] == {"down_bytes": 150, "up_bytes": 75,
+                                        "transfers": 3, "uploads": 3}
+    tbl = rep.tier_table()
+    assert tbl["lite"]["up_bytes_per_upload"] == 5.0

@@ -326,6 +326,188 @@ def test_async_grid_dp_drained_flush_keeps_noise_scale():
         assert a["delta_norm"] == b["delta_norm"]
 
 
+# ---------------------------------------------------------------------------
+# Trainability tiers (core/plan.py) in the grid
+
+TIER_PLAN = {"full": (), "mid": (r"/bias$",), "lite": (r"/kernel$",)}
+
+
+def _assert_same_run(a, b):
+    assert [h["loss"] for h in a.history] == [h["loss"] for h in b.history]
+    for ha, hb in zip(a.history, b.history):
+        assert ha["virtual_seconds"] == hb["virtual_seconds"]
+    for (pa, la), (pb, lb) in zip(basic.flatten_params(a.y),
+                                  basic.flatten_params(b.y)):
+        assert pa == pb and bool(jnp.all(la == lb)), pa
+    assert a.comm.measured_down_bytes == b.comm.measured_down_bytes
+    assert a.comm.measured_up_bytes == b.comm.measured_up_bytes
+    assert a.scheduler_stats == b.scheduler_stats
+
+
+def test_sync_grid_one_tier_plan_bit_for_bit():
+    """Acceptance: a one-tier plan covering all clients IS the pre-plan
+    single-spec system — same history, params, clock and wire bytes."""
+    from repro.core import plan as plan_lib
+    ds = make_ds()
+    ref = simgrid.run_grid(init_fn, loss_fn, ds, RC, 4, seed=3)
+    gc = simgrid.GridConfig(plan=plan_lib.TrainPlan.single())
+    got = simgrid.run_grid(init_fn, loss_fn, ds, RC, 4, grid=gc, seed=3)
+    _assert_same_run(ref, got)
+    # ... and the whole ledger lands on the single tier
+    assert set(got.tier_stats) == {"full"}
+    assert got.tier_stats["full"]["up_bytes"] == ref.comm.measured_up_bytes
+    assert got.tier_stats["full"]["clients"] == ds.num_clients
+
+
+def test_async_grid_one_tier_plan_lane_exact():
+    """Acceptance: the async lane engine under a one-tier plan replays
+    the pre-plan run exactly (virtual clock, staleness, params)."""
+    from repro.core import plan as plan_lib
+    ds = make_ds(n_clients=16)
+    gc = simgrid.GridConfig(mode="async", fleet="pareto-mobile",
+                            concurrency=6, goal_count=3)
+    ref = simgrid.run_grid(init_fn, loss_fn, ds, RC, 8, grid=gc, seed=2)
+    got = simgrid.run_grid(
+        init_fn, loss_fn, ds, RC, 8, seed=2,
+        grid=dataclasses.replace(gc, plan=plan_lib.TrainPlan.single()))
+    _assert_same_run(ref, got)
+    for ha, hb in zip(ref.history, got.history):
+        assert ha["staleness_mean"] == hb["staleness_mean"]
+
+
+def test_async_grid_mixed_tiers_bills_fewer_uplink():
+    """Acceptance: a mixed-tier fleet bills strictly fewer uplink bytes
+    than the all-`full` run, with per-tier byte counts reported."""
+    ds = make_ds(n_clients=12)
+    gc = simgrid.GridConfig(mode="async", fleet="pareto-mobile",
+                            concurrency=6, goal_count=3)
+    full = simgrid.run_grid(init_fn, loss_fn, ds, RC, 10, grid=gc, seed=5)
+    mixed = simgrid.run_grid(
+        init_fn, loss_fn, ds, RC, 10, seed=5,
+        grid=dataclasses.replace(gc, plan=TIER_PLAN))
+    assert mixed.history[-1]["loss"] < mixed.history[0]["loss"]
+    st = mixed.tier_stats
+    assert set(st) == {"full", "mid", "lite"}
+    assert sum(r["clients"] for r in st.values()) == ds.num_clients
+    # per-tier bytes are reported and sum to the ledger totals
+    assert sum(r["up_bytes"] for r in st.values()) \
+        == mixed.comm.measured_up_bytes
+    assert sum(r["down_bytes"] for r in st.values()) \
+        == mixed.comm.measured_down_bytes
+    # every mid/lite upload is strictly smaller than a full upload, so
+    # with any non-full participation the mixed fleet pays less uplink
+    # per upload on average
+    per_up_mixed = mixed.comm.measured_up_bytes / max(
+        mixed.scheduler_stats["uploads"], 1)
+    per_up_full = full.comm.measured_up_bytes / max(
+        full.scheduler_stats["uploads"], 1)
+    assert sum(r["uploads"] for r in st.values() if r["uploads"]) > 0
+    assert any(r["uploads"] > 0 for k, r in st.items() if k != "full")
+    assert per_up_mixed < per_up_full
+    # tier uplink is billed at the measured sliced payload, and
+    # tier_stats' per-upload figure matches the measured ledger
+    y_mid, _ = mixed.plan.split(mixed.y, mixed.plan.tiers[1])
+    assert st["mid"]["up_bytes"] == wire.uplink_bytes(y_mid) \
+        * st["mid"]["uploads"]
+    for name, rec in st.items():
+        want = rec["up_bytes"] / rec["uploads"] if rec["uploads"] else 0.0
+        assert rec["up_bytes_per_upload"] == want, name
+        assert rec["up_bytes_per_upload"] \
+            == mixed.comm.tier_table()[name]["up_bytes_per_upload"]
+
+
+def test_sync_grid_mixed_tiers():
+    """Mixed tiers in the synchronous cohort engine: per-row tier masks
+    keep frozen-for-this-tier leaves still when no capable client is
+    sampled, and the wire bills tier-sliced uploads."""
+    ds = make_ds(n_clients=9)
+    # explicit census: clients 0-2 full, 3-5 mid (bias frozen), 6-8 lite
+    assign = [0, 0, 0, 1, 1, 1, 2, 2, 2]
+    gc = simgrid.GridConfig(plan=TIER_PLAN, tier_assignment=assign)
+    res = simgrid.run_grid(init_fn, loss_fn, ds, RC, 4, grid=gc, seed=1)
+    assert res.history[-1]["loss"] < res.history[0]["loss"]
+    st = res.tier_stats
+    assert [st[k]["clients"] for k in ("full", "mid", "lite")] == [3, 3, 3]
+    assert sum(r["up_bytes"] for r in st.values()) \
+        == res.comm.measured_up_bytes
+    assert res.comm.measured_up_bytes > 0
+    # lite uploads cost the bias bytes only
+    if st["lite"]["uploads"]:
+        y_lite, _ = res.plan.split(res.y, res.plan.tiers[2])
+        assert st["lite"]["up_bytes"] == wire.uplink_bytes(y_lite) \
+            * st["lite"]["uploads"]
+
+
+def test_sync_grid_lite_only_cohort_freezes_masked_leaves():
+    """A cohort made entirely of kernel-frozen clients must leave every
+    kernel untouched — exact freezing, not just down-weighting."""
+    ds = make_ds(n_clients=6)
+    gc = simgrid.GridConfig(plan={"full": (), "lite": (r"/kernel$",)},
+                            tier_assignment=[1] * 6)
+    res = simgrid.run_grid(init_fn, loss_fn, ds, RC, 3, grid=gc, seed=0)
+    y0, _ = part.partition(init_fn(0), ())
+    assert bool(jnp.all(res.y["dense"]["kernel"] == y0["dense"]["kernel"]))
+    assert not bool(jnp.all(res.y["dense"]["bias"] == y0["dense"]["bias"]))
+
+
+def test_async_grid_mixed_tiers_dp():
+    """Tiers compose with per-flush DP: the masked, clipped row keeps
+    sensitivity clip/goal_count, so sigma and the accountant are
+    tier-independent."""
+    ds = make_ds(n_clients=10)
+    rc = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0,
+                           dp_clip_norm=0.5, dp_noise_multiplier=0.4)
+    gc = simgrid.GridConfig(mode="async", concurrency=5, goal_count=3,
+                            plan=TIER_PLAN,
+                            tier_assignment=[0, 0, 0, 1, 1, 1, 2, 2, 2, 2])
+    a = simgrid.run_grid(init_fn, loss_fn, ds, rc, 6, grid=gc, seed=4)
+    b = simgrid.run_grid(init_fn, loss_fn, ds, rc, 6, grid=gc, seed=4)
+    assert [h["loss"] for h in a.history] == [h["loss"] for h in b.history]
+    assert a.dp == b.dp
+    assert a.dp["sigma"] == pytest.approx(0.4 * 0.5 / 3)
+    assert a.dp["flushes"] == 6
+
+
+# ---------------------------------------------------------------------------
+# FlushAccountant satellites: repeated clients, multiplicity, and the
+# staleness-weight rejection path, end to end through the grid
+
+
+def test_async_grid_dp_repeated_clients_raise_multiplicity():
+    """With-replacement dispatch over a 2-client dataset guarantees one
+    client owns several rows of a 3-deep flush: the accountant must see
+    multiplicity > 1 and charge more epsilon than a distinct-client
+    composition of the same length."""
+    ds = make_ds(n_clients=2)
+    rc = fedpt.RoundConfig(2, 2, 8, "sgd", 0.1, "sgd", 1.0,
+                           dp_clip_norm=0.5, dp_noise_multiplier=1.0)
+    gc = simgrid.GridConfig(mode="async", concurrency=4, goal_count=3)
+    res = simgrid.run_grid(init_fn, loss_fn, ds, rc, 5, grid=gc, seed=7)
+    assert res.dp["max_multiplicity"] >= 2
+    from repro.core import dp as dp_lib
+    distinct = dp_lib.FlushAccountant(dp_lib.FlushDPConfig(
+        clip_norm=0.5, noise_multiplier=1.0, goal_count=3))
+    for _ in range(res.dp["flushes"]):
+        distinct.record_flush(3, multiplicity=1)
+    assert res.dp["epsilon"] > distinct.epsilon(res.dp["delta"])
+
+
+def test_async_grid_dp_rejects_amplifying_staleness_weight():
+    """Per-flush DP calibrates sigma for weights <= 1; a staleness fn
+    that amplifies must be rejected, not silently under-noised."""
+    ds = make_ds(n_clients=8)
+    rc = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0,
+                           dp_clip_norm=0.5, dp_noise_multiplier=0.4)
+    gc = simgrid.GridConfig(mode="async", concurrency=4, goal_count=3,
+                            staleness=lambda s: 1.0 + s)
+    with pytest.raises(ValueError, match=r"\[0, 1\]"):
+        simgrid.run_grid(init_fn, loss_fn, ds, rc, 3, grid=gc, seed=1)
+    # the same amplifying weighting is fine WITHOUT DP
+    rc0 = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0)
+    res = simgrid.run_grid(init_fn, loss_fn, ds, rc0, 3, grid=gc, seed=1)
+    assert len(res.history) == 3
+
+
 def test_grid_rejects_oversized_cohort():
     ds = make_ds(n_clients=3)
     with pytest.raises(ValueError, match="clients_per_round"):
