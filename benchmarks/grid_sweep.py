@@ -1,4 +1,5 @@
-"""Grid sweep: fleet preset x scheduling mode x freeze spec.
+"""Grid sweep: fleet preset x scheduling mode x freeze spec, plus a
+selection-policy axis over the dynamic phone fleet.
 
 For each cell the sweep trains the EMNIST CNN on the simulation grid and
 reports **simulated wall-clock to a target loss** — the scenario metric
@@ -12,10 +13,36 @@ us_per_call is *virtual* microseconds to the target loss (inf -> the
 budget's total virtual time is reported and hit=0 flagged).
 
     PYTHONPATH=src python -m benchmarks.grid_sweep [--quick] [--target 1.0]
+
+``--policy all`` (or a single policy name) sweeps the
+``sim/selection.py`` cohort-selection policies on the
+``pareto-mobile-diurnal`` fleet (stochastic links + diurnal
+availability) instead of the fleet grid. The policy cells use the
+*compact probe model* (one dense layer, the same config the acceptance
+test in tests/test_selection.py pins) rather than the EMNIST CNN: at
+EMNIST scale over CI-affordable update counts the loss trajectory is
+noisy enough that the target-crossing round flips run to run, and —
+measured honestly — an active trainability plan's per-tier compute
+scaling already equalizes round trips so selection adds little on top
+(see README). The probe cells converge in seconds with a stable
+1.1-2.1x bandwidth-aware-over-uniform signal across seeds.
+``uniform``/``bandwidth-aware`` cells run without a plan (pure
+selection effect); ``tier-rotation``/``adaptive-capability`` need one
+and carry a 2-tier plan. ``--baseline-out BENCH_grid.json`` writes the
+cells as the committed baseline; ``--gate BENCH_grid.json`` turns a
+fresh run into a CI regression gate — each policy's virtual time to
+target must stay within ``--gate-tolerance`` (default 2x: virtual time
+is seed-pinned, but the crossing round can shift with cross-platform
+float drift) of the baseline, hit flags must not regress, and
+``bandwidth-aware`` must not fall behind ``uniform``.
+
+    PYTHONPATH=src python -m benchmarks.grid_sweep --policy all \
+        [--gate BENCH_grid.json] [--baseline-out BENCH_grid.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import math
 import sys
 
@@ -31,6 +58,15 @@ MB = 1024.0 * 1024.0
 
 FLEETS = ["uniform", "pareto-mobile", "cross-silo"]
 SPECS = {"fedpt5pct": pm.EMNIST_FREEZE, "full": ()}
+
+POLICIES = ["uniform", "bandwidth-aware", "tier-rotation",
+            "adaptive-capability"]
+POLICY_FLEET = "pareto-mobile-diurnal"
+# tier policies need a plan; the sampling policies run without one so
+# the cell isolates the selection effect (per-tier compute scaling
+# otherwise equalizes round trips — see the module docstring)
+POLICY_PLAN = {"full": (), "lite": (r"/kernel$",)}
+POLICY_NEEDS_PLAN = {"tier-rotation", "adaptive-capability"}
 
 
 def _loss_fn(params, batch):
@@ -59,6 +95,109 @@ def time_to_target(history, target: float):
     return history[-1]["virtual_seconds"] if history else 0.0, False
 
 
+def _probe_init(seed):
+    from repro.nn import basic
+    return {"dense": basic.init_dense(seed, "dense", 64, 4, jnp.float32,
+                                      bias=True)}
+
+
+def _probe_loss(params, b):
+    from repro.nn import basic
+    x = b["images"].reshape(b["images"].shape[0], -1)
+    logits = basic.dense(x, params["dense"])
+    lp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(lp, b["labels"][:, None], 1)), {}
+
+
+def run_policy_cells(policies, rounds: int, target: float):
+    """One async cell per selection policy on the dynamic phone fleet,
+    over the compact probe model (see the module docstring)."""
+    ds = syn.make_federated_images(24, 30, (8, 8, 1), 4, seed=0,
+                                   test_examples=64)
+    rc = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0)
+    cells = []
+    for policy in policies:
+        gc = GridConfig(mode="async", fleet=POLICY_FLEET, concurrency=8,
+                        goal_count=4, staleness="polynomial",
+                        plan=(POLICY_PLAN if policy in POLICY_NEEDS_PLAN
+                              else None),
+                        selection=policy, base_step_time=1.0)
+        res = run_grid(_probe_init, _probe_loss, ds, rc, rounds, grid=gc,
+                       seed=0)
+        vt, hit = time_to_target(res.history, target)
+        cell = {"policy": policy, "vt_to_target_s": vt, "hit": int(hit),
+                "loss": res.history[-1]["loss"],
+                "virtual_s": res.virtual_seconds,
+                "wire_mb": res.comm.measured_total_bytes / MB,
+                "uploads": res.scheduler_stats["uploads"]}
+        cells.append(cell)
+        print(f"grid/policy/{policy},{vt * 1e6:.0f},"
+              f"hit={cell['hit']};loss={cell['loss']:.3f}"
+              f";virt_s={cell['virtual_s']:.0f}"
+              f";wire_mb={cell['wire_mb']:.1f}"
+              f";uploads={cell['uploads']}")
+        sys.stdout.flush()
+    return cells
+
+
+def gate_policy_cells(cells, baseline_path: str, tolerance: float,
+                      target: float, rounds: int) -> int:
+    """Regression gate for the policy axis: fresh virtual time to target
+    vs the committed baseline. Returns the number of violations.
+
+    Virtual time is seed-pinned and host-independent up to float drift
+    in the loss trajectory (the crossing round can shift by one), so the
+    tolerance is generous — the gate catches structural breaks (a
+    policy silently falling back to uniform, the dynamics clock
+    collapsing), not jitter."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    # refuse apples-to-oranges comparisons: the baseline records the
+    # config it was measured at
+    for key, fresh in (("target", target), ("rounds", rounds),
+                       ("fleet", POLICY_FLEET)):
+        if key in base and base[key] != fresh:
+            raise SystemExit(
+                f"bench gate ERROR: baseline {baseline_path} was measured "
+                f"at {key}={base[key]!r}, this run uses {fresh!r} — not a "
+                "performance regression; regenerate the baseline with "
+                "--policy all --baseline-out and commit it")
+    ref = {c["policy"]: c for c in base.get("policy_cells", [])}
+    if not ref:
+        raise SystemExit(
+            f"bench gate ERROR: {baseline_path} has no 'policy_cells' "
+            "section — not a performance regression; regenerate with "
+            "--policy all --baseline-out and commit it")
+    bad = 0
+    for c in cells:
+        b = ref.get(c["policy"])
+        if b is None:
+            raise SystemExit(
+                f"bench gate ERROR: baseline {baseline_path} is missing "
+                f"policy {c['policy']!r} — regenerate and commit it")
+        limit = tolerance * b["vt_to_target_s"]
+        ok = c["vt_to_target_s"] <= limit and c["hit"] >= b["hit"]
+        print(f"gate/policy/{c['policy']}: vt {c['vt_to_target_s']:.1f}s "
+              f"vs baseline {b['vt_to_target_s']:.1f}s (limit "
+              f"{limit:.1f}s), hit {c['hit']} (baseline {b['hit']}) -> "
+              f"{'ok' if ok else 'REGRESSION'}")
+        bad += 0 if ok else 1
+    by = {c["policy"]: c for c in cells}
+    if "uniform" in by and "bandwidth-aware" in by:
+        # the headline structural claim the subsystem exists to make;
+        # 15% slack so a one-flush crossing shift from cross-platform
+        # float drift cannot flip a genuine win into a gate failure
+        limit = 1.15 * by["uniform"]["vt_to_target_s"]
+        if by["bandwidth-aware"]["vt_to_target_s"] > limit:
+            print("gate/policy/order: bandwidth-aware slower than "
+                  "1.15x uniform -> REGRESSION")
+            bad += 1
+        else:
+            print("gate/policy/order: bandwidth-aware <= 1.15x uniform "
+                  "-> ok")
+    return bad
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -66,8 +205,45 @@ def main(argv=None):
                     help="client-loss target (initial loss ~ln(62)=4.1)")
     ap.add_argument("--rounds", type=int, default=0,
                     help="server updates per cell (0 = default)")
+    ap.add_argument("--policy", default=None, metavar="NAME|all",
+                    help="sweep selection policies on the "
+                         f"{POLICY_FLEET} fleet instead of the fleet grid")
+    ap.add_argument("--policy-target", type=float, default=0.2,
+                    help="loss target for the policy cells (probe-model "
+                         "initial loss ~ln(4)=1.39; 0.2 is crossed "
+                         "within a few updates by every policy)")
+    ap.add_argument("--baseline-out", default=None, metavar="JSON",
+                    help="with --policy: write the cells as the "
+                         "committed BENCH_grid.json baseline")
+    ap.add_argument("--gate", default=None, metavar="BASELINE_JSON",
+                    help="with --policy: fail if any policy's virtual "
+                         "time to target regresses past gate-tolerance "
+                         "x the baseline")
+    ap.add_argument("--gate-tolerance", type=float, default=2.0)
     args = ap.parse_args(argv)
     rounds = args.rounds or (8 if args.quick else 20)
+
+    if args.policy:
+        policies = POLICIES if args.policy == "all" else [args.policy]
+        cells = run_policy_cells(policies, args.rounds or 15,
+                                 args.policy_target)
+        if args.baseline_out:
+            out = {"backend": jax.default_backend(),
+                   "fleet": POLICY_FLEET, "target": args.policy_target,
+                   "rounds": args.rounds or 15, "seed": 0,
+                   "policy_cells": cells}
+            with open(args.baseline_out, "w") as f:
+                json.dump(out, f, indent=1)
+            print(f"wrote {args.baseline_out}")
+        if args.gate:
+            bad = gate_policy_cells(cells, args.gate, args.gate_tolerance,
+                                    args.policy_target, args.rounds or 15)
+            if bad:
+                sys.exit(f"bench gate FAILED: {bad} policy cell(s) "
+                         f"regressed past {args.gate_tolerance:g}x "
+                         "baseline")
+            print("bench gate passed")
+        return
 
     ds = syn.make_federated_images(40, 50, (28, 28, 1), 62, alpha=1.0)
     rc = fedpt.RoundConfig(10, 2, 16, "sgd", 0.05, "sgd", 0.5,

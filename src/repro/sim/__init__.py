@@ -1,15 +1,24 @@
 """Federated simulation grid: heterogeneity-aware client populations,
-an event-driven virtual-clock scheduler (synchronous cohorts with
+device dynamics (stochastic links, trace-driven availability), an
+event-driven virtual-clock scheduler (synchronous cohorts with
 straggler deadlines / over-selection, and FedBuff-style buffered async
-aggregation), and wire-level communication metering.
+aggregation), pluggable tier-aware cohort-selection policies, and
+wire-level communication metering.
 
 ``fl.runtime.run_federated`` is the homogeneous-synchronous special case
 of ``sim.grid.run_grid``.
 """
 from repro.sim.devices import (DeviceProfile, Fleet, make_fleet,
                                FLEET_PRESETS, assign_tiers,
-                               capability_score)
+                               capability_score, quantile_tiers)
+from repro.sim.dynamics import (LinkModel, AvailabilityTrace, AlwaysOn,
+                                DiurnalTrace, StepTrace, DynamicsConfig,
+                                DYNAMICS_PRESETS, resolve_dynamics)
 from repro.sim.grid import GridConfig, GridResult, run_grid
 from repro.sim.scheduler import (EventQueue, SyncRoundPlan, plan_sync_round,
                                  BufferedAsyncScheduler)
+from repro.sim.selection import (SelectionPolicy, UniformPolicy,
+                                 BandwidthAwarePolicy, TierRotationPolicy,
+                                 AdaptiveCapabilityPolicy, POLICIES,
+                                 resolve_policy)
 from repro.sim import wire

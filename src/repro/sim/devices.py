@@ -18,6 +18,14 @@ it) and a mid-round dropout probability. Profiles are sampled from named
     10% mid-round dropout — the regime where straggler deadlines,
     over-selection and buffered async aggregation matter.
 
+``pareto-mobile-diurnal``
+    The same phones under device *dynamics* (``sim/dynamics.py``): every
+    profile carries a stochastic :class:`~repro.sim.dynamics.LinkModel`
+    (per-transfer log-normal jitter over its Pareto base bandwidth plus
+    an RTT latency floor), and the grid defaults the fleet onto the
+    ``diurnal`` availability trace — links jitter and the fleet follows
+    online/offline cycles at virtual time.
+
 ``cross-silo``
     A handful of datacenter silos: ~1 Gb/s symmetric links, near-uniform
     compute, always available.
@@ -25,11 +33,12 @@ it) and a mid-round dropout probability. Profiles are sampled from named
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Union
+from typing import Callable, Dict, List, Optional, Union
 
 import numpy as np
 
 from repro.core import comm
+from repro.sim import dynamics as dyn_lib
 
 MB = 1024.0 * 1024.0
 
@@ -41,6 +50,10 @@ class DeviceProfile:
     compute_multiplier: float    # local-step time multiplier (1.0 = reference)
     availability: float = 1.0    # P(online when sampled)
     dropout: float = 0.0         # P(drops mid-round after being dispatched)
+    # per-device stochastic link (sim/dynamics.py): overrides the
+    # DynamicsConfig's fleet-wide default for this client's transfers;
+    # None = use the fleet default (static unless dynamics are on)
+    link_model: Optional[dyn_lib.LinkModel] = None
 
     def round_trip_seconds(self, down_bytes: int, up_bytes: int,
                            compute_seconds: float) -> float:
@@ -104,6 +117,20 @@ def _pareto_mobile(num_clients: int,
                           availability=0.8, dropout=0.1)
             for i in range(num_clients)]
 
+def _pareto_mobile_diurnal(num_clients: int,
+                           rng: np.random.Generator) -> List[DeviceProfile]:
+    # the pareto-mobile fleet, each phone with its own stochastic link:
+    # jitter sigma drawn per device (flaky phones are flakier), one
+    # shared 200ms latency floor. The grid pairs this preset with the
+    # "diurnal" availability trace by default (dynamics.py).
+    base = _pareto_mobile(num_clients, rng)
+    sigmas = rng.uniform(0.1, 0.4, num_clients)
+    return [dataclasses.replace(
+        p, link_model=dyn_lib.LinkModel(jitter_sigma=float(sigmas[i]),
+                                        rtt_seconds=0.2))
+        for i, p in enumerate(base)]
+
+
 def _cross_silo(num_clients: int,
                 rng: np.random.Generator) -> List[DeviceProfile]:
     bw = 125.0 * MB  # ~1 Gb/s symmetric
@@ -127,6 +154,22 @@ def capability_score(p: DeviceProfile) -> float:
     return link / max(p.compute_multiplier, 1e-9)
 
 
+def quantile_tiers(scores: np.ndarray, n_tiers: int) -> np.ndarray:
+    """Quantile-split scalar capability scores (higher = more capable)
+    into ``n_tiers`` equal buckets, tier 0 = most capable. Tier t's
+    lower boundary sits at quantile ``1 - (t+1)/n_tiers``; the
+    strictly-below comparison sends boundary ties upward, so a
+    homogeneous score vector lands entirely in tier 0.
+
+    Shared by the static profile split below and the online re-tiering
+    of ``sim/selection.AdaptiveCapabilityPolicy`` (which feeds it
+    ``1 / ema_observed_rtt`` instead of profile scores)."""
+    scores = np.asarray(scores, np.float64)
+    cuts = np.quantile(scores, [1.0 - (t + 1) / n_tiers
+                                for t in range(n_tiers - 1)])
+    return (scores[:, None] < cuts[None, :]).sum(1).astype(np.int32)
+
+
 def assign_tiers(fleet: Fleet, n_tiers: int,
                  assignment="capability") -> np.ndarray:
     """(num_clients,) int32 tier index per client, tier 0 = most capable.
@@ -146,12 +189,9 @@ def assign_tiers(fleet: Fleet, n_tiers: int,
             raise ValueError(f"unknown tier assignment {assignment!r}; "
                              "options: 'capability', a callable, or an "
                              "explicit per-client index array")
-        scores = np.asarray([capability_score(p) for p in fleet.profiles])
-        # tier t's lower boundary sits at quantile 1 - (t+1)/n_tiers;
-        # strictly-below comparison sends boundary ties upward
-        cuts = np.quantile(scores, [1.0 - (t + 1) / n_tiers
-                                    for t in range(n_tiers - 1)])
-        tiers = (scores[:, None] < cuts[None, :]).sum(1).astype(np.int32)
+        tiers = quantile_tiers(
+            np.asarray([capability_score(p) for p in fleet.profiles]),
+            n_tiers)
     else:
         tiers = np.asarray(assignment, np.int32)
         if tiers.shape != (n,):
@@ -167,6 +207,7 @@ FLEET_PRESETS: Dict[str, Callable[[int, np.random.Generator],
                                   List[DeviceProfile]]] = {
     "uniform": _uniform,
     "pareto-mobile": _pareto_mobile,
+    "pareto-mobile-diurnal": _pareto_mobile_diurnal,
     "cross-silo": _cross_silo,
 }
 

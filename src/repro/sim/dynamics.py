@@ -1,0 +1,319 @@
+"""Device dynamics for the simulation grid: stochastic links and
+trace-driven availability.
+
+PR 1's fleet was a *static* snapshot: every transfer moved at exactly the
+profile's base bandwidth and availability was one Bernoulli probability,
+frozen for the whole run. Real phone fleets are nothing like that — links
+jitter transfer to transfer, every transfer pays a latency floor, and
+devices follow diurnal online/offline cycles (charging overnight, dark
+during the commute). This module models both, queried at *virtual time*
+so async flushes see the clock move:
+
+* :class:`LinkModel` — per-transfer multiplicative **log-normal jitter**
+  on top of the profile's base bandwidth, plus a fixed **RTT latency
+  floor** per transfer. The jitter is mean-preserving
+  (``exp(sigma*z - sigma^2/2)`` with ``z ~ N(0,1)``), so enabling it
+  changes variance, not the expected transfer time; ``sigma=0`` maps
+  ``z`` to exactly ``1.0`` and the transfer time is bit-for-bit the
+  static ``bytes/bps`` (plus the floor, itself 0 by default).
+
+* :class:`AvailabilityTrace` — ``prob(cid, t)`` in ``[0, 1]``,
+  *multiplied* into the profile's base availability at dispatch time:
+  :class:`AlwaysOn` (trivial, the pre-dynamics behavior),
+  :class:`DiurnalTrace` (sinusoid with per-client phase, the diurnal
+  preset) and :class:`StepTrace` (arbitrary per-client step functions —
+  e.g. a maintenance window where the whole fleet goes dark).
+
+* :class:`DynamicsConfig` — the pair, plus the async scheduler's
+  redispatch backoff (how long to wait, in virtual seconds, before
+  re-trying dispatch when the trace has everyone offline). ``bind``-ing
+  a config to a fleet resolves per-profile ``link_model`` overrides and
+  draws the per-client trace phases — from the grid's *dynamics* RNG
+  stream, an independent child spawned off ``device_seed``, so enabling
+  dynamics never perturbs the scheduler's fixed-count
+  availability/dropout draws (the trivial-case bit-for-bit contract).
+
+The trivial config (static links, always-on) resolves to ``None`` in the
+grid and the schedulers take their exact pre-dynamics paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Union
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Stochastic links
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """Per-transfer stochastic model over a profile's base bandwidth.
+
+    ``transfer_seconds`` takes a standard-normal draw ``z`` (drawn by the
+    caller from the dynamics stream, one per transfer) and returns
+
+        rtt_seconds + (nbytes / bps) * exp(jitter_sigma*z - jitter_sigma^2/2)
+
+    The log-normal factor has mean exactly 1, so the *expected* transfer
+    time is the static time plus the RTT floor; ``jitter_sigma=0`` gives
+    the static time bit-for-bit (``exp(0.0) == 1.0``).
+    """
+    jitter_sigma: float = 0.0     # log-normal sigma on the transfer time
+    rtt_seconds: float = 0.0      # fixed latency floor per transfer
+
+    @property
+    def trivial(self) -> bool:
+        return self.jitter_sigma == 0.0 and self.rtt_seconds == 0.0
+
+    def jitter(self, z: float) -> float:
+        """Mean-1 multiplicative jitter factor from a N(0,1) draw."""
+        s = self.jitter_sigma
+        return math.exp(s * float(z) - 0.5 * s * s)
+
+    def transfer_seconds(self, nbytes: float, bps: float, z: float) -> float:
+        return self.rtt_seconds + (nbytes / bps) * self.jitter(z)
+
+
+# ---------------------------------------------------------------------------
+# Availability traces (queried at virtual time)
+
+
+class AvailabilityTrace:
+    """``prob(cid, t) in [0, 1]``, multiplied into the profile's base
+    availability at dispatch time. ``bind(num_clients, rng)`` resolves
+    any per-client randomness (e.g. diurnal phases) from the dynamics
+    stream and returns the bound trace."""
+
+    trivial = False
+
+    def bind(self, num_clients: int,
+             rng: np.random.Generator) -> "AvailabilityTrace":
+        return self
+
+    def prob(self, cid: int, t: float) -> float:
+        raise NotImplementedError
+
+
+class AlwaysOn(AvailabilityTrace):
+    """The pre-dynamics behavior: the trace never gates anyone."""
+
+    trivial = True
+
+    def prob(self, cid: int, t: float) -> float:
+        return 1.0
+
+
+@dataclasses.dataclass
+class DiurnalTrace(AvailabilityTrace):
+    """Sinusoidal online/offline cycle: availability swings between
+    ``low`` and ``high`` over ``period`` virtual seconds. Each client
+    gets a phase in ``[0, phase_spread)`` drawn at bind time from the
+    dynamics stream (``phase_spread=0`` puts the whole fleet on one
+    clock — the classic correlated diurnal dip)."""
+
+    period: float = 86_400.0
+    low: float = 0.1
+    high: float = 1.0
+    phase_spread: float = 1.0
+    phases: Optional[np.ndarray] = None   # (num_clients,) in [0, 1)
+
+    def __post_init__(self):
+        if not 0.0 <= self.low <= self.high <= 1.0:
+            raise ValueError(f"need 0 <= low <= high <= 1, got "
+                             f"[{self.low}, {self.high}]")
+        if self.period <= 0:
+            raise ValueError("period must be positive")
+
+    def bind(self, num_clients: int,
+             rng: np.random.Generator) -> "DiurnalTrace":
+        if self.phases is not None:
+            if len(self.phases) != num_clients:
+                raise ValueError(f"explicit phases have length "
+                                 f"{len(self.phases)}, fleet has "
+                                 f"{num_clients} clients")
+            return self
+        return dataclasses.replace(
+            self, phases=rng.random(num_clients) * self.phase_spread)
+
+    def prob(self, cid: int, t: float) -> float:
+        ph = float(self.phases[cid]) if self.phases is not None else 0.0
+        s = math.sin(2.0 * math.pi * (t / self.period + ph))
+        return self.low + (self.high - self.low) * 0.5 * (1.0 + s)
+
+
+@dataclasses.dataclass
+class StepTrace(AvailabilityTrace):
+    """Piecewise-constant availability: ``values[..., k]`` holds on
+    ``[times[k], times[k+1])``. ``times`` must start at 0 and ascend;
+    ``values`` is ``(T,)`` (shared by the fleet) or ``(num_clients, T)``
+    (per-client traces). The last value holds forever."""
+
+    times: np.ndarray
+    values: np.ndarray
+
+    def __post_init__(self):
+        self.times = np.asarray(self.times, np.float64)
+        self.values = np.asarray(self.values, np.float64)
+        if self.times.ndim != 1 or self.times[0] != 0.0 \
+                or np.any(np.diff(self.times) <= 0):
+            raise ValueError("times must be 1-D, start at 0 and be "
+                             "strictly increasing")
+        if self.values.shape[-1] != len(self.times):
+            raise ValueError(f"values' last axis ({self.values.shape[-1]}) "
+                             f"must match times ({len(self.times)})")
+        if np.any(self.values < 0) or np.any(self.values > 1):
+            raise ValueError("availability values must lie in [0, 1]")
+
+    def bind(self, num_clients: int,
+             rng: np.random.Generator) -> "StepTrace":
+        if self.values.ndim == 2 and self.values.shape[0] != num_clients:
+            raise ValueError(f"per-client trace has {self.values.shape[0]} "
+                             f"rows, fleet has {num_clients} clients")
+        return self
+
+    def prob(self, cid: int, t: float) -> float:
+        k = int(np.searchsorted(self.times, t, side="right")) - 1
+        k = max(k, 0)
+        if self.values.ndim == 2:
+            return float(self.values[cid, k])
+        return float(self.values[k])
+
+
+# ---------------------------------------------------------------------------
+# The config the grid consumes
+
+
+@dataclasses.dataclass
+class DynamicsConfig:
+    """Fleet-wide device dynamics: the default link model (per-profile
+    ``DeviceProfile.link_model`` overrides it client by client), the
+    availability trace, and the async scheduler's redispatch backoff."""
+
+    link: LinkModel = dataclasses.field(default_factory=LinkModel)
+    availability: AvailabilityTrace = dataclasses.field(
+        default_factory=AlwaysOn)
+    # async: virtual seconds to wait before re-trying dispatch when no
+    # sampled client passes the availability check (the trace has the
+    # fleet dark); sync rounds just close empty at their deadline
+    redispatch_backoff: float = 30.0
+
+    @property
+    def trivial(self) -> bool:
+        return self.link.trivial and self.availability.trivial
+
+    def bind(self, fleet, rng: np.random.Generator) -> "BoundDynamics":
+        links = tuple(getattr(p, "link_model", None) or self.link
+                      for p in fleet.profiles)
+        return BoundDynamics(
+            links=links,
+            trace=self.availability.bind(len(fleet), rng),
+            redispatch_backoff=float(self.redispatch_backoff))
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundDynamics:
+    """A DynamicsConfig resolved against one fleet: per-client link
+    models (profile override or the config default) and a bound trace.
+    This is what the schedulers consume."""
+
+    links: tuple
+    trace: AvailabilityTrace
+    redispatch_backoff: float
+
+    def link_for(self, cid: int) -> LinkModel:
+        return self.links[int(cid)]
+
+    def prob(self, cid: int, t: float) -> float:
+        return self.trace.prob(cid, t)
+
+    def round_trip_seconds(self, profile, down_bytes: int, up_bytes: int,
+                           compute_seconds: float, cid: int,
+                           z_down: float, z_up: float) -> float:
+        """One full client round trip under the stochastic link: jittered
+        download + compute + jittered upload. ``z_down``/``z_up`` are the
+        caller's N(0,1) draws from the dynamics stream."""
+        lm = self.link_for(cid)
+        return (lm.transfer_seconds(down_bytes, profile.downlink_bps, z_down)
+                + compute_seconds * profile.compute_multiplier
+                + lm.transfer_seconds(up_bytes, profile.uplink_bps, z_up))
+
+
+# ---------------------------------------------------------------------------
+# Presets + resolution
+
+
+def _preset_diurnal() -> DynamicsConfig:
+    # mobile links jitter ~25% transfer to transfer with a 200ms floor;
+    # availability swings 10%..100% over a (virtual) 4000-second day —
+    # short enough that example/test runs see several cycles
+    return DynamicsConfig(
+        link=LinkModel(jitter_sigma=0.25, rtt_seconds=0.2),
+        availability=DiurnalTrace(period=4_000.0, low=0.1, high=1.0))
+
+
+def _preset_jitter() -> DynamicsConfig:
+    return DynamicsConfig(link=LinkModel(jitter_sigma=0.25, rtt_seconds=0.2))
+
+
+# "static" is NOT an entry here: it is intercepted by resolve_dynamics
+# as the hard off-switch (None even over profile link models) — a dict
+# entry would carry the wrong semantics if ever reached via
+# FLEET_DEFAULT_DYNAMICS indirection
+DYNAMICS_PRESETS: Dict[str, callable] = {
+    "jitter": _preset_jitter,
+    "diurnal": _preset_diurnal,
+}
+
+# fleet presets that imply a dynamics preset when GridConfig.dynamics is
+# left at None (the new preset names opt in; existing fleets stay static)
+FLEET_DEFAULT_DYNAMICS: Dict[str, str] = {
+    "pareto-mobile-diurnal": "diurnal",
+}
+
+
+def resolve_dynamics(spec: Union[None, str, DynamicsConfig],
+                     fleet) -> Optional[DynamicsConfig]:
+    """GridConfig.dynamics -> DynamicsConfig or None (trivial).
+
+    ``None`` defers to the fleet preset's default (static for every
+    pre-dynamics preset); a name looks up :data:`DYNAMICS_PRESETS`; a
+    config passes through. A config that is trivial AND rides a fleet
+    with no per-profile link models resolves to ``None`` — the signal
+    for the schedulers to take the exact pre-dynamics code paths.
+
+    ``"static"`` is a hard off-switch: it resolves to ``None`` even on
+    fleets whose profiles carry link models, so it is always the true
+    static-link/always-on A/B control (to keep per-profile jitter while
+    dropping the trace, pass a ``DynamicsConfig`` explicitly — an
+    explicit config honors profile link models).
+    """
+    if spec == "static":
+        return None
+    if spec is None:
+        name = FLEET_DEFAULT_DYNAMICS.get(getattr(fleet, "name", None))
+        cfg = DYNAMICS_PRESETS[name]() if name else None
+    elif isinstance(spec, str):
+        try:
+            cfg = DYNAMICS_PRESETS[spec]()
+        except KeyError:
+            raise ValueError(
+                f"unknown dynamics preset {spec!r}; options: "
+                f"{sorted(DYNAMICS_PRESETS) + ['static']}") from None
+    elif isinstance(spec, DynamicsConfig):
+        cfg = spec
+    else:
+        raise TypeError(f"dynamics must be None, a preset name or a "
+                        f"DynamicsConfig, got {type(spec).__name__}")
+    has_profile_links = any(getattr(p, "link_model", None) is not None
+                            for p in fleet.profiles)
+    if cfg is None and not has_profile_links:
+        return None
+    if cfg is None:
+        cfg = DynamicsConfig()
+    if cfg.trivial and not has_profile_links:
+        return None
+    return cfg

@@ -7,7 +7,16 @@ cross-device wall-clock. ``fl.runtime.run_federated`` delegates here with
 reproduced **bit-for-bit**: the grid consumes the data-sampling RNG stream
 (``seed + 77``) and the per-round DP keys (``seed*100_003 + r``) in
 exactly the same order, and routes all device/availability randomness
-through a separate stream.
+through a separate stream (and all *dynamics* randomness — link jitter,
+trace phases — through an independent child of that stream).
+
+``GridConfig.dynamics`` (sim/dynamics.py) makes links stochastic and
+availability trace-driven at virtual time; ``GridConfig.selection``
+(sim/selection.py) makes cohort choice a policy — bandwidth-aware
+sampling with importance weights, FedPLT-style tier rotation, or online
+re-tiering from observed round trips. The trivial corner (static links,
+always-on, uniform selection) routes through the exact pre-dynamics
+code paths.
 """
 from __future__ import annotations
 
@@ -29,7 +38,9 @@ from repro.data import synthetic as syn
 from repro.launch import mesh as mesh_lib
 from repro.launch import sharding as shard_lib
 from repro.sim import devices as dev_lib
+from repro.sim import dynamics as dyn_lib
 from repro.sim import scheduler as sched_lib
+from repro.sim import selection as sel_lib
 from repro.sim import wire
 
 
@@ -80,9 +91,25 @@ class GridConfig:
     # capable -> tier 0), an explicit per-client tier-index array, or a
     # callable DeviceProfile -> tier index
     tier_assignment: Any = "capability"
+    # --- device dynamics (sim/dynamics.py) ---
+    # None = the fleet preset's default (static for every pre-dynamics
+    # preset; "pareto-mobile-diurnal" implies the "diurnal" preset). A
+    # preset name ("static", "jitter", "diurnal") or a DynamicsConfig
+    # turns on stochastic links (per-transfer log-normal jitter + RTT
+    # floor) and trace-driven availability queried at virtual time.
+    # Trivial dynamics resolve to the exact pre-dynamics code paths.
+    dynamics: Any = None
+    # --- cohort selection (sim/selection.py) ---
+    # "uniform" (exact pre-selection behavior), "bandwidth-aware",
+    # "tier-rotation", "adaptive-capability", or a SelectionPolicy
+    # instance
+    selection: Any = "uniform"
     # --- rng plumbing ---
     fleet_seed: int = 0                     # profile sampling
     device_seed: int = 13                   # availability/dropout/latency
+    # (dynamics draws — jitter, trace phases — come from an independent
+    # child stream spawned off [seed, device_seed], so enabling dynamics
+    # never moves the availability/dropout stream above)
 
 
 @dataclasses.dataclass
@@ -105,6 +132,11 @@ class GridResult:
     tier_stats: Optional[Dict[str, Dict[str, float]]] = None
     # the CompiledPlan the run used (None without a plan)
     plan: Any = None
+    # the bound SelectionPolicy the run used (inspect e.g. .refits or
+    # .current_tiers() after an adaptive run)
+    policy: Any = None
+    # the BoundDynamics the run used (None = static links, always-on)
+    dynamics: Any = None
 
 
 def num_clients(ds) -> int:
@@ -148,7 +180,11 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
     # trainability plan: capability->tier per client, tier-sliced uplink
     # payloads (downlink stays the full y + seed for every tier — other
     # tiers keep training the blocks a tier froze, so their current
-    # values cannot be regenerated from the seed)
+    # values cannot be regenerated from the seed). The virtual clock
+    # also charges per-tier compute: a tier's local step scales with its
+    # trainable fraction (a lite tier's backward pass is cheaper); the
+    # full tier's fraction is exactly 1.0, so one-tier plans keep the
+    # pre-plan clock bit for bit.
     if grid.plan is not None:
         cplan = plan_lib.compile_plan(grid.plan, y)
         tier_of_client = dev_lib.assign_tiers(fleet, len(cplan.tiers),
@@ -157,20 +193,49 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
             [p["up"] for p in
              wire.tier_payloads(y, cplan, rc.uplink_bits).values()],
             np.int64)
+        total_params = sum(cplan.layout.sizes)
+        tier_compute = np.asarray(
+            [compute_seconds * (t.param_count / total_params
+                                if total_params else 1.0)
+             for t in cplan.tiers], np.float64)
     else:
         cplan = None
         tier_of_client = None
         tier_up = None
+        tier_compute = None
 
     data_rng = np.random.default_rng(seed + 77)  # == run_federated's stream
     dev_rng = np.random.default_rng([seed, grid.device_seed])
+    # the dynamics stream: an independent child of [seed, device_seed].
+    # Spawning advances no draws of dev_rng, so the scheduler's
+    # fixed-count availability/dropout streams are byte-identical with
+    # dynamics on or off (tests pin this).
+    dyn_rng = dev_rng.spawn(1)[0]
+    dyn_cfg = dyn_lib.resolve_dynamics(grid.dynamics, fleet)
+    dyn = dyn_cfg.bind(fleet, dyn_rng) if dyn_cfg is not None else None
+
+    # cohort-selection policy: estimates feed bandwidth-aware inclusion
+    # probabilities and seed the adaptive policy's observed-RTT EMA
+    policy = sel_lib.resolve_policy(grid.selection)
+    est_up = (tier_up[tier_of_client] if cplan is not None
+              else np.full(N, up_bytes, np.int64))
+    est_comp = (tier_compute[tier_of_client] if cplan is not None
+                else np.full(N, compute_seconds, np.float64))
+    rtt_estimate = np.asarray(
+        [fleet.profile(c).round_trip_seconds(down_bytes, int(est_up[c]),
+                                             float(est_comp[c]))
+         for c in range(N)], np.float64)
+    policy.bind(fleet=fleet, num_clients=N, cplan=cplan,
+                tiers=tier_of_client, rtt_estimate=rtt_estimate)
 
     common = dict(fleet=fleet, report=report, down_bytes=down_bytes,
                   up_bytes=up_bytes, compute_seconds=compute_seconds,
                   data_rng=data_rng, dev_rng=dev_rng, seed=seed,
                   data_kind=data_kind, eval_every=eval_every,
                   eval_fn=eval_fn, log=log, cplan=cplan,
-                  tier_of_client=tier_of_client, tier_up=tier_up)
+                  tier_of_client=tier_of_client, tier_up=tier_up,
+                  tier_compute=tier_compute, dyn=dyn, dyn_rng=dyn_rng,
+                  policy=policy)
     if grid.mode == "sync":
         return _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid,
                          server_opt, **common)
@@ -185,9 +250,13 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
 # Synchronous cohorts
 
 
-def _tier_stats(report, cplan, tier_of_client):
+def _tier_stats(report, cplan, tier_of_client, tier_compute=None,
+                rtt_sum=None, rtt_n=None):
     """GridResult.tier_stats: the comm ledger's per-tier traffic plus
-    the fleet census (how many clients each tier owns)."""
+    the fleet census (how many clients each tier owns — the run's final
+    tier map, which rotation/adaptive policies move over time), the
+    tier's compute charge per local run, and the mean observed
+    round-trip of its uploads."""
     if cplan is None:
         return None
     out = {}
@@ -202,6 +271,13 @@ def _tier_stats(report, cplan, tier_of_client):
         rec["up_bytes_per_upload"] = (rec["up_bytes"] / rec["uploads"]
                                       if rec["uploads"] else 0.0)
         rec["trainable_bytes"] = t.trainable_bytes
+        if tier_compute is not None:
+            # per-tier virtual compute charge (reference device, one
+            # dispatch): base compute scaled by the trainable fraction
+            rec["compute_seconds"] = float(tier_compute[t.index])
+        if rtt_sum is not None:
+            n = rtt_n.get(t.index, 0) if hasattr(rtt_n, "get") else 0
+            rec["rtt_mean"] = (rtt_sum.get(t.index, 0.0) / n) if n else 0.0
         out[t.name] = rec
     return out
 
@@ -209,7 +285,8 @@ def _tier_stats(report, cplan, tier_of_client):
 def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
               fleet, report, down_bytes, up_bytes, compute_seconds,
               data_rng, dev_rng, seed, data_kind, eval_every, eval_fn, log,
-              cplan, tier_of_client, tier_up):
+              cplan, tier_of_client, tier_up, tier_compute, dyn, dyn_rng,
+              policy):
     mesh = mesh_lib.resolve_mesh(grid.mesh)
     constrain_flat = shard_lib.flat_constrainer(mesh) if mesh else None
     constrain_batch = shard_lib.cohort_constrainer(mesh) if mesh else None
@@ -229,17 +306,26 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
     history: List[Dict[str, float]] = []
     stats = {"dispatches": 0, "uploads": 0, "offline": 0, "dropouts": 0,
              "deadline_drops": 0, "excess": 0}
+    rtt_sum: Counter = Counter()
+    rtt_n: Counter = Counter()
     vt = 0.0
     t0 = None
     for r in range(rounds):
-        cids = syn.sample_cohort(data_rng, N, m)
-        # tier-sliced uplink payloads feed the virtual clock: a lite
-        # client's smaller delta clears the 0.25 MB/s uplink sooner
-        cohort_up = (tier_up[tier_of_client[cids]] if cplan is not None
+        # the policy's tier map can move between rounds (tier-rotation,
+        # adaptive-capability); static policies return the bound map
+        tiers_now = policy.current_tiers() if cplan is not None else None
+        cids = policy.select_cohort(data_rng, m)
+        # tier-sliced uplink payloads + per-tier compute feed the
+        # virtual clock: a lite client's smaller delta clears the
+        # 0.25 MB/s uplink sooner AND its backward pass is cheaper
+        cohort_up = (tier_up[tiers_now[cids]] if cplan is not None
                      else up_bytes)
+        cohort_comp = (tier_compute[tiers_now[cids]] if cplan is not None
+                       else compute_seconds)
         plan = sched_lib.plan_sync_round(
-            fleet, cids, down_bytes, cohort_up, compute_seconds, C, dev_rng,
-            deadline=grid.straggler_deadline)
+            fleet, cids, down_bytes, cohort_up, cohort_comp, C, dev_rng,
+            deadline=grid.straggler_deadline, dynamics=dyn,
+            dyn_rng=dyn_rng, now=vt)
         # the C slots the compiled round engine sees: participants in
         # arrival order, padded (weight 0) with the remaining cohort in
         # dispatch order when drops leave the round short
@@ -251,9 +337,18 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         batch, w = syn.cohort_batch(dataset, sel, rc.local_steps,
                                     rc.local_batch, data_rng, kind=data_kind)
         w = np.where(kept, w, 0.0).astype(np.float32)
+        if not policy.trivial and not (rc.uniform_weights
+                                       or rc.dp_clip_norm > 0):
+            # importance-unbiased selection weights multiply into the
+            # aggregation weights; under DP the engine forces uniform
+            # weighting with a fixed denominator (sigma calibration),
+            # so the correction is dropped there by design
+            iw = policy.cohort_weights(sel)
+            if iw is not None:
+                w = (w * iw).astype(np.float32)
         args = (y, sstate, frozen, batch, jnp.asarray(w))
         if tiered:
-            args += (jnp.asarray(tier_of_client[sel], jnp.int32),)
+            args += (jnp.asarray(tiers_now[sel], jnp.int32),)
         y, sstate, metrics = round_fn(*args,
                                       jax.random.key(seed * 100_003 + r))
         if r == 0:
@@ -263,10 +358,19 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         vt += plan.round_seconds
         n_dispatched = int(np.sum(plan.dispatched))
         n_uploads = n_dispatched - plan.dropouts
+        # observed round trips flow back to the policy (adaptive
+        # re-tiering) and into the per-tier timing stats
+        for i in np.nonzero(plan.completed)[0]:
+            rtt = float(plan.arrival[i])
+            policy.observe(int(plan.cids[i]), rtt)
+            if cplan is not None:
+                t_idx = int(tiers_now[plan.cids[i]])
+                rtt_sum[t_idx] += rtt
+                rtt_n[t_idx] += 1
         if cplan is not None:
             # bill per tier: dispatches pay the (tier-invariant)
             # downlink, uploads pay the tier-sliced uplink
-            cohort_tiers = tier_of_client[plan.cids]
+            cohort_tiers = tiers_now[plan.cids]
             uploaded = np.isfinite(plan.arrival)
             for t in cplan.tiers:
                 sel_t = cohort_tiers == t.index
@@ -293,16 +397,20 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         rec["virtual_seconds"] = vt
         rec["participants"] = float(len(kept_cids))
         history.append(rec)
+        policy.end_round(r)
         if log and (r % max(1, rounds // 10) == 0):
             print(f"  round {r}: " + " ".join(
                 f"{k}={v:.4f}" for k, v in rec.items() if k != "round"))
     jax.block_until_ready(y)
     spr = (time.time() - t0) / max(rounds - 1, 1) if t0 else float("nan")
+    final_tiers = (policy.current_tiers() if cplan is not None
+                   else tier_of_client)
     return GridResult(y=y, frozen=frozen, history=history, comm=report,
                       seconds_per_round=spr, virtual_seconds=vt,
                       fleet=fleet, mode="sync", scheduler_stats=stats,
-                      tier_stats=_tier_stats(report, cplan, tier_of_client),
-                      plan=cplan)
+                      tier_stats=_tier_stats(report, cplan, final_tiers,
+                                             tier_compute, rtt_sum, rtt_n),
+                      plan=cplan, policy=policy, dynamics=dyn)
 
 
 # ---------------------------------------------------------------------------
@@ -326,7 +434,8 @@ class _LaneCell:
 def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                fleet, report, down_bytes, up_bytes, compute_seconds,
                data_rng, dev_rng, seed, data_kind, eval_every, eval_fn, log,
-               cplan, tier_of_client, tier_up):
+               cplan, tier_of_client, tier_up, tier_compute, dyn, dyn_rng,
+               policy):
     if server_opt is None:
         server_opt = fedpt.resolve_server_opt(rc)
     # trivial plans keep the pre-plan engine (lane-exact acceptance);
@@ -417,16 +526,23 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                     cell.delta, cell.loss = deltas[i], losses[i]
 
     def sample_cid(rng):
-        return int(rng.integers(0, N))
+        return policy.sample_cid(rng)
 
     def tier_of(cid):
-        return int(tier_of_client[cid]) if cplan is not None else None
+        # the policy's map, queried at dispatch time (rotation/adaptive
+        # policies move it between server updates)
+        return (int(policy.current_tiers()[cid]) if cplan is not None
+                else None)
 
     def run_client(cid, version):
         b, w = batch_fn(dataset, cid, rc.local_steps, rc.local_batch,
                         data_rng)
         if rc.uniform_weights or rc.dp_clip_norm > 0:
             w = 1.0  # DP / uniform weighting, as in the sync engine
+        elif not policy.trivial:
+            # importance-unbiased selection weight (dropped under DP —
+            # the fixed-denominator uniform weighting calibrates sigma)
+            w = w * policy.client_weight(cid)
         # payload size is shape-determined: reuse the once-measured
         # (tier-sliced, when a plan is active) value instead of
         # serializing every delta just to count its bytes
@@ -483,9 +599,13 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         # ONE host sync per flush for the buffered losses
         out = {"loss": float(jnp.mean(jnp.stack(losses))),
                "delta_norm": float(m["delta_norm"])}
-        state["applied"] += 1
+        applied = state["applied"]
+        state["applied"] = applied + 1
         if eval_fn and eval_every and state["applied"] % eval_every == 0:
             out.update(eval_fn(part.merge(y_new, frozen)))
+        # a flush is the async "round": rotation/adaptive policies step
+        # their tier maps here
+        policy.end_round(applied)
         return out
 
     sched = sched_lib.BufferedAsyncScheduler(
@@ -494,7 +614,10 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         sample_cid=sample_cid, run_client=run_client,
         apply_update=apply_update, down_bytes=down_bytes,
         compute_seconds=compute_seconds, rng=dev_rng,
-        tier_of=tier_of if cplan is not None else None)
+        tier_of=tier_of if cplan is not None else None,
+        compute_of=((lambda cid: float(tier_compute[tier_of(cid)]))
+                    if cplan is not None else None),
+        dynamics=dyn, dyn_rng=dyn_rng, observe=policy.observe)
     t_wall = time.time()
     history = sched.run(rounds, deadline=grid.async_deadline)
     spr = (time.time() - t_wall) / max(rounds, 1)
@@ -517,12 +640,17 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                             transfers=sched.dispatches)
     stats = {"dispatches": sched.dispatches, "uploads": sched.completions,
              "offline": 0, "dropouts": sched.dropouts,
-             "deadline_drops": 0}
+             "deadline_drops": 0, "retries": sched.retries}
     vt = history[-1]["virtual_seconds"] if history else 0.0
+    final_tiers = (policy.current_tiers() if cplan is not None
+                   else tier_of_client)
     return GridResult(y=state["y"], frozen=frozen, history=history,
                       comm=report, seconds_per_round=spr,
                       virtual_seconds=vt, fleet=fleet, mode="async",
                       scheduler_stats=stats,
                       dp=accountant.summary() if accountant else None,
-                      tier_stats=_tier_stats(report, cplan, tier_of_client),
-                      plan=cplan)
+                      tier_stats=_tier_stats(report, cplan, final_tiers,
+                                             tier_compute,
+                                             sched.tier_rtt_sum,
+                                             sched.tier_uploads),
+                      plan=cplan, policy=policy, dynamics=dyn)

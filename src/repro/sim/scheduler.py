@@ -91,23 +91,41 @@ class SyncRoundPlan:
 
 
 def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
-                    down_bytes: int, up_bytes, compute_seconds: float,
+                    down_bytes: int, up_bytes, compute_seconds,
                     clients_needed: int, rng: np.random.Generator,
-                    deadline: float = math.inf) -> SyncRoundPlan:
+                    deadline: float = math.inf, dynamics=None,
+                    dyn_rng: Optional[np.random.Generator] = None,
+                    now: float = 0.0) -> SyncRoundPlan:
     """Simulate one synchronous round over the cohort `cids` (possibly
     over-selected: len(cids) >= clients_needed) and decide who counts.
 
     ``up_bytes`` is a scalar, or a per-cohort-member array when clients
     upload tier-sliced payloads of different sizes (core/plan.py): a
     lite-tier phone's smaller delta clears the uplink sooner, and the
-    virtual clock sees it."""
+    virtual clock sees it. ``compute_seconds`` broadcasts the same way
+    (per-tier compute: a lite tier's backward pass is cheaper).
+
+    ``dynamics`` (a ``sim/dynamics.BoundDynamics``) makes the round
+    stochastic: the availability trace is queried at ``now`` (the
+    round's virtual start time) and multiplied into each profile's base
+    availability, and transfer times come from each client's link model
+    with per-transfer jitter drawn from ``dyn_rng`` — a child stream
+    independent of ``rng``, whose fixed-count availability/dropout
+    draws above stay byte-identical whether dynamics are on or off."""
     cids = np.asarray(cids, np.int64)
     m = len(cids)
     up_arr = np.broadcast_to(np.asarray(up_bytes, np.int64), (m,))
+    comp_arr = np.broadcast_to(np.asarray(compute_seconds, np.float64), (m,))
     # fixed-count rng draws so the stream is deterministic regardless of
     # outcomes (and entirely separate from the data-sampling stream)
     avail_u = rng.random(m)
     drop_u = rng.random(m)
+    if dynamics is not None:
+        # fixed-count N(0,1) draws from the dynamics stream: one per
+        # potential transfer, consumed even for members that never
+        # dispatch, so the stream position is outcome-independent
+        z_down = dyn_rng.standard_normal(m)
+        z_up = dyn_rng.standard_normal(m)
 
     q = EventQueue()
     dispatched = np.zeros(m, bool)
@@ -115,7 +133,10 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
     arrival = np.full(m, math.inf)
     for i, cid in enumerate(cids):
         p = fleet.profile(cid)
-        if avail_u[i] >= p.availability:
+        avail = p.availability
+        if dynamics is not None:
+            avail = avail * dynamics.prob(int(cid), now)
+        if avail_u[i] >= avail:
             continue                      # offline: never dispatched
         dispatched[i] = True
         if drop_u[i] < p.dropout:
@@ -123,7 +144,13 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
             # never uploads; the server just never hears back
             continue
         will_complete[i] = True
-        t = p.round_trip_seconds(down_bytes, int(up_arr[i]), compute_seconds)
+        if dynamics is None:
+            t = p.round_trip_seconds(down_bytes, int(up_arr[i]),
+                                     float(comp_arr[i]))
+        else:
+            t = dynamics.round_trip_seconds(
+                p, down_bytes, int(up_arr[i]), float(comp_arr[i]),
+                int(cid), z_down[i], z_up[i])
         arrival[i] = t
         q.push(t, "complete", idx=i)
 
@@ -139,6 +166,13 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
         round_seconds = ev.time
     if taken < clients_needed and math.isfinite(deadline):
         round_seconds = deadline           # server waited the round out
+    elif taken == 0 and dynamics is not None:
+        # deadline-less server under a dark availability window: nobody
+        # even dispatched, so without a clock advance the trace would be
+        # re-queried at the same virtual time forever. The server
+        # re-polls after the redispatch backoff (the async engine's
+        # retry semantics).
+        round_seconds = dynamics.redispatch_backoff
     completed = will_complete & (arrival <= deadline)
     return SyncRoundPlan(
         cids=cids, dispatched=dispatched, completed=completed,
@@ -192,6 +226,22 @@ class BufferedAsyncScheduler:
     (``tier_dispatches``/``tier_uploads``/``tier_up_bytes``) let the
     grid bill wire traffic tier by tier, mid-round dropouts included
     (they consumed a tier-invariant downlink but never upload).
+
+    ``compute_of(cid) -> seconds`` (optional) overrides the constant
+    ``compute_seconds`` per dispatch — per-tier compute: a lite tier's
+    backward pass is cheaper, scaled by its trainable fraction.
+
+    ``dynamics`` (a ``sim/dynamics.BoundDynamics``) + ``dyn_rng`` make
+    links stochastic and availability trace-driven, queried at each
+    dispatch's virtual time. When the trace has the whole fleet dark the
+    dispatch parks as a ``retry`` event ``redispatch_backoff`` virtual
+    seconds later instead of raising — the run keeps draining events, so
+    a zero-availability *window* stalls the clock, not the process, and
+    a run with a ``deadline`` always terminates.
+
+    ``observe(cid, rtt_seconds)`` (optional) is called for every upload
+    the server receives with that transfer's realized round-trip time —
+    the feedback loop ``sim/selection.py`` policies adapt on.
     """
 
     def __init__(self, fleet: dev_lib.Fleet, concurrency: int,
@@ -199,7 +249,11 @@ class BufferedAsyncScheduler:
                  sample_cid: Callable, run_client: Callable,
                  apply_update: Callable, down_bytes: int,
                  compute_seconds: float, rng: np.random.Generator,
-                 tier_of: Optional[Callable[[int], int]] = None):
+                 tier_of: Optional[Callable[[int], int]] = None,
+                 compute_of: Optional[Callable[[int], float]] = None,
+                 dynamics=None,
+                 dyn_rng: Optional[np.random.Generator] = None,
+                 observe: Optional[Callable[[int, float], None]] = None):
         if goal_count < 1:
             raise ValueError("goal_count must be >= 1")
         self.fleet = fleet
@@ -213,15 +267,22 @@ class BufferedAsyncScheduler:
         self.compute_seconds = float(compute_seconds)
         self.rng = rng
         self.tier_of = tier_of
+        self.compute_of = compute_of
+        self.dynamics = dynamics
+        self.dyn_rng = dyn_rng
+        self.observe = observe
         # counters (read by the grid for the comm ledger)
         self.dispatches = 0
         self.dropouts = 0
         self.completions = 0
+        self.retries = 0
+        self._consecutive_retries = 0
         self.up_bytes_total = 0
         self.version = 0
         self.tier_dispatches: Counter = Counter()
         self.tier_uploads: Counter = Counter()
         self.tier_up_bytes: Counter = Counter()
+        self.tier_rtt_sum: Counter = Counter()   # realized RTT per upload
 
     def _dispatch(self, q: EventQueue, now: float) -> None:
         # redraw until the availability check passes (bounded, so a fleet
@@ -229,26 +290,58 @@ class BufferedAsyncScheduler:
         for _ in range(1000):
             cid = int(self.sample_cid(self.rng))
             p = self.fleet.profile(cid)
-            if self.rng.random() < p.availability:
+            avail = p.availability
+            if self.dynamics is not None:
+                avail = avail * self.dynamics.prob(cid, now)
+            if self.rng.random() < avail:
                 break
         else:
+            if self.dynamics is not None:
+                # the trace has (essentially) everyone offline right now:
+                # park this dispatch slot and retry when the clock moves
+                self.retries += 1
+                self._consecutive_retries += 1
+                if self._consecutive_retries > 100_000:
+                    raise RuntimeError(
+                        "availability trace kept the whole fleet offline "
+                        "for 100k consecutive redispatch backoffs — set a "
+                        "deadline or fix the trace")
+                q.push(now + self.dynamics.redispatch_backoff, "retry")
+                return
             raise RuntimeError("no available client after 1000 draws")
+        self._consecutive_retries = 0
         self.dispatches += 1
+        comp = (self.compute_of(cid) if self.compute_of is not None
+                else self.compute_seconds)
+        if self.dynamics is not None:
+            # two N(0,1) draws per dispatch (down + up), consumed even on
+            # the dropout path so the stream is outcome-independent
+            z_down, z_up = self.dyn_rng.standard_normal(2)
+            lm = self.dynamics.link_for(cid)
         tier = int(self.tier_of(cid)) if self.tier_of is not None else None
         if tier is not None:
             self.tier_dispatches[tier] += 1
         if self.rng.random() < p.dropout:
             # dies after download + local work, before upload
-            t = now + (self.down_bytes / p.downlink_bps
-                       + self.compute_seconds * p.compute_multiplier)
+            if self.dynamics is None:
+                t = now + (self.down_bytes / p.downlink_bps
+                           + comp * p.compute_multiplier)
+            else:
+                t = now + (lm.transfer_seconds(self.down_bytes,
+                                               p.downlink_bps, z_down)
+                           + comp * p.compute_multiplier)
             q.push(t, "failed", cid=cid, tier=tier)
             return
         work = self.run_client(cid, self.version)
-        t = now + p.round_trip_seconds(self.down_bytes,
-                                       int(work["up_bytes"]),
-                                       self.compute_seconds)
-        q.push(t, "complete", cid=cid, version=self.version, work=work,
-               tier=tier)
+        if self.dynamics is None:
+            rtt = p.round_trip_seconds(self.down_bytes,
+                                       int(work["up_bytes"]), comp)
+        else:
+            rtt = self.dynamics.round_trip_seconds(
+                p, self.down_bytes, int(work["up_bytes"]), comp, cid,
+                z_down, z_up)
+        q.push(now + rtt, "complete", cid=cid, version=self.version,
+               work=work, tier=tier, rtt=rtt)
 
     def _flush(self, buffer, now: float, records) -> None:
         metrics = self.apply_update(buffer, now, self.version)
@@ -291,6 +384,11 @@ class BufferedAsyncScheduler:
                 if buffer:
                     self._flush(buffer, deadline, records)
                 break
+            if ev.kind == "retry":
+                # a dispatch slot parked by a dark availability window:
+                # try again now that the clock moved
+                self._dispatch(q, ev.time)
+                continue
             if ev.kind == "failed":
                 self.dropouts += 1
                 self._dispatch(q, ev.time)
@@ -299,9 +397,12 @@ class BufferedAsyncScheduler:
             s = self.version - ev.payload["version"]
             self.completions += 1
             self.up_bytes_total += int(work["up_bytes"])
+            if self.observe is not None:
+                self.observe(int(ev.payload["cid"]), ev.payload["rtt"])
             if ev.payload.get("tier") is not None:
                 self.tier_uploads[ev.payload["tier"]] += 1
                 self.tier_up_bytes[ev.payload["tier"]] += int(work["up_bytes"])
+                self.tier_rtt_sum[ev.payload["tier"]] += ev.payload["rtt"]
             buffer.append(BufferEntry(
                 work=work,
                 weight=float(self.staleness_fn(s)) * float(work["weight"]),

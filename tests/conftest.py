@@ -3,6 +3,8 @@ import sys
 
 # src/ layout import path (tests also work without installing the package)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root: tests share the policy-bench probe model (benchmarks/)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import numpy as np
 import pytest

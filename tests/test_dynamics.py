@@ -1,0 +1,375 @@
+"""Device dynamics (sim/dynamics.py): stochastic links, trace-driven
+availability, RNG-stream hygiene, and the trivial-case bit-for-bit
+contract with the pre-dynamics grid."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.partition as part
+from repro.core import fedpt
+from repro.data import synthetic as syn
+from repro.nn import basic
+from repro.sim import devices as dev_lib
+from repro.sim import dynamics as dyn_lib
+from repro.sim import grid as simgrid
+from repro.sim import scheduler as sched_lib
+
+
+def init_fn(seed):
+    return {"dense": basic.init_dense(seed, "dense", 64, 4, jnp.float32,
+                                      bias=True)}
+
+
+def loss_fn(params, b):
+    x = b["images"].reshape(b["images"].shape[0], -1)
+    logits = basic.dense(x, params["dense"])
+    lp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(lp, b["labels"][:, None], 1)), {}
+
+
+def make_ds(n_clients=12, seed=0):
+    return syn.make_federated_images(n_clients, 30, (8, 8, 1), 4, seed=seed,
+                                     test_examples=64)
+
+
+RC = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0)
+
+MB = 1024.0 * 1024.0
+
+
+def _fleet(mults, **kw):
+    return dev_lib.Fleet(name="test", profiles=[
+        dev_lib.DeviceProfile(downlink_bps=MB, uplink_bps=MB,
+                              compute_multiplier=m, **kw) for m in mults])
+
+
+def _assert_same_run(a, b):
+    assert [h["loss"] for h in a.history] == [h["loss"] for h in b.history]
+    for ha, hb in zip(a.history, b.history):
+        assert ha["virtual_seconds"] == hb["virtual_seconds"]
+    for (pa, la), (pb, lb) in zip(basic.flatten_params(a.y),
+                                  basic.flatten_params(b.y)):
+        assert pa == pb and bool(jnp.all(la == lb)), pa
+    assert a.comm.measured_up_bytes == b.comm.measured_up_bytes
+    assert a.scheduler_stats == b.scheduler_stats
+
+
+# ---------------------------------------------------------------------------
+# LinkModel
+
+
+def test_link_model_trivial_is_exact():
+    lm = dyn_lib.LinkModel()
+    assert lm.trivial
+    # sigma=0 maps any z to factor exactly 1.0: static bytes/bps
+    for z in (-3.0, 0.0, 2.5):
+        assert lm.jitter(z) == 1.0
+        assert lm.transfer_seconds(MB, MB, z) == 1.0
+
+
+def test_link_model_jitter_mean_preserving():
+    lm = dyn_lib.LinkModel(jitter_sigma=0.5, rtt_seconds=0.25)
+    assert not lm.trivial
+    rng = np.random.default_rng(0)
+    z = rng.standard_normal(200_000)
+    factors = np.exp(0.5 * z - 0.125)
+    # E[exp(sigma z - sigma^2/2)] = 1 — jitter changes variance, not
+    # the expected transfer time
+    assert np.mean(factors) == pytest.approx(1.0, rel=0.02)
+    t = lm.transfer_seconds(2 * MB, MB, 0.0)
+    assert t == pytest.approx(0.25 + 2.0 * math.exp(-0.125))
+    # the RTT floor holds even for zero-byte transfers
+    assert lm.transfer_seconds(0, MB, 1.0) == 0.25
+
+
+# ---------------------------------------------------------------------------
+# Availability traces
+
+
+def test_diurnal_trace_bounds_and_period():
+    tr = dyn_lib.DiurnalTrace(period=100.0, low=0.2, high=0.8,
+                              phase_spread=0.0)
+    tr = tr.bind(4, np.random.default_rng(0))
+    vals = [tr.prob(0, t) for t in np.linspace(0, 100, 201)]
+    assert min(vals) == pytest.approx(0.2, abs=1e-6)
+    assert max(vals) == pytest.approx(0.8, abs=1e-6)
+    # periodic: one full cycle returns to the start
+    assert tr.prob(2, 0.0) == pytest.approx(tr.prob(2, 100.0))
+    # phase_spread=0: the whole fleet shares one clock
+    assert tr.prob(0, 37.0) == tr.prob(3, 37.0)
+    # per-client phases desynchronize the fleet
+    tr2 = dyn_lib.DiurnalTrace(period=100.0).bind(8, np.random.default_rng(1))
+    assert len({round(tr2.prob(c, 10.0), 9) for c in range(8)}) > 1
+    with pytest.raises(ValueError):
+        dyn_lib.DiurnalTrace(low=0.9, high=0.1)
+
+
+def test_step_trace_shared_and_per_client():
+    tr = dyn_lib.StepTrace([0.0, 10.0, 20.0], [1.0, 0.0, 0.5]).bind(
+        3, np.random.default_rng(0))
+    assert tr.prob(0, 0.0) == 1.0
+    assert tr.prob(0, 9.999) == 1.0
+    assert tr.prob(0, 10.0) == 0.0     # right-continuous steps
+    assert tr.prob(0, 19.0) == 0.0
+    assert tr.prob(0, 1e9) == 0.5      # last value holds forever
+    per = dyn_lib.StepTrace([0.0, 5.0], [[1.0, 0.0], [0.0, 1.0]]).bind(
+        2, np.random.default_rng(0))
+    assert per.prob(0, 1.0) == 1.0 and per.prob(1, 1.0) == 0.0
+    assert per.prob(0, 6.0) == 0.0 and per.prob(1, 6.0) == 1.0
+    with pytest.raises(ValueError):
+        dyn_lib.StepTrace([1.0, 2.0], [1.0, 1.0])      # must start at 0
+    with pytest.raises(ValueError):
+        dyn_lib.StepTrace([0.0, 1.0], [0.5, 1.5])      # out of [0, 1]
+    with pytest.raises(ValueError):
+        dyn_lib.StepTrace([0.0, 5.0], [[1.0, 0.0]]).bind(
+            2, np.random.default_rng(0))               # row/fleet mismatch
+
+
+# ---------------------------------------------------------------------------
+# Resolution: trivial configs route to None (the pre-dynamics paths)
+
+
+def test_resolve_dynamics():
+    uni = dev_lib.make_fleet(4, "uniform")
+    assert dyn_lib.resolve_dynamics(None, uni) is None
+    assert dyn_lib.resolve_dynamics("static", uni) is None
+    assert dyn_lib.resolve_dynamics(dyn_lib.DynamicsConfig(), uni) is None
+    got = dyn_lib.resolve_dynamics("jitter", uni)
+    assert got is not None and not got.trivial
+    with pytest.raises(ValueError, match="unknown dynamics preset"):
+        dyn_lib.resolve_dynamics("galaxy-brain", uni)
+    with pytest.raises(TypeError):
+        dyn_lib.resolve_dynamics(42, uni)
+    # the diurnal fleet preset implies the diurnal dynamics preset...
+    diurnal = dev_lib.make_fleet(4, "pareto-mobile-diurnal", seed=1)
+    assert all(p.link_model is not None for p in diurnal.profiles)
+    assert dyn_lib.resolve_dynamics(None, diurnal) is not None
+    # ... "static" is the hard off-switch (the A/B control), overriding
+    # even the profiles' own link models ...
+    assert dyn_lib.resolve_dynamics("static", diurnal) is None
+    # ... while an explicit (even trivial) config honors profile links
+    assert dyn_lib.resolve_dynamics(dyn_lib.DynamicsConfig(),
+                                    diurnal) is not None
+    # explicit per-client phases must match the fleet, never be
+    # silently redrawn
+    with pytest.raises(ValueError, match="phases"):
+        dyn_lib.DiurnalTrace(phases=np.zeros(3)).bind(
+            5, np.random.default_rng(0))
+
+
+def test_bound_dynamics_prefers_profile_link():
+    fleet = _fleet([1.0, 1.0])
+    slow = dataclasses.replace(fleet.profiles[1],
+                               link_model=dyn_lib.LinkModel(rtt_seconds=5.0))
+    fleet = dev_lib.Fleet(name="t", profiles=[fleet.profiles[0], slow])
+    cfg = dyn_lib.DynamicsConfig(link=dyn_lib.LinkModel(rtt_seconds=1.0))
+    bound = cfg.bind(fleet, np.random.default_rng(0))
+    assert bound.link_for(0).rtt_seconds == 1.0   # fleet default
+    assert bound.link_for(1).rtt_seconds == 5.0   # profile override
+
+
+# ---------------------------------------------------------------------------
+# RNG hygiene: the dynamics stream is independent of the device stream
+
+
+def test_spawned_dynamics_stream_leaves_parent_untouched():
+    """The grid spawns the dynamics child off [seed, device_seed];
+    spawning must not advance the parent's draw stream — this is what
+    keeps plan_sync_round's fixed-count availability/dropout draws
+    byte-identical with dynamics on or off."""
+    a = np.random.default_rng([7, 13])
+    b = np.random.default_rng([7, 13])
+    child = b.spawn(1)[0]
+    np.testing.assert_array_equal(a.random(16), b.random(16))
+    # and the child is genuinely a different stream
+    assert not np.array_equal(np.random.default_rng([7, 13]).random(8),
+                              child.random(8))
+
+
+@pytest.mark.dynamics
+def test_plan_sync_round_jitter_preserves_outcome_streams():
+    """Jitter moves arrival times but must not move the fixed-count
+    availability/dropout draws: the same members dispatch and drop with
+    dynamics on and off."""
+    fleet = _fleet([1.0, 2.0, 3.0, 4.0], availability=0.6, dropout=0.3)
+    cfg = dyn_lib.DynamicsConfig(link=dyn_lib.LinkModel(jitter_sigma=0.5))
+    bound = cfg.bind(fleet, np.random.default_rng(0))
+    base = sched_lib.plan_sync_round(
+        fleet, [0, 1, 2, 3], int(MB), int(MB), 1.0, 4,
+        np.random.default_rng(42))
+    jit = sched_lib.plan_sync_round(
+        fleet, [0, 1, 2, 3], int(MB), int(MB), 1.0, 4,
+        np.random.default_rng(42),
+        dynamics=bound, dyn_rng=np.random.default_rng(9))
+    np.testing.assert_array_equal(base.dispatched, jit.dispatched)
+    assert base.offline == jit.offline and base.dropouts == jit.dropouts
+    # ... while the completing members' times actually moved
+    done = np.isfinite(base.arrival)
+    assert done.any()
+    assert not np.allclose(base.arrival[done], jit.arrival[done])
+
+
+@pytest.mark.dynamics
+def test_grid_trivial_dynamics_bit_for_bit():
+    """Acceptance: static links + always-on trace + uniform selection
+    reproduce the pre-dynamics grid exactly in both modes."""
+    ds = make_ds()
+    ref = simgrid.run_grid(init_fn, loss_fn, ds, RC, 4, seed=3)
+    got = simgrid.run_grid(
+        init_fn, loss_fn, ds, RC, 4, seed=3,
+        grid=simgrid.GridConfig(dynamics="static", selection="uniform"))
+    _assert_same_run(ref, got)
+    gc = simgrid.GridConfig(mode="async", fleet="pareto-mobile",
+                            concurrency=6, goal_count=3)
+    ra = simgrid.run_grid(init_fn, loss_fn, ds, RC, 8, grid=gc, seed=2)
+    rb = simgrid.run_grid(
+        init_fn, loss_fn, ds, RC, 8, seed=2,
+        grid=dataclasses.replace(gc, dynamics="static",
+                                 selection="uniform"))
+    _assert_same_run(ra, rb)
+    assert ra.dynamics is None and rb.dynamics is None
+
+
+@pytest.mark.dynamics
+def test_grid_jitter_only_moves_the_clock_not_the_outcome_streams():
+    """End to end: enabling jitter-only dynamics on the sync grid keeps
+    every availability/dropout outcome (the dev-stream draws) while the
+    virtual clock moves."""
+    ds = make_ds()
+    gc = simgrid.GridConfig(fleet="pareto-mobile")
+    a = simgrid.run_grid(init_fn, loss_fn, ds, RC, 4, grid=gc, seed=5)
+    b = simgrid.run_grid(
+        init_fn, loss_fn, ds, RC, 4, seed=5,
+        grid=dataclasses.replace(gc, dynamics=dyn_lib.DynamicsConfig(
+            link=dyn_lib.LinkModel(jitter_sigma=0.3))))
+    for k in ("offline", "dropouts", "dispatches"):
+        assert a.scheduler_stats[k] == b.scheduler_stats[k], k
+    assert a.virtual_seconds != b.virtual_seconds
+
+
+# ---------------------------------------------------------------------------
+# Scheduler edge cases under availability windows
+
+
+@pytest.mark.dynamics
+def test_sync_all_offline_window_closes_at_deadline():
+    """A zero-availability trace window: nobody dispatches, the round
+    closes at its deadline with an empty update (y unchanged)."""
+    ds = make_ds(n_clients=4)
+    dark = dyn_lib.DynamicsConfig(
+        availability=dyn_lib.StepTrace([0.0, 1e9], [0.0, 1.0]))
+    gc = simgrid.GridConfig(fleet=_fleet([1.0] * 4), dynamics=dark,
+                            straggler_deadline=10.0)
+    res = simgrid.run_grid(init_fn, loss_fn, ds, RC, 2, grid=gc, seed=0)
+    assert res.scheduler_stats["dispatches"] == 0
+    assert res.scheduler_stats["offline"] == 2 * RC.clients_per_round
+    assert all(h["participants"] == 0.0 for h in res.history)
+    assert res.virtual_seconds == pytest.approx(20.0)  # 2 deadline closes
+    y0, _ = part.partition(init_fn(0), ())
+    for (p, l0), (_, l1) in zip(basic.flatten_params(y0),
+                                basic.flatten_params(res.y)):
+        assert bool(jnp.all(l0 == l1)), p   # empty updates moved nothing
+    assert res.comm.measured_down_bytes == 0
+
+
+@pytest.mark.dynamics
+def test_sync_dark_window_without_deadline_advances_the_clock():
+    """A deadline-less sync server under a dark window must not freeze
+    the virtual clock at the same trace query forever: empty rounds
+    advance by the redispatch backoff until the trace opens."""
+    ds = make_ds(n_clients=4)
+    cfg = dyn_lib.DynamicsConfig(
+        availability=dyn_lib.StepTrace([0.0, 100.0], [0.0, 1.0]),
+        redispatch_backoff=30.0)
+    gc = simgrid.GridConfig(fleet=_fleet([1.0] * 4), dynamics=cfg)
+    res = simgrid.run_grid(init_fn, loss_fn, ds, RC, 8, grid=gc, seed=0)
+    # first ceil(100/30)=4 rounds are empty backoff advances, then the
+    # window opens and cohorts actually train
+    assert [h["participants"] for h in res.history[:4]] == [0.0] * 4
+    assert all(h["participants"] > 0 for h in res.history[4:])
+    assert res.history[3]["virtual_seconds"] == pytest.approx(120.0)
+    assert res.virtual_seconds > 120.0
+
+
+@pytest.mark.dynamics
+def test_async_dark_window_does_not_deadlock():
+    """Async under a dark availability window must park dispatches and
+    resume when the trace opens — not starve, not spin forever."""
+    ds = make_ds(n_clients=6)
+    # fleet dark until t=200, then fully online
+    cfg = dyn_lib.DynamicsConfig(
+        availability=dyn_lib.StepTrace([0.0, 200.0], [0.0, 1.0]),
+        redispatch_backoff=25.0)
+    gc = simgrid.GridConfig(mode="async", fleet=_fleet([1.0] * 6),
+                            dynamics=cfg, concurrency=3, goal_count=2)
+    res = simgrid.run_grid(init_fn, loss_fn, ds, RC, 3, grid=gc, seed=1)
+    assert len(res.history) == 3
+    assert res.scheduler_stats["retries"] >= 3    # parked during the window
+    # nothing could complete before the window opened
+    assert res.history[0]["virtual_seconds"] >= 200.0
+
+
+@pytest.mark.dynamics
+def test_async_deadline_inside_dark_window_terminates():
+    """A run whose whole budget sits inside the dark window must end at
+    the deadline with however little it buffered — never deadlock."""
+    ds = make_ds(n_clients=6)
+    cfg = dyn_lib.DynamicsConfig(
+        availability=dyn_lib.StepTrace([0.0, 1e9], [0.0, 1.0]),
+        redispatch_backoff=10.0)
+    gc = simgrid.GridConfig(mode="async", fleet=_fleet([1.0] * 6),
+                            dynamics=cfg, concurrency=3, goal_count=2,
+                            async_deadline=100.0)
+    res = simgrid.run_grid(init_fn, loss_fn, ds, RC, 5, grid=gc, seed=1)
+    assert res.history == []                       # nothing ever completed
+    assert res.scheduler_stats["uploads"] == 0
+    assert res.scheduler_stats["retries"] > 0
+
+
+@pytest.mark.dynamics
+def test_straggler_deadline_interacts_with_jittered_uplinks():
+    """With static links every member beats the deadline; jitter pushes
+    some uploads past it — deadline drops appear and the round closes
+    with fewer participants."""
+    fleet = _fleet([1.0] * 8)
+    cohort = list(range(8))
+    # static: every round trip is exactly 1.0s of compute, deadline 1.5
+    base = sched_lib.plan_sync_round(fleet, cohort, 0, int(MB), 1.0, 8,
+                                     np.random.default_rng(0), deadline=2.2)
+    assert base.deadline_drops == 0 and base.participant.all()
+    cfg = dyn_lib.DynamicsConfig(link=dyn_lib.LinkModel(jitter_sigma=1.0))
+    bound = cfg.bind(fleet, np.random.default_rng(0))
+    jit = sched_lib.plan_sync_round(fleet, cohort, 0, int(MB), 1.0, 8,
+                                    np.random.default_rng(0), deadline=2.2,
+                                    dynamics=bound,
+                                    dyn_rng=np.random.default_rng(7))
+    assert jit.deadline_drops > 0
+    assert jit.participant.sum() < 8
+    assert jit.round_seconds == 2.2   # the server waited the deadline out
+
+
+# ---------------------------------------------------------------------------
+# The diurnal fleet preset, end to end
+
+
+@pytest.mark.dynamics
+def test_pareto_mobile_diurnal_preset_end_to_end():
+    ds = make_ds(n_clients=16)
+    fleet = dev_lib.make_fleet(16, "pareto-mobile-diurnal", seed=1)
+    assert all(p.link_model is not None and not p.link_model.trivial
+               for p in fleet.profiles)
+    gc = simgrid.GridConfig(mode="async", fleet="pareto-mobile-diurnal",
+                            concurrency=6, goal_count=3)
+    res = simgrid.run_grid(init_fn, loss_fn, ds, RC, 8, grid=gc, seed=2)
+    assert res.dynamics is not None            # auto-resolved "diurnal"
+    assert len(res.history) == 8
+    assert res.history[-1]["loss"] < res.history[0]["loss"]
+    # replay-deterministic: same seeds, same trajectory
+    res2 = simgrid.run_grid(init_fn, loss_fn, ds, RC, 8, grid=gc, seed=2)
+    assert [h["loss"] for h in res.history] \
+        == [h["loss"] for h in res2.history]
+    assert res.virtual_seconds == res2.virtual_seconds

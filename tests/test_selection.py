@@ -1,0 +1,330 @@
+"""Cohort-selection policies (sim/selection.py): uniform bit-for-bit
+equivalence, bandwidth-aware sampling + importance weights, FedPLT-style
+tier rotation, adaptive re-tiering from observed round trips, and the
+per-tier compute charge in the virtual clock."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import fedpt
+from repro.data import synthetic as syn
+from repro.sim import devices as dev_lib
+from repro.sim import dynamics as dyn_lib
+from repro.sim import grid as simgrid
+from repro.sim import selection as sel_lib
+
+
+# the probe model is OWNED by the policy bench and imported here, so the
+# acceptance test below and the committed BENCH_grid.json baseline can
+# never silently validate different models
+from benchmarks.grid_sweep import _probe_init as init_fn  # noqa: E402
+from benchmarks.grid_sweep import _probe_loss as loss_fn  # noqa: E402
+
+
+def make_ds(n_clients=12, seed=0):
+    return syn.make_federated_images(n_clients, 30, (8, 8, 1), 4, seed=seed,
+                                     test_examples=64)
+
+
+RC = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0)
+MB = 1024.0 * 1024.0
+TIER_PLAN = {"full": (), "mid": (r"/bias$",), "lite": (r"/kernel$",)}
+
+
+def _fleet(mults, **kw):
+    return dev_lib.Fleet(name="test", profiles=[
+        dev_lib.DeviceProfile(downlink_bps=MB, uplink_bps=MB,
+                              compute_multiplier=m, **kw) for m in mults])
+
+
+def _bind(policy, fleet, cplan=None, tiers=None, rtt=None):
+    policy.bind(fleet=fleet, num_clients=len(fleet), cplan=cplan,
+                tiers=tiers, rtt_estimate=rtt)
+    return policy
+
+
+def time_to_target(history, target):
+    best = math.inf
+    for h in history:
+        best = min(best, h["loss"])
+        if best <= target:
+            return h["virtual_seconds"], True
+    return (history[-1]["virtual_seconds"] if history else 0.0), False
+
+
+# ---------------------------------------------------------------------------
+# Resolution + the uniform acceptance contract
+
+
+def test_resolve_policy():
+    for name, cls in sel_lib.POLICIES.items():
+        p = sel_lib.resolve_policy(name)
+        assert isinstance(p, cls) and p.name == name
+    inst = sel_lib.BandwidthAwarePolicy(temperature=2.0)
+    assert sel_lib.resolve_policy(inst) is inst
+    with pytest.raises(ValueError, match="unknown selection policy"):
+        sel_lib.resolve_policy("galaxy-brain")
+    # fresh instance per resolution: no state leaks across runs
+    assert sel_lib.resolve_policy("uniform") \
+        is not sel_lib.resolve_policy("uniform")
+
+
+def test_uniform_policy_consumes_streams_identically():
+    fleet = _fleet([1.0] * 10)
+    pol = _bind(sel_lib.UniformPolicy(), fleet)
+    r1, r2 = np.random.default_rng(3), np.random.default_rng(3)
+    np.testing.assert_array_equal(pol.select_cohort(r1, 6),
+                                  syn.sample_cohort(r2, 10, 6))
+    assert pol.sample_cid(r1) == int(r2.integers(0, 10))
+    assert pol.cohort_weights(np.arange(6)) is None
+    assert pol.client_weight(3) == 1.0 and pol.trivial
+
+
+# ---------------------------------------------------------------------------
+# Bandwidth-aware
+
+
+def test_bandwidth_aware_probs_and_weights():
+    fleet = _fleet([1.0] * 4)
+    rtt = np.array([1.0, 2.0, 4.0, 8.0])
+    pol = _bind(sel_lib.BandwidthAwarePolicy(), fleet, rtt=rtt)
+    assert pol.probs.sum() == pytest.approx(1.0)
+    # monotone: faster client, higher inclusion probability
+    assert np.all(np.diff(pol.probs) < 0)
+    assert pol.probs[0] / pol.probs[3] == pytest.approx(8.0)
+    # first-order HT correction: expected weight under the sampling
+    # distribution is 1 (sum_i p_i * (1/N)/p_i), keeping the aggregate
+    # unbiased for the uniform-cohort update
+    assert np.sum(pol.probs * pol.weights) == pytest.approx(1.0)
+    assert pol.client_weight(0) < 1.0 < pol.client_weight(3)
+    # tilt cap: a pathological outlier cannot monopolize the cohort
+    capped = _bind(sel_lib.BandwidthAwarePolicy(max_tilt=4.0), fleet,
+                   rtt=np.array([1e-6, 1.0, 1.0, 1.0]))
+    assert capped.probs.max() / capped.probs.min() <= 4.0 + 1e-9
+    with pytest.raises(ValueError):
+        sel_lib.BandwidthAwarePolicy(temperature=0.0)
+    with pytest.raises(ValueError, match="round-trip estimates"):
+        _bind(sel_lib.BandwidthAwarePolicy(), fleet, rtt=None)
+
+
+@pytest.mark.dynamics
+def test_bandwidth_aware_prefers_fast_clients():
+    fleet = _fleet([1.0] * 6)
+    rtt = np.array([1.0, 1.0, 1.0, 20.0, 20.0, 20.0])
+    pol = _bind(sel_lib.BandwidthAwarePolicy(), fleet, rtt=rtt)
+    rng = np.random.default_rng(0)
+    draws = np.array([pol.sample_cid(rng) for _ in range(3000)])
+    fast = np.isin(draws, [0, 1, 2]).mean()
+    assert fast > 0.9   # 20x rtt gap -> ~95% of dispatches go fast
+
+
+@pytest.mark.dynamics
+def test_bandwidth_aware_beats_uniform_time_to_target():
+    """Acceptance: on the pareto-mobile-diurnal fleet, bandwidth-aware
+    selection reaches the target loss in measurably less virtual time
+    than uniform (fixed seeds; the README reports the magnitude range
+    across seeds honestly)."""
+    ds = make_ds(n_clients=24)
+    target = 0.2
+    vts = {}
+    for pol in ("uniform", "bandwidth-aware"):
+        gc = simgrid.GridConfig(mode="async", fleet="pareto-mobile-diurnal",
+                                base_step_time=1.0, concurrency=8,
+                                goal_count=4, selection=pol)
+        res = simgrid.run_grid(init_fn, loss_fn, ds, RC, 15, grid=gc, seed=0)
+        vt, hit = time_to_target(res.history, target)
+        assert hit, pol
+        vts[pol] = vt
+    assert vts["bandwidth-aware"] < vts["uniform"]
+
+
+@pytest.mark.dynamics
+def test_bandwidth_aware_importance_weights_reach_the_aggregate():
+    """The HT correction must actually enter the weighted mean: the same
+    run with the policy's weights forced to 1 diverges."""
+    ds = make_ds(n_clients=12)
+    gc = simgrid.GridConfig(mode="async", fleet="pareto-mobile",
+                            dynamics="jitter", concurrency=6, goal_count=3,
+                            selection="bandwidth-aware")
+    a = simgrid.run_grid(init_fn, loss_fn, ds, RC, 6, grid=gc, seed=4)
+
+    class FlatWeights(sel_lib.BandwidthAwarePolicy):
+        def client_weight(self, cid):
+            return 1.0
+
+    b = simgrid.run_grid(init_fn, loss_fn, ds, RC, 6, seed=4,
+                         grid=dataclasses.replace(gc,
+                                                  selection=FlatWeights()))
+    # identical sampling stream (same probs), different aggregation
+    assert a.scheduler_stats == b.scheduler_stats
+    assert [h["loss"] for h in a.history] != [h["loss"] for h in b.history]
+
+
+@pytest.mark.dynamics
+def test_bandwidth_aware_under_dp_keeps_sigma():
+    """Under DP the engine forces uniform-among-participants weighting
+    with the fixed denominator; selection must not touch sigma or the
+    accountant (the HT correction is documented as dropped)."""
+    ds = make_ds(n_clients=10)
+    rc = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0,
+                           dp_clip_norm=0.5, dp_noise_multiplier=0.4)
+    gc = simgrid.GridConfig(mode="async", concurrency=5, goal_count=3,
+                            fleet="pareto-mobile", dynamics="jitter",
+                            selection="bandwidth-aware")
+    res = simgrid.run_grid(init_fn, loss_fn, ds, rc, 5, grid=gc, seed=4)
+    assert res.dp["sigma"] == pytest.approx(0.4 * 0.5 / 3)
+    assert res.dp["flushes"] == 5
+
+
+# ---------------------------------------------------------------------------
+# Tier rotation
+
+
+def test_tier_rotation_requires_plan():
+    fleet = _fleet([1.0] * 4)
+    with pytest.raises(ValueError, match="trainability plan"):
+        _bind(sel_lib.TierRotationPolicy(), fleet)
+
+
+@pytest.mark.dynamics
+def test_tier_rotation_cycles_every_group_through_every_tier():
+    from repro.core import plan as plan_lib
+    ds = make_ds(n_clients=9)
+    # base census all-full: WITHOUT rotation, mid and lite would never
+    # see a single upload; rotation must feed all three tiers
+    gc = simgrid.GridConfig(plan=TIER_PLAN, tier_assignment=[0] * 9,
+                            selection="tier-rotation")
+    res = simgrid.run_grid(init_fn, loss_fn, ds, RC, 6, grid=gc, seed=1)
+    assert res.history[-1]["loss"] < res.history[0]["loss"]
+    pol = res.policy
+    # 6 rounds of rotate-by-one over 3 tiers: map returned to base twice
+    assert pol.rotation == 6
+    np.testing.assert_array_equal(
+        pol.current_tiers(), (pol.base + 6) % 3)
+    # every tier saw uploads from rotation (with a static all-X census a
+    # 3-tier plan would starve two tiers; rotation feeds all three)
+    st = res.tier_stats
+    assert all(st[k]["uploads"] > 0 for k in ("full", "mid", "lite"))
+    # unit: the map actually moves round to round
+    unit = sel_lib.TierRotationPolicy(every=2)
+    unit.bind(fleet=_fleet([1.0] * 3), num_clients=3,
+              cplan=plan_lib.compile_plan(TIER_PLAN, init_fn(0)),
+              tiers=np.array([0, 1, 2], np.int32),
+              rtt_estimate=np.ones(3))
+    m0 = unit.current_tiers().copy()
+    unit.end_round(0)
+    np.testing.assert_array_equal(unit.current_tiers(), m0)  # every=2
+    unit.end_round(1)
+    np.testing.assert_array_equal(unit.current_tiers(), (m0 + 1) % 3)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive capability
+
+
+def test_quantile_tiers_matches_assign_tiers():
+    fleet = dev_lib.make_fleet(32, "pareto-mobile", seed=3)
+    scores = np.asarray([dev_lib.capability_score(p)
+                         for p in fleet.profiles])
+    np.testing.assert_array_equal(
+        dev_lib.quantile_tiers(scores, 3),
+        dev_lib.assign_tiers(fleet, 3, "capability"))
+    # homogeneous scores: ties break upward, everyone tier 0
+    assert dev_lib.quantile_tiers(np.ones(8), 4).max() == 0
+
+
+@pytest.mark.dynamics
+def test_adaptive_capability_retiers_from_observed_rtt():
+    """Profiles lie, the wire doesn't: a fleet whose static profiles are
+    identical (static capability split -> everyone tier 0/full) but
+    where half the devices carry a crippling per-profile link model must
+    end up split by *observed* round trips after re-tiering."""
+    n = 12
+    slow_ids = list(range(6, 12))
+    profiles = []
+    for c in range(n):
+        lm = (dyn_lib.LinkModel(rtt_seconds=300.0, jitter_sigma=0.1)
+              if c in slow_ids else
+              dyn_lib.LinkModel(rtt_seconds=0.0, jitter_sigma=0.1))
+        profiles.append(dev_lib.DeviceProfile(
+            downlink_bps=MB, uplink_bps=MB, compute_multiplier=1.0,
+            link_model=lm))
+    fleet = dev_lib.Fleet(name="liars", profiles=profiles)
+    ds = make_ds(n_clients=n)
+    pol = sel_lib.AdaptiveCapabilityPolicy(refit_every=3, ema=0.5)
+    gc = simgrid.GridConfig(mode="async", fleet=fleet,
+                            plan={"full": (), "lite": (r"/kernel$",)},
+                            concurrency=6, goal_count=3, selection=pol)
+    res = simgrid.run_grid(init_fn, loss_fn, ds, RC, 12, grid=gc, seed=2)
+    assert res.policy is pol and pol.refits >= 1
+    # the static split called everyone full-tier...
+    assert (pol._tiers == 0).all()
+    final = pol.current_tiers()
+    # ... the observed split demotes every slow client the wire exposed
+    # (a quantile split keeps ~half the fleet in tier 0, so the map
+    # stays non-degenerate; unobserved clients keep their static rank)
+    observed_slow = [c for c in slow_ids if pol.observed[c]]
+    assert observed_slow, "no slow client ever completed"
+    assert all(final[c] == 1 for c in observed_slow)
+    assert (final == 0).any()
+    assert not np.array_equal(final, pol._tiers)
+    # the EMA actually separated the groups it saw
+    seen_fast = [c for c in range(6) if pol.observed[c]]
+    if seen_fast:
+        assert max(pol.ema_rtt[c] for c in seen_fast) \
+            < min(pol.ema_rtt[c] for c in observed_slow)
+
+
+def test_adaptive_capability_unit_ema_and_refit():
+    from repro.core import plan as plan_lib
+    fleet = _fleet([1.0] * 4)
+    pol = sel_lib.AdaptiveCapabilityPolicy(refit_every=2, ema=0.5)
+    pol.bind(fleet=fleet, num_clients=4,
+             cplan=plan_lib.compile_plan({"full": (), "lite": (r"/bias$",)},
+                                         init_fn(0)),
+             tiers=np.zeros(4, np.int32),
+             rtt_estimate=np.array([1.0, 1.0, 1.0, 1.0]))
+    pol.observe(3, 9.0)
+    assert pol.ema_rtt[3] == pytest.approx(5.0)      # 0.5*1 + 0.5*9
+    pol.end_round(0)                                  # not yet (every=2)
+    assert pol.refits == 0
+    pol.end_round(1)
+    assert pol.refits == 1
+    assert pol.current_tiers()[3] == 1               # slowest demoted
+    assert pol.current_tiers()[:3].max() == 0
+    with pytest.raises(ValueError):
+        sel_lib.AdaptiveCapabilityPolicy(ema=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Per-tier compute in the virtual clock (acceptance)
+
+
+@pytest.mark.dynamics
+def test_lite_tier_heavy_fleet_finishes_rounds_faster():
+    """Acceptance: per-tier compute_seconds — a lite-tier-heavy fleet
+    finishes rounds in less virtual time than all-full, and the per-tier
+    timing shows up in GridResult.tier_stats."""
+    ds = make_ds(n_clients=12)
+    plan = {"full": (), "lite": (r"/kernel$",)}
+    base = dict(plan=plan, base_step_time=10.0)
+    full = simgrid.run_grid(
+        init_fn, loss_fn, ds, RC, 3, seed=0,
+        grid=simgrid.GridConfig(tier_assignment=[0] * 12, **base))
+    lite = simgrid.run_grid(
+        init_fn, loss_fn, ds, RC, 3, seed=0,
+        grid=simgrid.GridConfig(tier_assignment=[1] * 12, **base))
+    assert lite.virtual_seconds < full.virtual_seconds
+    # the tier's compute charge is the base scaled by trainable fraction
+    cs_full = full.tier_stats["full"]["compute_seconds"]
+    cs_lite = lite.tier_stats["lite"]["compute_seconds"]
+    assert cs_full == pytest.approx(RC.local_steps * 10.0)
+    frac = lite.plan.tiers[1].param_count / sum(lite.plan.layout.sizes)
+    assert cs_lite == pytest.approx(cs_full * frac)
+    assert 0 < frac < 1
+    # observed mean round trips surface per tier
+    assert lite.tier_stats["lite"]["rtt_mean"] > 0
+    assert lite.tier_stats["lite"]["rtt_mean"] \
+        < full.tier_stats["full"]["rtt_mean"]
