@@ -38,6 +38,12 @@ float drift) of the baseline, hit flags must not regress, and
 
     PYTHONPATH=src python -m benchmarks.grid_sweep --policy all \
         [--gate BENCH_grid.json] [--baseline-out BENCH_grid.json]
+
+Cell counters (uploads, retries, drops) are read from each run's
+metrics snapshot (``GridResult.metrics`` — the registry
+``scheduler_stats`` views), not hand-plumbed dicts; ``--metrics-out``
+dumps every cell's full snapshot for ``benchmarks.summarize
+--metrics``.
 """
 from __future__ import annotations
 
@@ -116,6 +122,7 @@ def run_policy_cells(policies, rounds: int, target: float):
                                    test_examples=64)
     rc = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0)
     cells = []
+    snapshots = {}
     for policy in policies:
         gc = GridConfig(mode="async", fleet=POLICY_FLEET, concurrency=8,
                         goal_count=4, staleness="polynomial",
@@ -125,19 +132,27 @@ def run_policy_cells(policies, rounds: int, target: float):
         res = run_grid(_probe_init, _probe_loss, ds, rc, rounds, grid=gc,
                        seed=0)
         vt, hit = time_to_target(res.history, target)
+        # the counters come from the run's metrics snapshot — the same
+        # registry GridResult.scheduler_stats views, so the committed
+        # BENCH_grid.json values are unchanged
+        snap = res.metrics.snapshot()
+        snapshots[policy] = snap
+        counters = snap["counters"]
         cell = {"policy": policy, "vt_to_target_s": vt, "hit": int(hit),
                 "loss": res.history[-1]["loss"],
                 "virtual_s": res.virtual_seconds,
                 "wire_mb": res.comm.measured_total_bytes / MB,
-                "uploads": res.scheduler_stats["uploads"]}
+                "uploads": counters["uploads"]["value"],
+                "retries": counters["retries"]["value"]}
         cells.append(cell)
         print(f"grid/policy/{policy},{vt * 1e6:.0f},"
               f"hit={cell['hit']};loss={cell['loss']:.3f}"
               f";virt_s={cell['virtual_s']:.0f}"
               f";wire_mb={cell['wire_mb']:.1f}"
-              f";uploads={cell['uploads']}")
+              f";uploads={cell['uploads']}"
+              f";retries={cell['retries']}")
         sys.stdout.flush()
-    return cells
+    return cells, snapshots
 
 
 def gate_policy_cells(cells, baseline_path: str, tolerance: float,
@@ -215,6 +230,10 @@ def main(argv=None):
     ap.add_argument("--baseline-out", default=None, metavar="JSON",
                     help="with --policy: write the cells as the "
                          "committed BENCH_grid.json baseline")
+    ap.add_argument("--metrics-out", default=None, metavar="JSON",
+                    help="with --policy: dump each cell's full metrics "
+                         "snapshot (render with "
+                         "benchmarks.summarize --metrics)")
     ap.add_argument("--gate", default=None, metavar="BASELINE_JSON",
                     help="with --policy: fail if any policy's virtual "
                          "time to target regresses past gate-tolerance "
@@ -225,8 +244,12 @@ def main(argv=None):
 
     if args.policy:
         policies = POLICIES if args.policy == "all" else [args.policy]
-        cells = run_policy_cells(policies, args.rounds or 15,
-                                 args.policy_target)
+        cells, snapshots = run_policy_cells(policies, args.rounds or 15,
+                                            args.policy_target)
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                json.dump(snapshots, f, indent=1)
+            print(f"wrote {args.metrics_out}")
         if args.baseline_out:
             out = {"backend": jax.default_backend(),
                    "fleet": POLICY_FLEET, "target": args.policy_target,
@@ -256,13 +279,18 @@ def main(argv=None):
                                ds, rc, rounds, grid=gc, freeze_spec=spec,
                                seed=0)
                 vt, hit = time_to_target(res.history, args.target)
-                st = res.scheduler_stats
+                # both modes emit the same counter schema (explicit
+                # zeros for counters that cannot fire), so one snapshot
+                # read covers sync and async cells alike
+                ctr = res.metrics.snapshot()["counters"]
+                drops = (ctr["dropouts"]["value"]
+                         + ctr["deadline_drops"]["value"])
                 derived = (f"hit={int(hit)}"
                            f";loss={res.history[-1]['loss']:.3f}"
                            f";virt_s={res.virtual_seconds:.0f}"
                            f";wire_mb={res.comm.measured_total_bytes/MB:.1f}"
-                           f";uploads={st['uploads']}"
-                           f";drops={st['dropouts']+st['deadline_drops']}"
+                           f";uploads={ctr['uploads']['value']}"
+                           f";drops={drops}"
                            f";reduction={res.comm.reduction:.1f}x")
                 print(f"grid/{fleet}/{mode}/{spec_name},{vt*1e6:.0f},"
                       f"{derived}")

@@ -1,10 +1,58 @@
 """Summarize results/benchmarks.json into the EXPERIMENTS.md §Tables
-section (run after `python -m benchmarks.run`)."""
+section (run after `python -m benchmarks.run`), or render a grid metrics
+snapshot (`benchmarks.grid_sweep --policy all --metrics-out snap.json`)
+as markdown tables:
+
+    python -m benchmarks.summarize                      # EXPERIMENTS.md
+    python -m benchmarks.summarize --metrics snap.json  # stdout tables
+"""
+import argparse
 import json
 import sys
 
 
-def main(path="results/benchmarks.json"):
+def render_snapshot(snap: dict) -> str:
+    """Markdown tables for one ``MetricsRegistry.snapshot()`` dict."""
+    out = []
+    counters = snap.get("counters", {})
+    if counters:
+        out.append("| counter | value | by label |")
+        out.append("|---|---|---|")
+        for name, c in counters.items():
+            by = " ".join(f"{k}={v}" for k, v in c["labels"].items())
+            out.append(f"| {name} | {c['value']} | {by} |")
+        out.append("")
+    gauges = snap.get("gauges", {})
+    if gauges:
+        out.append("| gauge | value | by label |")
+        out.append("|---|---|---|")
+        for name, g in gauges.items():
+            by = " ".join(f"{k}={v}" for k, v in g["labels"].items())
+            out.append(f"| {name} | {g['value']} | {by} |")
+        out.append("")
+    hists = snap.get("histograms", {})
+    if hists:
+        out.append("| histogram | count | mean | min | max |")
+        out.append("|---|---|---|---|---|")
+        for name, h in hists.items():
+            out.append(f"| {name} | {h['count']} | {h['mean']:.4g} "
+                       f"| {h['min']:.4g} | {h['max']:.4g} |")
+        out.append("")
+    return "\n".join(out)
+
+
+def summarize_metrics(path: str) -> None:
+    with open(path) as f:
+        doc = json.load(f)
+    # either one snapshot, or grid_sweep's {cell name -> snapshot} dump
+    if "v" in doc and ("counters" in doc or "gauges" in doc):
+        doc = {"run": doc}
+    for name, snap in doc.items():
+        print(f"### {name}\n")
+        print(render_snapshot(snap))
+
+
+def summarize_tables(path: str) -> None:
     rows = json.load(open(path))
     tables = {}
     for r in rows:
@@ -28,5 +76,19 @@ def main(path="results/benchmarks.json"):
     print(text)
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", nargs="?", default="results/benchmarks.json",
+                    help="benchmark rows to fold into EXPERIMENTS.md")
+    ap.add_argument("--metrics", default=None, metavar="SNAPSHOT_JSON",
+                    help="render a metrics snapshot (or grid_sweep's "
+                         "--metrics-out dump) as tables instead")
+    args = ap.parse_args(argv)
+    if args.metrics:
+        summarize_metrics(args.metrics)
+    else:
+        summarize_tables(args.path)
+
+
 if __name__ == "__main__":
-    main(*sys.argv[1:])
+    main(sys.argv[1:])

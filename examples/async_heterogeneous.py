@@ -19,8 +19,20 @@ wire traffic from the CommReport ledger — the mixed fleet must bill
 strictly fewer uplink bytes.
 
     PYTHONPATH=src python examples/async_heterogeneous.py --tiers
+
+``--trace out.json`` records the async run's full event stream
+(obs/trace.py) and writes a Chrome/Perfetto timeline — open it in
+https://ui.perfetto.dev to see every client's dispatch->upload round
+trip as a span on its own track, with server flushes as instant
+markers, all in the grid's *virtual* clock. ``--trace-jsonl out.jsonl``
+additionally writes the raw schema-versioned event records (one JSON
+object per line; validate with ``python -m repro.obs.schema``).
+
+    PYTHONPATH=src python examples/async_heterogeneous.py \
+        --trace trace.json --trace-jsonl trace.jsonl
 """
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +41,7 @@ from repro.core import fedpt
 from repro.core.plan import TrainPlan
 from repro.data import synthetic as syn
 from repro.models import paper_models as pm
+from repro.obs.trace import TelemetryConfig
 from repro.sim import GridConfig, run_grid
 
 MB = 1024.0 * 1024.0
@@ -38,6 +51,12 @@ parser.add_argument("--tiers", action="store_true",
                     help="mixed-tier trainability plan vs all-full")
 parser.add_argument("--rounds", type=int, default=12,
                     help="server updates per run (CI smoke uses fewer)")
+parser.add_argument("--trace", default=None, metavar="JSON",
+                    help="write a Perfetto timeline of the async run "
+                         "(open in ui.perfetto.dev)")
+parser.add_argument("--trace-jsonl", default=None, metavar="JSONL",
+                    help="also write the raw schema-versioned event "
+                         "stream as JSONL")
 args = parser.parse_args()
 
 ds = syn.make_federated_images(num_clients=40, examples_per_client=50,
@@ -82,6 +101,14 @@ else:
                                       staleness="polynomial"),
     }
 
+if args.trace or args.trace_jsonl:
+    # trace the last (async) run: with --tiers that is the tiered fleet,
+    # otherwise the FedBuff run
+    traced = list(RUNS)[-1]
+    RUNS[traced] = dataclasses.replace(
+        RUNS[traced], telemetry=TelemetryConfig(
+            jsonl_path=args.trace_jsonl, perfetto_path=args.trace))
+
 results = {}
 for name, gc in RUNS.items():
     res = run_grid(lambda s: pm.init_emnist_cnn(s), loss_fn, ds, rc,
@@ -107,6 +134,15 @@ for name, gc in RUNS.items():
           f"across {res.comm.transfers} transfers")
     print(f"  analytic ledger: {res.comm.reduction:.1f}x reduction vs "
           f"full-model FedAvg (uplink alone {res.comm.uplink_reduction:.1f}x)")
+    if res.telemetry is not None:
+        counts = res.telemetry.kind_counts()
+        print("  telemetry: " + " ".join(
+            f"{k}={counts[k]}" for k in sorted(counts)))
+        if args.trace:
+            print(f"  wrote Perfetto timeline -> {args.trace} "
+                  "(open in ui.perfetto.dev)")
+        if args.trace_jsonl:
+            print(f"  wrote event stream -> {args.trace_jsonl}")
     if res.tier_stats:
         print("  tier      clients  dispatches  uploads      up KiB  "
               "KiB/upload")

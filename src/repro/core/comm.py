@@ -20,10 +20,11 @@ be cross-checked (they must agree exactly for fp32 payloads).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Any, Dict
 
 from repro.core import compress
 from repro.nn import basic
+from repro.obs import trace as trace_lib
 
 SEED_BYTES = 8
 
@@ -55,6 +56,12 @@ class CommReport:
     # downloads the full trainable tree — see core/plan.py).
     tier_traffic: Dict[str, Dict[str, int]] = dataclasses.field(
         default_factory=dict)
+    # the telemetry tracer the grid threads through (obs/trace.py):
+    # tier-sliced wire billing emits one ``tier_upload`` instant per
+    # metered batch. NULL_TRACER (the default) emits nothing; never
+    # part of equality/repr — it is plumbing, not ledger state.
+    tracer: Any = dataclasses.field(default=trace_lib.NULL_TRACER,
+                                    repr=False, compare=False)
 
     @property
     def download_full(self) -> int:
@@ -110,10 +117,13 @@ class CommReport:
         self.transfers += int(transfers)
 
     def add_tier_measured(self, tier: str, down_bytes: int, up_bytes: int,
-                          transfers: int = 1, uploads: int = 0) -> None:
+                          transfers: int = 1, uploads: int = 0,
+                          now: float = 0.0) -> None:
         """Accumulate observed bytes for one trainability tier AND the
         global totals (callers meter through one entry point — never
-        call both this and ``add_measured`` for the same transfers)."""
+        call both this and ``add_measured`` for the same transfers).
+        ``now`` stamps the tracer's ``tier_upload`` billing instant in
+        virtual time (ignored with the default NULL_TRACER)."""
         rec = self.tier_traffic.setdefault(
             tier, {"down_bytes": 0, "up_bytes": 0, "transfers": 0,
                    "uploads": 0})
@@ -122,6 +132,11 @@ class CommReport:
         rec["transfers"] += int(transfers)
         rec["uploads"] += int(uploads)
         self.add_measured(down_bytes, up_bytes, transfers)
+        self.tracer.instant("tier_upload", now, tier_name=tier,
+                            down_bytes=int(down_bytes),
+                            up_bytes=int(up_bytes),
+                            transfers=int(transfers),
+                            uploads=int(uploads))
 
     @property
     def measured_total_bytes(self) -> int:

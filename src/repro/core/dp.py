@@ -27,6 +27,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.obs import trace as trace_lib
 from repro.optim import optimizers as opt_lib
 
 
@@ -94,19 +95,26 @@ class FlushAccountant:
     _ALPHAS = tuple([1.0 + x / 10.0 for x in range(1, 100)]
                     + list(range(11, 64)) + [128, 256, 512])
 
-    def __init__(self, cfg: FlushDPConfig):
+    def __init__(self, cfg: FlushDPConfig,
+                 tracer=trace_lib.NULL_TRACER):
         self.cfg = cfg
+        self.tracer = tracer
         self.flushes = 0
         self.padded_flushes = 0
         self.max_multiplicity = 0
         self._sum_m2 = 0.0
 
-    def record_flush(self, n_real: int, multiplicity: int = 1) -> None:
+    def record_flush(self, n_real: int, multiplicity: int = 1,
+                     now: float = 0.0) -> None:
         """One applied server update with ``n_real`` non-padding rows,
         of which at most ``multiplicity`` belong to the same client.
         Padding changes neither sigma nor the accounting — the mechanism
         is identical, a short flush just spends the same budget on fewer
-        clients."""
+        clients.
+
+        ``now`` is the flush's virtual time, used only for the tracer's
+        ``dp_flush`` instant (each composition step carries sigma and
+        the epsilon spent SO FAR, so a timeline shows the budget curve)."""
         if multiplicity < 1:
             raise ValueError("multiplicity must be >= 1")
         self.flushes += 1
@@ -114,6 +122,13 @@ class FlushAccountant:
         self._sum_m2 += float(multiplicity) ** 2
         if n_real < self.cfg.goal_count:
             self.padded_flushes += 1
+        if self.tracer.enabled:
+            delta = 1e-5
+            self.tracer.instant(
+                "dp_flush", now, flush=self.flushes - 1,
+                n_real=int(n_real), multiplicity=int(multiplicity),
+                sigma=self.cfg.sigma, epsilon=self.epsilon(delta),
+                delta=delta, padded=bool(n_real < self.cfg.goal_count))
 
     def epsilon(self, delta: float = 1e-5) -> float:
         z = self.cfg.noise_multiplier

@@ -1,0 +1,19 @@
+"""Grid telemetry: structured event tracing, a metrics registry, and
+trace exporters (schema-versioned JSONL + Chrome/Perfetto timelines).
+
+The simulation stack (sim/scheduler.py, sim/grid.py, core/dp.py,
+core/comm.py) threads one :class:`Tracer` and one
+:class:`MetricsRegistry` through a run. ``GridConfig.telemetry=None``
+(the default) routes tracing through :data:`NULL_TRACER` — a strict
+no-op with bit-identical run histories — while the metrics registry is
+always live and backs ``GridResult.scheduler_stats`` / ``tier_stats``
+as its dict views.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               SNAPSHOT_VERSION)
+from repro.obs.schema import (EVENT_SCHEMA, KINDS, SCHEMA_VERSION,
+                              validate_jsonl, validate_perfetto,
+                              validate_record, validate_records)
+from repro.obs.trace import (NULL_TRACER, NullTracer, TelemetryConfig,
+                             TraceRecord, Tracer, resolve_telemetry)
+from repro.obs import export

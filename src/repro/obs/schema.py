@@ -1,0 +1,212 @@
+"""Event-record schema for the grid's telemetry stream (stdlib-only).
+
+Every record a :class:`repro.obs.trace.Tracer` emits serializes to one
+JSON object carrying the schema version, the event kind, its virtual-time
+start ``t`` (seconds), an optional duration ``dur`` (seconds; ``null`` or
+absent for instant events), and a kind-specific payload. This module is
+the single source of truth for what those payloads look like: the JSONL
+exporter writes records of this shape, the CI ``telemetry`` job validates
+every emitted line against it, and the live-server path (ROADMAP) is
+expected to reuse the same stream.
+
+Deliberately dependency-free (``json`` + ``math`` only) so the validator
+can run anywhere — including the CLI form the CI job uses:
+
+    python -m repro.obs.schema trace.jsonl --perfetto trace.json \
+        --require dispatch flush
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+SCHEMA_VERSION = 1
+
+_NUM = (int, float)
+_INT = (int,)
+_STR = (str,)
+_BOOL = (bool,)
+
+# kind -> (required payload fields, optional payload fields); each field
+# maps to the tuple of accepted Python types (post-json.loads). ``None``
+# is accepted for any *optional* field — "measured but not applicable"
+# is an explicit null, never a missing-vs-zero ambiguity.
+EVENT_SCHEMA: Dict[str, Tuple[Dict[str, tuple], Dict[str, tuple]]] = {
+    # one client round trip attempt, dispatch -> upload-complete (span;
+    # dur is null when the client never finishes: sync dropout)
+    "dispatch": ({"cid": _INT},
+                 {"tier": _INT, "down_bytes": _INT, "up_bytes": _INT,
+                  "version": _INT, "outcome": _STR}),
+    # a delta arriving at the server (instant)
+    "upload": ({"cid": _INT, "up_bytes": _INT},
+               {"tier": _INT, "staleness": _INT, "rtt": _NUM,
+                "participant": _BOOL}),
+    # a dispatch slot parked by a dark availability window (instant)
+    "retry": ({}, {"backoff": _NUM}),
+    # one buffered async server update (instant at apply time)
+    "flush": ({"version": _INT, "buffer_fill": _NUM},
+              {"staleness_mean": _NUM, "staleness_max": _NUM}),
+    # one synchronous cohort round (span over the round's virtual time)
+    "round": ({"round": _INT},
+              {"participants": _NUM, "cohort": _INT, "loss": _NUM}),
+    # one FlushAccountant composition step (instant)
+    "dp_flush": ({"flush": _INT, "n_real": _INT, "multiplicity": _INT},
+                 {"sigma": _NUM, "epsilon": _NUM, "delta": _NUM,
+                  "padded": _BOOL}),
+    # tier-sliced wire billing from the comm ledger (instant)
+    "tier_upload": ({"tier_name": _STR, "down_bytes": _INT,
+                     "up_bytes": _INT},
+                    {"transfers": _INT, "uploads": _INT}),
+}
+
+KINDS = tuple(EVENT_SCHEMA)
+
+
+def _type_ok(value: Any, types: tuple) -> bool:
+    # bool is an int subclass; never let a bool satisfy an int/num field
+    if isinstance(value, bool):
+        return bool in types or _BOOL == types
+    if float in types and isinstance(value, _NUM):
+        return True
+    return isinstance(value, types)
+
+
+def validate_record(rec: Any) -> List[str]:
+    """Errors for one decoded JSONL record ([] = valid)."""
+    if not isinstance(rec, dict):
+        return [f"record is {type(rec).__name__}, not an object"]
+    errs: List[str] = []
+    v = rec.get("v")
+    if v != SCHEMA_VERSION:
+        errs.append(f"v={v!r} (expected {SCHEMA_VERSION})")
+    kind = rec.get("kind")
+    if kind not in EVENT_SCHEMA:
+        return errs + [f"unknown kind {kind!r}"]
+    t = rec.get("t")
+    if not (isinstance(t, _NUM) and not isinstance(t, bool)
+            and math.isfinite(t) and t >= 0.0):
+        errs.append(f"t={t!r} is not a finite non-negative number")
+    dur = rec.get("dur")
+    if dur is not None and not (isinstance(dur, _NUM)
+                                and not isinstance(dur, bool)
+                                and math.isfinite(dur) and dur >= 0.0):
+        errs.append(f"dur={dur!r} is not null or a finite non-negative "
+                    "number")
+    required, optional = EVENT_SCHEMA[kind]
+    payload = {k: val for k, val in rec.items()
+               if k not in ("v", "kind", "t", "dur")}
+    for name, types in required.items():
+        if name not in payload:
+            errs.append(f"{kind}: missing required field {name!r}")
+        elif payload[name] is None or not _type_ok(payload[name], types):
+            errs.append(f"{kind}: field {name!r}={payload[name]!r} has "
+                        "the wrong type")
+    for name, val in payload.items():
+        if name in required:
+            continue
+        if name not in optional:
+            errs.append(f"{kind}: unexpected field {name!r}")
+        elif val is not None and not _type_ok(val, optional[name]):
+            errs.append(f"{kind}: field {name!r}={val!r} has the wrong "
+                        "type")
+    return errs
+
+
+def validate_records(records: Iterable[Any]) -> List[str]:
+    """All errors across a record stream, prefixed with the 1-based
+    record index."""
+    errs = []
+    for i, rec in enumerate(records):
+        errs.extend(f"record {i + 1}: {e}" for e in validate_record(rec))
+    return errs
+
+
+def validate_jsonl(path: str) -> Tuple[int, List[str]]:
+    """(record count, errors) for a JSONL trace file."""
+    n = 0
+    errs: List[str] = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            n += 1
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                errs.append(f"line {i + 1}: not valid JSON ({e})")
+                continue
+            errs.extend(f"line {i + 1}: {e}" for e in validate_record(rec))
+    return n, errs
+
+
+def validate_perfetto(path: str,
+                      require: Iterable[str] = ()) -> Tuple[int, List[str]]:
+    """(event count, errors) for a Chrome/Perfetto ``trace_event`` JSON
+    export: the file must be loadable JSON with a ``traceEvents`` list,
+    and must contain at least one non-metadata event named after each
+    kind in ``require``."""
+    errs: List[str] = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return 0, [f"not loadable JSON: {e}"]
+    events = doc.get("traceEvents") if isinstance(doc, dict) else None
+    if not isinstance(events, list):
+        return 0, ["missing 'traceEvents' list"]
+    named = [e for e in events
+             if isinstance(e, dict) and e.get("ph") != "M"]
+    for e in named:
+        ts = e.get("ts")
+        if not (isinstance(ts, _NUM) and not isinstance(ts, bool)
+                and math.isfinite(ts) and ts >= 0.0):
+            errs.append(f"event {e.get('name')!r}: ts={ts!r} is not a "
+                        "finite non-negative number")
+    for kind in require:
+        if not any(e.get("name") == kind for e in named):
+            errs.append(f"no {kind!r} event in the trace")
+    return len(named), errs
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Validate a grid telemetry JSONL stream (and "
+                    "optionally its Perfetto export) against the event "
+                    "schema.")
+    ap.add_argument("jsonl", help="JSONL trace file (one record per line)")
+    ap.add_argument("--perfetto", default=None, metavar="JSON",
+                    help="also validate a Chrome/Perfetto trace_event "
+                         "export")
+    ap.add_argument("--require", nargs="*", default=[], metavar="KIND",
+                    help="event kinds that must appear in BOTH files")
+    args = ap.parse_args(argv)
+    n, errs = validate_jsonl(args.jsonl)
+    if n == 0:
+        errs.append("no records in the JSONL stream")
+    seen = set()
+    with open(args.jsonl) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                try:
+                    seen.add(json.loads(line).get("kind"))
+                except json.JSONDecodeError:
+                    pass
+    for kind in args.require:
+        if kind not in seen:
+            errs.append(f"jsonl: no {kind!r} record in the stream")
+    print(f"{args.jsonl}: {n} records, {len(errs)} error(s)")
+    if args.perfetto:
+        pn, perrs = validate_perfetto(args.perfetto, require=args.require)
+        print(f"{args.perfetto}: {pn} events, {len(perrs)} error(s)")
+        errs.extend(perrs)
+    for e in errs:
+        print(f"  ERROR: {e}")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,6 +14,7 @@ from repro.sim.devices import (DeviceProfile, Fleet, make_fleet,
 from repro.sim.dynamics import (LinkModel, AvailabilityTrace, AlwaysOn,
                                 DiurnalTrace, StepTrace, DynamicsConfig,
                                 DYNAMICS_PRESETS, resolve_dynamics)
+from repro.obs.trace import TelemetryConfig
 from repro.sim.grid import GridConfig, GridResult, run_grid
 from repro.sim.scheduler import (EventQueue, SyncRoundPlan, plan_sync_round,
                                  BufferedAsyncScheduler)

@@ -37,6 +37,9 @@ from repro.core import plan as plan_lib
 from repro.data import synthetic as syn
 from repro.launch import mesh as mesh_lib
 from repro.launch import sharding as shard_lib
+from repro.obs import metrics as metrics_lib
+from repro.obs import profiling as prof_lib
+from repro.obs import trace as trace_lib
 from repro.sim import devices as dev_lib
 from repro.sim import dynamics as dyn_lib
 from repro.sim import scheduler as sched_lib
@@ -104,6 +107,16 @@ class GridConfig:
     # "tier-rotation", "adaptive-capability", or a SelectionPolicy
     # instance
     selection: Any = "uniform"
+    # --- telemetry (repro/obs) ---
+    # None = the NULL tracer: no event records, no extra PRNG draws,
+    # bit-identical histories (test-enforced). A TelemetryConfig (or
+    # True/"on", or a dict of its fields) records typed span/event
+    # traces in virtual time — dispatches, uploads, retries, flushes,
+    # rounds, dp_flush accounting, tier wire billing — inspectable on
+    # GridResult.telemetry and exportable as schema-versioned JSONL or
+    # a Chrome/Perfetto timeline. The metrics registry backing
+    # GridResult.scheduler_stats/tier_stats is always on either way.
+    telemetry: Any = None
     # --- rng plumbing ---
     fleet_seed: int = 0                     # profile sampling
     device_seed: int = 13                   # availability/dropout/latency
@@ -137,6 +150,20 @@ class GridResult:
     policy: Any = None
     # the BoundDynamics the run used (None = static links, always-on)
     dynamics: Any = None
+    # the run's MetricsRegistry (always present): scheduler_stats and
+    # tier_stats above are dict views over it — metrics.snapshot() is
+    # the superset
+    metrics: Any = None
+    # the Tracer when GridConfig.telemetry was set (else None):`.events`
+    # holds the virtual-time records, `.export_jsonl`/`.export_perfetto`
+    # write them out
+    telemetry: Any = None
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Alias for ``scheduler_stats`` (the normalized per-run
+        scheduler counters; same key set in both modes)."""
+        return self.scheduler_stats
 
 
 def num_clients(ds) -> int:
@@ -172,10 +199,23 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
     fleet = dev_lib.make_fleet(N, grid.fleet, seed=grid.fleet_seed)
     y, frozen = part.partition(init_fn(seed), freeze_spec)
 
+    # telemetry: the metrics registry is ALWAYS live (it backs
+    # scheduler_stats/tier_stats); the tracer is the NULL no-op unless
+    # GridConfig.telemetry asks for event records
+    registry = metrics_lib.MetricsRegistry()
+    tel_cfg = trace_lib.resolve_telemetry(grid.telemetry)
+    tracer = (trace_lib.Tracer(tel_cfg, registry) if tel_cfg is not None
+              else trace_lib.NULL_TRACER)
+    profile = bool(tel_cfg and tel_cfg.profile)
+
     report = comm.report_for(y, frozen, uplink_bits=rc.uplink_bits)
+    report.tracer = tracer                       # tier_upload billing
     down_bytes = wire.downlink_bytes(y)          # y + 8-byte seed, measured
     up_bytes = _uplink_bytes(y, rc.uplink_bits)  # shape-determined
     compute_seconds = rc.local_steps * grid.base_step_time
+    registry.gauge("payload_down_bytes").set(int(down_bytes))
+    registry.gauge("payload_up_bytes").set(int(up_bytes))
+    registry.gauge("compute_seconds").set(float(compute_seconds))
 
     # trainability plan: capability->tier per client, tier-sliced uplink
     # payloads (downlink stays the full y + seed for every tier — other
@@ -198,6 +238,11 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
             [compute_seconds * (t.param_count / total_params
                                 if total_params else 1.0)
              for t in cplan.tiers], np.float64)
+        for t in cplan.tiers:
+            # per-tier virtual compute charge, the registry's copy (the
+            # tier_stats view and the benchmarks read it from here)
+            registry.gauge("tier_compute").set(float(tier_compute[t.index]),
+                                               label=t.index)
     else:
         cplan = None
         tier_of_client = None
@@ -235,7 +280,8 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
                   eval_fn=eval_fn, log=log, cplan=cplan,
                   tier_of_client=tier_of_client, tier_up=tier_up,
                   tier_compute=tier_compute, dyn=dyn, dyn_rng=dyn_rng,
-                  policy=policy)
+                  policy=policy, registry=registry, tracer=tracer,
+                  profile=profile)
     if grid.mode == "sync":
         return _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid,
                          server_opt, **common)
@@ -250,15 +296,35 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
 # Synchronous cohorts
 
 
-def _tier_stats(report, cplan, tier_of_client, tier_compute=None,
-                rtt_sum=None, rtt_n=None):
+# the normalized scheduler-stats schema: BOTH modes emit every key,
+# with explicit zeros where a counter cannot fire (sync never retries
+# in-flight dispatches; async has no over-selection excess and no
+# availability-draw offline stage) — regression-tested
+STAT_KEYS = ("dispatches", "uploads", "offline", "dropouts",
+             "deadline_drops", "excess", "retries")
+
+
+def _stats_view(registry: metrics_lib.MetricsRegistry) -> Dict[str, int]:
+    """GridResult.scheduler_stats as a dict view over the metrics
+    registry — the registry is the one source of truth, this is its
+    stable-schema rendering."""
+    return {k: int(registry.counter(k).value) for k in STAT_KEYS}
+
+
+def _tier_stats(report, cplan, tier_of_client,
+                registry: metrics_lib.MetricsRegistry):
     """GridResult.tier_stats: the comm ledger's per-tier traffic plus
     the fleet census (how many clients each tier owns — the run's final
     tier map, which rotation/adaptive policies move over time), the
     tier's compute charge per local run, and the mean observed
-    round-trip of its uploads."""
+    round-trip of its uploads. Timing/compute columns are read from the
+    metrics registry (labels = tier indices), the wire columns from the
+    comm ledger."""
     if cplan is None:
         return None
+    rtt_sum = registry.counter("tier_rtt_sum")
+    rtt_n = registry.counter("tier_rtt_n")
+    compute = registry.gauge("tier_compute")
     out = {}
     for t in cplan.tiers:
         rec = dict(report.tier_traffic.get(
@@ -271,13 +337,11 @@ def _tier_stats(report, cplan, tier_of_client, tier_compute=None,
         rec["up_bytes_per_upload"] = (rec["up_bytes"] / rec["uploads"]
                                       if rec["uploads"] else 0.0)
         rec["trainable_bytes"] = t.trainable_bytes
-        if tier_compute is not None:
-            # per-tier virtual compute charge (reference device, one
-            # dispatch): base compute scaled by the trainable fraction
-            rec["compute_seconds"] = float(tier_compute[t.index])
-        if rtt_sum is not None:
-            n = rtt_n.get(t.index, 0) if hasattr(rtt_n, "get") else 0
-            rec["rtt_mean"] = (rtt_sum.get(t.index, 0.0) / n) if n else 0.0
+        # per-tier virtual compute charge (reference device, one
+        # dispatch): base compute scaled by the trainable fraction
+        rec["compute_seconds"] = float(compute.get(t.index, 0.0))
+        n = rtt_n.get(t.index, 0)
+        rec["rtt_mean"] = (rtt_sum.get(t.index, 0.0) / n) if n else 0.0
         out[t.name] = rec
     return out
 
@@ -286,7 +350,7 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
               fleet, report, down_bytes, up_bytes, compute_seconds,
               data_rng, dev_rng, seed, data_kind, eval_every, eval_fn, log,
               cplan, tier_of_client, tier_up, tier_compute, dyn, dyn_rng,
-              policy):
+              policy, registry, tracer, profile):
     mesh = mesh_lib.resolve_mesh(grid.mesh)
     constrain_flat = shard_lib.flat_constrainer(mesh) if mesh else None
     constrain_batch = shard_lib.cohort_constrainer(mesh) if mesh else None
@@ -297,17 +361,15 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                                          constrain_flat_fn=constrain_flat,
                                          constrain_batch_fn=constrain_batch,
                                          plan=cplan)
-    round_fn = jax.jit(round_fn, donate_argnums=(0, 1))
+    round_fn = prof_lib.annotate(jax.jit(round_fn, donate_argnums=(0, 1)),
+                                 "grid/round_fn", enabled=profile)
     sstate = sopt.init(y)
     N = num_clients(dataset)
     C = rc.clients_per_round
     m = min(N, max(C, int(math.ceil(C * grid.over_selection))))
 
     history: List[Dict[str, float]] = []
-    stats = {"dispatches": 0, "uploads": 0, "offline": 0, "dropouts": 0,
-             "deadline_drops": 0, "excess": 0}
-    rtt_sum: Counter = Counter()
-    rtt_n: Counter = Counter()
+    mc = registry.counter
     vt = 0.0
     t0 = None
     for r in range(rounds):
@@ -325,7 +387,8 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         plan = sched_lib.plan_sync_round(
             fleet, cids, down_bytes, cohort_up, cohort_comp, C, dev_rng,
             deadline=grid.straggler_deadline, dynamics=dyn,
-            dyn_rng=dyn_rng, now=vt)
+            dyn_rng=dyn_rng, now=vt, tracer=tracer,
+            tiers=tiers_now[cids] if cplan is not None else None)
         # the C slots the compiled round engine sees: participants in
         # arrival order, padded (weight 0) with the remaining cohort in
         # dispatch order when drops leave the round short
@@ -349,13 +412,14 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         args = (y, sstate, frozen, batch, jnp.asarray(w))
         if tiered:
             args += (jnp.asarray(tiers_now[sel], jnp.int32),)
-        y, sstate, metrics = round_fn(*args,
-                                      jax.random.key(seed * 100_003 + r))
+        y, sstate, rmetrics = round_fn(*args,
+                                       jax.random.key(seed * 100_003 + r))
         if r == 0:
             jax.block_until_ready(y)
             t0 = time.time()  # exclude compile from the per-round timing
 
-        vt += plan.round_seconds
+        vt0, vt = vt, vt + plan.round_seconds
+        registry.histogram("round_seconds").observe(plan.round_seconds)
         n_dispatched = int(np.sum(plan.dispatched))
         n_uploads = n_dispatched - plan.dropouts
         # observed round trips flow back to the policy (adaptive
@@ -363,10 +427,11 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         for i in np.nonzero(plan.completed)[0]:
             rtt = float(plan.arrival[i])
             policy.observe(int(plan.cids[i]), rtt)
+            registry.histogram("upload_rtt").observe(rtt)
             if cplan is not None:
                 t_idx = int(tiers_now[plan.cids[i]])
-                rtt_sum[t_idx] += rtt
-                rtt_n[t_idx] += 1
+                mc("tier_rtt_sum").inc(rtt, label=t_idx)
+                mc("tier_rtt_n").inc(label=t_idx)
         if cplan is not None:
             # bill per tier: dispatches pay the (tier-invariant)
             # downlink, uploads pay the tier-sliced uplink
@@ -379,24 +444,28 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                 if nd or nu:
                     report.add_tier_measured(
                         t.name, down_bytes * nd, int(tier_up[t.index]) * nu,
-                        transfers=nd, uploads=nu)
+                        transfers=nd, uploads=nu, now=vt)
         else:
             report.add_measured(down_bytes * n_dispatched,
                                 up_bytes * n_uploads,
                                 transfers=n_dispatched)
-        stats["dispatches"] += n_dispatched
-        stats["uploads"] += n_uploads
-        stats["offline"] += plan.offline
-        stats["dropouts"] += plan.dropouts
-        stats["deadline_drops"] += plan.deadline_drops
-        stats["excess"] += plan.excess
+        mc("dispatches").inc(n_dispatched)
+        mc("uploads").inc(n_uploads)
+        mc("offline").inc(plan.offline)
+        mc("dropouts").inc(plan.dropouts)
+        mc("deadline_drops").inc(plan.deadline_drops)
+        mc("excess").inc(plan.excess)
+        mc("retries").inc(plan.retries)
 
-        rec = {"round": r, "loss": float(metrics["loss"])}
+        rec = {"round": r, "loss": float(rmetrics["loss"])}
         if eval_fn and eval_every and (r + 1) % eval_every == 0:
             rec.update(eval_fn(part.merge(y, frozen)))
         rec["virtual_seconds"] = vt
         rec["participants"] = float(len(kept_cids))
         history.append(rec)
+        tracer.span("round", vt0, plan.round_seconds, round=r,
+                    participants=float(len(kept_cids)), cohort=int(m),
+                    loss=rec["loss"])
         policy.end_round(r)
         if log and (r % max(1, rounds // 10) == 0):
             print(f"  round {r}: " + " ".join(
@@ -405,12 +474,17 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
     spr = (time.time() - t0) / max(rounds - 1, 1) if t0 else float("nan")
     final_tiers = (policy.current_tiers() if cplan is not None
                    else tier_of_client)
+    if tracer.enabled:
+        tracer.flush_outputs()
     return GridResult(y=y, frozen=frozen, history=history, comm=report,
                       seconds_per_round=spr, virtual_seconds=vt,
-                      fleet=fleet, mode="sync", scheduler_stats=stats,
+                      fleet=fleet, mode="sync",
+                      scheduler_stats=_stats_view(registry),
                       tier_stats=_tier_stats(report, cplan, final_tiers,
-                                             tier_compute, rtt_sum, rtt_n),
-                      plan=cplan, policy=policy, dynamics=dyn)
+                                             registry),
+                      plan=cplan, policy=policy, dynamics=dyn,
+                      metrics=registry,
+                      telemetry=tracer if tracer.enabled else None)
 
 
 # ---------------------------------------------------------------------------
@@ -435,7 +509,7 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                fleet, report, down_bytes, up_bytes, compute_seconds,
                data_rng, dev_rng, seed, data_kind, eval_every, eval_fn, log,
                cplan, tier_of_client, tier_up, tier_compute, dyn, dyn_rng,
-               policy):
+               policy, registry, tracer, profile):
     if server_opt is None:
         server_opt = fedpt.resolve_server_opt(rc)
     # trivial plans keep the pre-plan engine (lane-exact acceptance);
@@ -453,7 +527,7 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
             clip_norm=rc.dp_clip_norm,
             noise_multiplier=rc.dp_noise_multiplier,
             goal_count=grid.goal_count)
-        accountant = dp_lib.FlushAccountant(flush_dp)
+        accountant = dp_lib.FlushAccountant(flush_dp, tracer=tracer)
     mesh = mesh_lib.resolve_mesh(grid.mesh)
     constrain_flat = shard_lib.flat_constrainer(mesh) if mesh else None
     lane = grid.goal_count if grid.lanes is None else int(grid.lanes)
@@ -468,6 +542,10 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                 tier=None if k is None else cplan.tiers[k],
                 plan=None if k is None else cplan))
             for k in tier_keys}
+        # jax.profiler annotations around the jitted hot paths so a
+        # wall-time profile lines up with the virtual-time spans
+        lane_steps = prof_lib.annotate_map(lane_steps, "grid/lane_step",
+                                           enabled=profile)
     else:
         client_steps = {
             k: jax.jit(fedpt.make_client_step(
@@ -475,9 +553,14 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                 tier=None if k is None else cplan.tiers[k],
                 plan=None if k is None else cplan))
             for k in tier_keys}
-    apply_fn = jax.jit(fedpt.make_buffered_apply(
-        server_opt, flush_dp=flush_dp, constrain_flat_fn=constrain_flat,
-        plan=cplan), donate_argnums=(0, 1))
+        client_steps = prof_lib.annotate_map(client_steps,
+                                             "grid/client_step",
+                                             enabled=profile)
+    apply_fn = prof_lib.annotate(
+        jax.jit(fedpt.make_buffered_apply(
+            server_opt, flush_dp=flush_dp, constrain_flat_fn=constrain_flat,
+            plan=cplan), donate_argnums=(0, 1)),
+        "grid/server_apply", enabled=profile)
     staleness_fn = fedpt.get_staleness_fn(grid.staleness, **grid.staleness_kw)
     if flush_dp is not None:
         # the per-flush sensitivity bound (clip_norm / goal_count)
@@ -593,7 +676,8 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
             # that flush's sensitivity by the observed multiplicity
             counts = Counter(e.work["cid"] for e in entries)
             accountant.record_flush(len(entries),
-                                    multiplicity=max(counts.values()))
+                                    multiplicity=max(counts.values()),
+                                    now=now)
         y_new, ss, m = apply_fn(*args)
         state["y"], state["sstate"] = y_new, ss
         # ONE host sync per flush for the buffered losses
@@ -617,7 +701,8 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         tier_of=tier_of if cplan is not None else None,
         compute_of=((lambda cid: float(tier_compute[tier_of(cid)]))
                     if cplan is not None else None),
-        dynamics=dyn, dyn_rng=dyn_rng, observe=policy.observe)
+        dynamics=dyn, dyn_rng=dyn_rng, observe=policy.observe,
+        tracer=tracer, metrics=registry)
     t_wall = time.time()
     history = sched.run(rounds, deadline=grid.async_deadline)
     spr = (time.time() - t_wall) / max(rounds, 1)
@@ -626,6 +711,7 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
             print(f"  update {rec['round']}: " + " ".join(
                 f"{k}={v:.4f}" for k, v in rec.items() if k != "round"))
 
+    vt = history[-1]["virtual_seconds"] if history else 0.0
     if cplan is not None:
         for t in cplan.tiers:
             nd = sched.tier_dispatches.get(t.index, 0)
@@ -633,24 +719,22 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                 report.add_tier_measured(
                     t.name, down_bytes * nd,
                     sched.tier_up_bytes.get(t.index, 0), transfers=nd,
-                    uploads=sched.tier_uploads.get(t.index, 0))
+                    uploads=sched.tier_uploads.get(t.index, 0), now=vt)
     else:
         report.add_measured(down_bytes * sched.dispatches,
                             sched.up_bytes_total,
                             transfers=sched.dispatches)
-    stats = {"dispatches": sched.dispatches, "uploads": sched.completions,
-             "offline": 0, "dropouts": sched.dropouts,
-             "deadline_drops": 0, "retries": sched.retries}
-    vt = history[-1]["virtual_seconds"] if history else 0.0
     final_tiers = (policy.current_tiers() if cplan is not None
                    else tier_of_client)
+    if tracer.enabled:
+        tracer.flush_outputs()
     return GridResult(y=state["y"], frozen=frozen, history=history,
                       comm=report, seconds_per_round=spr,
                       virtual_seconds=vt, fleet=fleet, mode="async",
-                      scheduler_stats=stats,
+                      scheduler_stats=_stats_view(registry),
                       dp=accountant.summary() if accountant else None,
                       tier_stats=_tier_stats(report, cplan, final_tiers,
-                                             tier_compute,
-                                             sched.tier_rtt_sum,
-                                             sched.tier_uploads),
-                      plan=cplan, policy=policy, dynamics=dyn)
+                                             registry),
+                      plan=cplan, policy=policy, dynamics=dyn,
+                      metrics=registry,
+                      telemetry=tracer if tracer.enabled else None)

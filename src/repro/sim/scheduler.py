@@ -25,11 +25,12 @@ import dataclasses
 import heapq
 import itertools
 import math
-from collections import Counter
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import metrics as metrics_lib
+from repro.obs import trace as trace_lib
 from repro.sim import devices as dev_lib
 
 
@@ -83,6 +84,10 @@ class SyncRoundPlan:
     dropouts: int                 # dropped mid-round after dispatch
     deadline_drops: int           # upload arrives past the deadline
     excess: int                   # on time, but the quota was already filled
+    # dark-window re-polls: 1 when nobody dispatched and the deadline-less
+    # server advanced the clock by the redispatch backoff (the sync
+    # analogue of the async engine's parked-dispatch retries)
+    retries: int = 0
 
     def participant_cids(self) -> np.ndarray:
         """Participants in arrival order (dispatch order on ties)."""
@@ -95,7 +100,9 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
                     clients_needed: int, rng: np.random.Generator,
                     deadline: float = math.inf, dynamics=None,
                     dyn_rng: Optional[np.random.Generator] = None,
-                    now: float = 0.0) -> SyncRoundPlan:
+                    now: float = 0.0,
+                    tracer=trace_lib.NULL_TRACER,
+                    tiers=None) -> SyncRoundPlan:
     """Simulate one synchronous round over the cohort `cids` (possibly
     over-selected: len(cids) >= clients_needed) and decide who counts.
 
@@ -111,7 +118,14 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
     availability, and transfer times come from each client's link model
     with per-transfer jitter drawn from ``dyn_rng`` — a child stream
     independent of ``rng``, whose fixed-count availability/dropout
-    draws above stay byte-identical whether dynamics are on or off."""
+    draws above stay byte-identical whether dynamics are on or off.
+
+    ``tracer`` (an ``obs/trace.Tracer``) records one ``dispatch`` span
+    per dispatched member (virtual start ``now``, duration = its round
+    trip; dropouts get a null duration — they never finish) and one
+    ``upload`` instant per completed upload; ``tiers`` optionally
+    supplies the per-member tier indices for those payloads. The
+    default NULL_TRACER emits nothing and costs nothing."""
     cids = np.asarray(cids, np.int64)
     m = len(cids)
     up_arr = np.broadcast_to(np.asarray(up_bytes, np.int64), (m,))
@@ -164,6 +178,7 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
         participant[ev.payload["idx"]] = True
         taken += 1
         round_seconds = ev.time
+    retried = 0
     if taken < clients_needed and math.isfinite(deadline):
         round_seconds = deadline           # server waited the round out
     elif taken == 0 and dynamics is not None:
@@ -173,7 +188,27 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
         # re-polls after the redispatch backoff (the async engine's
         # retry semantics).
         round_seconds = dynamics.redispatch_backoff
+        retried = 1
     completed = will_complete & (arrival <= deadline)
+    if tracer.enabled:
+        for i in range(m):
+            if not dispatched[i]:
+                continue
+            dur = float(arrival[i]) if math.isfinite(arrival[i]) else None
+            tracer.span("dispatch", now, dur, cid=int(cids[i]),
+                        tier=None if tiers is None else int(tiers[i]),
+                        down_bytes=int(down_bytes),
+                        up_bytes=int(up_arr[i]),
+                        outcome="ok" if will_complete[i] else "dropout")
+            if completed[i]:
+                tracer.instant(
+                    "upload", now + float(arrival[i]), cid=int(cids[i]),
+                    tier=None if tiers is None else int(tiers[i]),
+                    up_bytes=int(up_arr[i]), rtt=float(arrival[i]),
+                    participant=bool(participant[i]))
+        if retried:
+            tracer.instant("retry", now,
+                           backoff=float(dynamics.redispatch_backoff))
     return SyncRoundPlan(
         cids=cids, dispatched=dispatched, completed=completed,
         participant=participant, arrival=arrival,
@@ -181,7 +216,7 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
         offline=int(np.sum(~dispatched)),
         dropouts=int(np.sum(dispatched & ~will_complete)),
         deadline_drops=int(np.sum(will_complete & (arrival > deadline))),
-        excess=int(np.sum(completed & ~participant)))
+        excess=int(np.sum(completed & ~participant)), retries=retried)
 
 
 # ---------------------------------------------------------------------------
@@ -242,6 +277,16 @@ class BufferedAsyncScheduler:
     ``observe(cid, rtt_seconds)`` (optional) is called for every upload
     the server receives with that transfer's realized round-trip time —
     the feedback loop ``sim/selection.py`` policies adapt on.
+
+    ``tracer`` (an ``obs/trace.Tracer``) records every dispatch as a
+    virtual-time span (start = dispatch time, duration = realized round
+    trip; mid-round dropouts end at their failure time), every arriving
+    upload and parked-dispatch retry as instants, and every buffer
+    flush as an instant carrying its fill/staleness stats. The default
+    NULL_TRACER emits nothing. ``metrics`` (an
+    ``obs/metrics.MetricsRegistry``) backs ALL of the scheduler's
+    counters — the legacy attributes (``dispatches``, ``tier_uploads``,
+    ...) are read-only views over it.
     """
 
     def __init__(self, fleet: dev_lib.Fleet, concurrency: int,
@@ -253,7 +298,9 @@ class BufferedAsyncScheduler:
                  compute_of: Optional[Callable[[int], float]] = None,
                  dynamics=None,
                  dyn_rng: Optional[np.random.Generator] = None,
-                 observe: Optional[Callable[[int, float], None]] = None):
+                 observe: Optional[Callable[[int, float], None]] = None,
+                 tracer=trace_lib.NULL_TRACER,
+                 metrics: Optional[metrics_lib.MetricsRegistry] = None):
         if goal_count < 1:
             raise ValueError("goal_count must be >= 1")
         self.fleet = fleet
@@ -271,18 +318,50 @@ class BufferedAsyncScheduler:
         self.dynamics = dynamics
         self.dyn_rng = dyn_rng
         self.observe = observe
-        # counters (read by the grid for the comm ledger)
-        self.dispatches = 0
-        self.dropouts = 0
-        self.completions = 0
-        self.retries = 0
+        self.tracer = tracer
+        # ALL counters live in the metrics registry (read by the grid
+        # for the comm ledger and GridResult.scheduler_stats)
+        self.metrics = metrics if metrics is not None \
+            else metrics_lib.MetricsRegistry()
         self._consecutive_retries = 0
-        self.up_bytes_total = 0
         self.version = 0
-        self.tier_dispatches: Counter = Counter()
-        self.tier_uploads: Counter = Counter()
-        self.tier_up_bytes: Counter = Counter()
-        self.tier_rtt_sum: Counter = Counter()   # realized RTT per upload
+
+    # legacy counter attributes, now read-only views over the registry
+    @property
+    def dispatches(self) -> int:
+        return int(self.metrics.counter("dispatches").value)
+
+    @property
+    def dropouts(self) -> int:
+        return int(self.metrics.counter("dropouts").value)
+
+    @property
+    def completions(self) -> int:
+        return int(self.metrics.counter("uploads").value)
+
+    @property
+    def retries(self) -> int:
+        return int(self.metrics.counter("retries").value)
+
+    @property
+    def up_bytes_total(self) -> int:
+        return int(self.metrics.counter("up_bytes").value)
+
+    @property
+    def tier_dispatches(self) -> Dict[int, int]:
+        return self.metrics.counter("tier_dispatches").labels
+
+    @property
+    def tier_uploads(self) -> Dict[int, int]:
+        return self.metrics.counter("tier_uploads").labels
+
+    @property
+    def tier_up_bytes(self) -> Dict[int, int]:
+        return self.metrics.counter("tier_up_bytes").labels
+
+    @property
+    def tier_rtt_sum(self) -> Dict[int, float]:
+        return self.metrics.counter("tier_rtt_sum").labels
 
     def _dispatch(self, q: EventQueue, now: float) -> None:
         # redraw until the availability check passes (bounded, so a fleet
@@ -299,18 +378,21 @@ class BufferedAsyncScheduler:
             if self.dynamics is not None:
                 # the trace has (essentially) everyone offline right now:
                 # park this dispatch slot and retry when the clock moves
-                self.retries += 1
+                self.metrics.counter("retries").inc()
                 self._consecutive_retries += 1
                 if self._consecutive_retries > 100_000:
                     raise RuntimeError(
                         "availability trace kept the whole fleet offline "
                         "for 100k consecutive redispatch backoffs — set a "
                         "deadline or fix the trace")
+                self.tracer.instant(
+                    "retry", now,
+                    backoff=float(self.dynamics.redispatch_backoff))
                 q.push(now + self.dynamics.redispatch_backoff, "retry")
                 return
             raise RuntimeError("no available client after 1000 draws")
         self._consecutive_retries = 0
-        self.dispatches += 1
+        self.metrics.counter("dispatches").inc()
         comp = (self.compute_of(cid) if self.compute_of is not None
                 else self.compute_seconds)
         if self.dynamics is not None:
@@ -320,7 +402,7 @@ class BufferedAsyncScheduler:
             lm = self.dynamics.link_for(cid)
         tier = int(self.tier_of(cid)) if self.tier_of is not None else None
         if tier is not None:
-            self.tier_dispatches[tier] += 1
+            self.metrics.counter("tier_dispatches").inc(label=tier)
         if self.rng.random() < p.dropout:
             # dies after download + local work, before upload
             if self.dynamics is None:
@@ -330,6 +412,9 @@ class BufferedAsyncScheduler:
                 t = now + (lm.transfer_seconds(self.down_bytes,
                                                p.downlink_bps, z_down)
                            + comp * p.compute_multiplier)
+            self.tracer.span("dispatch", now, t - now, cid=cid, tier=tier,
+                             down_bytes=self.down_bytes,
+                             version=self.version, outcome="dropout")
             q.push(t, "failed", cid=cid, tier=tier)
             return
         work = self.run_client(cid, self.version)
@@ -340,6 +425,10 @@ class BufferedAsyncScheduler:
             rtt = self.dynamics.round_trip_seconds(
                 p, self.down_bytes, int(work["up_bytes"]), comp, cid,
                 z_down, z_up)
+        self.tracer.span("dispatch", now, rtt, cid=cid, tier=tier,
+                         down_bytes=self.down_bytes,
+                         up_bytes=int(work["up_bytes"]),
+                         version=self.version, outcome="ok")
         q.push(now + rtt, "complete", cid=cid, version=self.version,
                work=work, tier=tier, rtt=rtt)
 
@@ -356,6 +445,10 @@ class BufferedAsyncScheduler:
                "staleness_max": float(stale.max())}
         rec.update(metrics or {})
         records.append(rec)
+        self.tracer.instant("flush", now, version=self.version,
+                            buffer_fill=float(len(buffer)),
+                            staleness_mean=float(stale.mean()),
+                            staleness_max=float(stale.max()))
         self.version += 1
 
     def run(self, num_updates: int,
@@ -390,19 +483,29 @@ class BufferedAsyncScheduler:
                 self._dispatch(q, ev.time)
                 continue
             if ev.kind == "failed":
-                self.dropouts += 1
+                self.metrics.counter("dropouts").inc()
                 self._dispatch(q, ev.time)
                 continue
             work = ev.payload["work"]
             s = self.version - ev.payload["version"]
-            self.completions += 1
-            self.up_bytes_total += int(work["up_bytes"])
+            self.metrics.counter("uploads").inc()
+            self.metrics.counter("up_bytes").inc(int(work["up_bytes"]))
             if self.observe is not None:
                 self.observe(int(ev.payload["cid"]), ev.payload["rtt"])
+            self.tracer.instant("upload", ev.time,
+                                cid=int(ev.payload["cid"]),
+                                tier=ev.payload.get("tier"),
+                                up_bytes=int(work["up_bytes"]),
+                                staleness=int(s),
+                                rtt=float(ev.payload["rtt"]))
             if ev.payload.get("tier") is not None:
-                self.tier_uploads[ev.payload["tier"]] += 1
-                self.tier_up_bytes[ev.payload["tier"]] += int(work["up_bytes"])
-                self.tier_rtt_sum[ev.payload["tier"]] += ev.payload["rtt"]
+                tier = ev.payload["tier"]
+                self.metrics.counter("tier_uploads").inc(label=tier)
+                self.metrics.counter("tier_up_bytes").inc(
+                    int(work["up_bytes"]), label=tier)
+                self.metrics.counter("tier_rtt_sum").inc(
+                    float(ev.payload["rtt"]), label=tier)
+                self.metrics.counter("tier_rtt_n").inc(label=tier)
             buffer.append(BufferEntry(
                 work=work,
                 weight=float(self.staleness_fn(s)) * float(work["weight"]),
