@@ -30,25 +30,44 @@ object per line; validate with ``python -m repro.obs.schema``).
 
     PYTHONPATH=src python examples/async_heterogeneous.py \
         --trace trace.json --trace-jsonl trace.jsonl
+
+``--chaos`` turns the fleet hostile (sim/faults.py "chaos" preset:
+client crashes, truncated uploads, NaN / bit-flip payload corruption,
+duplicate deliveries) and runs it twice: once unscreened — the corrupted
+deltas NaN-poison the server model within a few flushes — and once with
+the delta-quarantine screen (core/sanitize.py) and periodic grid-state
+checkpoints on, which keeps training finite. It then kills the server
+mid-run at a virtual time T and resumes from the latest snapshot
+(checkpoint/grid_state.py), asserting the resumed history matches the
+uninterrupted run exactly.
+
+    PYTHONPATH=src python examples/async_heterogeneous.py --chaos
 """
 import argparse
 import dataclasses
+import tempfile
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import fedpt
 from repro.core.plan import TrainPlan
 from repro.data import synthetic as syn
 from repro.models import paper_models as pm
+from repro.nn import basic
 from repro.obs.trace import TelemetryConfig
 from repro.sim import GridConfig, run_grid
+from repro.sim import faults as faults_lib
 
 MB = 1024.0 * 1024.0
 
 parser = argparse.ArgumentParser(description=__doc__)
 parser.add_argument("--tiers", action="store_true",
                     help="mixed-tier trainability plan vs all-full")
+parser.add_argument("--chaos", action="store_true",
+                    help="fault-injected fleet: unscreened vs quarantined, "
+                         "plus a kill/checkpoint/resume demo")
 parser.add_argument("--rounds", type=int, default=12,
                     help="server updates per run (CI smoke uses fewer)")
 parser.add_argument("--trace", default=None, metavar="JSON",
@@ -82,7 +101,20 @@ TIERS = TrainPlan.of({
     "lite": (r"^conv1/", r"^conv2/"),
 })
 
-if args.tiers:
+CKPT_DIR = None
+if args.chaos:
+    CKPT_DIR = tempfile.mkdtemp(prefix="chaos_ckpt_")
+    ASYNC = dict(mode="async", fleet="pareto-mobile", concurrency=12,
+                 goal_count=6, staleness="polynomial")
+    RUNS = {
+        "async unscreened": GridConfig(**ASYNC,
+                                       faults={"corrupt_nan": 0.5}),
+        "async chaos + quarantine": GridConfig(**ASYNC, faults="chaos",
+                                               sanitize=True,
+                                               checkpoint_every=2,
+                                               checkpoint_dir=CKPT_DIR),
+    }
+elif args.tiers:
     RUNS = {
         "async all-full": GridConfig(mode="async", fleet="pareto-mobile",
                                      concurrency=12, goal_count=6,
@@ -143,6 +175,9 @@ for name, gc in RUNS.items():
                   "(open in ui.perfetto.dev)")
         if args.trace_jsonl:
             print(f"  wrote event stream -> {args.trace_jsonl}")
+    if res.faults is not None:
+        print("  faults: " + " ".join(
+            f"{k}={v}" for k, v in res.faults.items()))
     if res.tier_stats:
         print("  tier      clients  dispatches  uploads      up KiB  "
               "KiB/upload")
@@ -159,3 +194,51 @@ if args.tiers:
           f"{full / MB:.2f} MB "
           f"({(1.0 - mixed / max(full, 1)) * 100.0:.0f}% less)")
     assert mixed < full, "tiered fleet must bill fewer uplink bytes"
+
+if args.chaos:
+    def _flat(y):
+        return np.concatenate([np.asarray(v).ravel()
+                               for _, v in basic.flatten_params(y)])
+
+    poisoned = results["async unscreened"]
+    screened = results["async chaos + quarantine"]
+    assert not np.all(np.isfinite(_flat(poisoned.y))), \
+        "unscreened corrupt uploads should NaN-poison the model"
+    assert np.all(np.isfinite(_flat(screened.y))), \
+        "the quarantine screen must keep the model finite"
+    assert screened.faults["quarantined"] > 0
+    print(f"\nunscreened model is NaN-poisoned; quarantine zeroed "
+          f"{screened.faults['quarantined']} corrupt rows and kept "
+          f"training finite (final loss "
+          f"{screened.history[-1]['loss']:.3f})")
+
+    # kill the server mid-run, restore the latest snapshot, continue:
+    # the resumed run must reproduce the uninterrupted one exactly
+    h = screened.history
+    T = 0.5 * (h[-2]["virtual_seconds"] + h[-1]["virtual_seconds"])
+    killed_gc = dataclasses.replace(
+        RUNS["async chaos + quarantine"],
+        faults=dataclasses.replace(faults_lib.resolve_faults("chaos"),
+                                   server_kill_at=T),
+        telemetry=None)
+    try:
+        run_grid(lambda s: pm.init_emnist_cnn(s), loss_fn, ds, rc,
+                 rounds=args.rounds, grid=killed_gc,
+                 freeze_spec=pm.EMNIST_FREEZE, seed=0)
+        raise AssertionError("server_kill_at should have fired")
+    except faults_lib.ServerKilled as e:
+        print(f"server killed at t={e.at:,.0f}s after {e.applied} "
+              f"updates; resuming from {e.checkpoint}")
+        resumed_gc = dataclasses.replace(
+            RUNS["async chaos + quarantine"], telemetry=None,
+            resume_from=e.checkpoint)
+        resumed = run_grid(lambda s: pm.init_emnist_cnn(s), loss_fn, ds, rc,
+                           rounds=args.rounds, grid=resumed_gc,
+                           freeze_spec=pm.EMNIST_FREEZE, seed=0)
+    assert [r["loss"] for r in resumed.history] == \
+        [r["loss"] for r in screened.history], \
+        "resumed history must match the uninterrupted run"
+    assert np.array_equal(_flat(resumed.y), _flat(screened.y)), \
+        "resumed model must match the uninterrupted run bitwise"
+    print(f"resume OK: {len(resumed.history)} updates, history and final "
+          "model match the uninterrupted run exactly")

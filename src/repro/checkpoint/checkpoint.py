@@ -21,8 +21,19 @@ def _flat_np(tree):
     return {k: np.asarray(v) for k, v in basic.flatten_params(tree)}
 
 
+def with_suffix(path: str) -> str:
+    """Normalize a checkpoint path to carry the ``.npz`` suffix.
+
+    ``np.savez`` silently appends ``.npz`` when the path lacks it, so
+    ``save(p)`` followed by ``load(p)`` on the same suffix-less string
+    used to raise FileNotFoundError. Both ends normalize through this
+    so any spelling round-trips."""
+    return path if path.endswith(".npz") else path + ".npz"
+
+
 def save(path: str, trainable, seed: int, freeze_spec, server_state=None,
          round_num: int = 0, extra: Optional[Dict[str, Any]] = None):
+    path = with_suffix(path)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     arrays = {f"y/{k}": v for k, v in _flat_np(trainable).items()}
     if server_state is not None:
@@ -40,7 +51,7 @@ def save(path: str, trainable, seed: int, freeze_spec, server_state=None,
 
 def load(path: str, server_state_template=None):
     """Returns (trainable, seed, freeze_spec, server_state, round, extra)."""
-    with np.load(path, allow_pickle=False) as z:
+    with np.load(with_suffix(path), allow_pickle=False) as z:
         meta = json.loads(str(z["__meta__"]))
         flat = {k[2:]: z[k] for k in z.files if k.startswith("y/")}
         trainable = basic.unflatten_params(flat)

@@ -130,6 +130,39 @@ class FlushAccountant:
                 sigma=self.cfg.sigma, epsilon=self.epsilon(delta),
                 delta=delta, padded=bool(n_real < self.cfg.goal_count))
 
+    def state_dict(self) -> dict:
+        """Restorable ledger state (the config is NOT serialized — a
+        resumed run rebuilds it from GridConfig and :meth:`load_state`
+        cross-checks the calibration)."""
+        return {"flushes": self.flushes,
+                "padded_flushes": self.padded_flushes,
+                "max_multiplicity": self.max_multiplicity,
+                "sum_m2": self._sum_m2,
+                "sigma": self.cfg.sigma,
+                "noise_multiplier": self.cfg.noise_multiplier,
+                "goal_count": self.cfg.goal_count}
+
+    def load_state(self, state: dict) -> None:
+        """Restore the composition ledger in place. Raises if the saved
+        calibration (sigma / z / goal_count) does not match this
+        accountant's config — resuming under a different mechanism would
+        silently misprice every pre-restore flush."""
+        for field, have in (("sigma", self.cfg.sigma),
+                            ("noise_multiplier", self.cfg.noise_multiplier),
+                            ("goal_count", self.cfg.goal_count)):
+            want = state.get(field)
+            if want is not None and not math.isclose(
+                    float(want), float(have),
+                    rel_tol=1e-12, abs_tol=0.0):
+                raise ValueError(
+                    f"checkpointed DP calibration {field}={want!r} does "
+                    f"not match this run's {field}={have!r} — resume "
+                    "with the same dp_* GridConfig settings")
+        self.flushes = int(state["flushes"])
+        self.padded_flushes = int(state["padded_flushes"])
+        self.max_multiplicity = int(state["max_multiplicity"])
+        self._sum_m2 = float(state["sum_m2"])
+
     def epsilon(self, delta: float = 1e-5) -> float:
         z = self.cfg.noise_multiplier
         if z <= 0:

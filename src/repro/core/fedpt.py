@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 import repro.core.partition as part
 from repro.core import flat as flat_lib
+from repro.core import sanitize as sanitize_lib
 from repro.optim import optimizers as opt_lib
 
 
@@ -121,7 +122,7 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
                   donate: bool = True, constrain_fn: Optional[Callable] = None,
                   constrain_flat_fn: Optional[Callable] = None,
                   constrain_batch_fn: Optional[Callable] = None,
-                  plan=None):
+                  plan=None, sanitize=None):
     """Builds round_step(y, server_state, frozen, batch, weights, rng) —
     or, under a non-trivial trainability ``plan``,
     round_step(y, server_state, frozen, batch, weights, tiers, rng).
@@ -156,6 +157,14 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
     is one op over (C, size) instead of a tree_map per leaf. With DP
     and quantization off the result is bit-for-bit the old tree path
     (same dot_general over the client axis).
+
+    ``sanitize`` (a ``core.sanitize.SanitizeConfig``) screens the (C,
+    size) delta buffer FIRST — before quantization and clipping, since a
+    NaN norm would poison the clip weights too: quarantined rows
+    (non-finite / norm-outlier) are zeroed with zero weight, the
+    quarantine masks land in the returned metrics, and under DP the
+    fixed denominator is untouched (sigma stays calibrated). With clean
+    data the screened aggregate is bit-identical to ``sanitize=None``.
     """
     client_opt = opt_lib.get_optimizer(rc.client_opt, rc.client_lr)
     if server_opt is None:
@@ -201,6 +210,13 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
                 lambda cb: flat_client(y, cb, None))(batch)
         if constrain_flat_fn is not None:
             deltas = constrain_flat_fn(deltas, clients=True)
+        qinfo = None
+        if sanitize is not None:
+            # quarantine screen: FIRST, before quantize/clip (a NaN row
+            # norm would poison the clip weights); zeroed rows and
+            # weights fall out of every aggregation below
+            deltas, weights, qinfo = sanitize_lib.screen_rows(
+                deltas, weights, sanitize, layout.align)
 
         # --- aggregation weights ----------------------------------------
         if rc.uniform_weights or rc.dp_clip_norm > 0:
@@ -260,6 +276,10 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
                            flat_lib.sumsq(flat_delta, layout.align))}
         if "update_norm" in metrics:
             out_metrics["update_norm"] = jnp.mean(metrics["update_norm"])
+        if qinfo is not None:
+            out_metrics["quarantine_nonfinite"] = qinfo["nonfinite"]
+            out_metrics["quarantine_outlier"] = qinfo["outlier"]
+            out_metrics["quarantine_norms"] = qinfo["norms"]
         return y_new, server_state, out_metrics
 
     if tiered:
@@ -407,7 +427,7 @@ def make_lane_step(loss_fn: Callable, rc: RoundConfig, lane: int,
 def make_buffered_apply(server_opt: opt_lib.Optimizer,
                         flush_dp=None,
                         constrain_flat_fn: Optional[Callable] = None,
-                        plan=None):
+                        plan=None, sanitize=None):
     """Server-side flush of an async buffer: apply(y, server_state,
     flat_deltas, weights[, rng]) with ``flat_deltas`` the (K, size) stack
     of flat client deltas and weights (K,) already including the
@@ -446,6 +466,15 @@ def make_buffered_apply(server_opt: opt_lib.Optimizer,
     "model": the weighted mean then reduces the sharded buffer in place
     (a cross-data-axis collective) — the K rows are never gathered onto
     one device.
+
+    ``sanitize`` (a ``core.sanitize.SanitizeConfig``) screens the (K,
+    size) buffer FIRST: quarantined rows (non-finite / norm-outlier) are
+    zeroed with zero weight — under ``flush_dp`` the FIXED goal_count
+    denominator is untouched, so a quarantined row degrades to exactly a
+    padding row and sigma / the epsilon ledger stay valid. The
+    quarantine masks ride back on the metrics dict for the grid to turn
+    into traced events. Clean buffers aggregate bit-identically to
+    ``sanitize=None``.
     """
 
     tiered = plan is not None and not plan.trivial
@@ -454,6 +483,10 @@ def make_buffered_apply(server_opt: opt_lib.Optimizer,
         layout = flat_lib.FlatLayout.of(y)
         if constrain_flat_fn is not None:
             flat_deltas = constrain_flat_fn(flat_deltas, clients=True)
+        qinfo = None
+        if sanitize is not None:
+            flat_deltas, weights, qinfo = sanitize_lib.screen_rows(
+                flat_deltas, weights, sanitize, layout.align)
         if tiered:
             bmask = jnp.asarray(plan.block_masks())[tier_ids]   # (K, NB)
             K = flat_deltas.shape[0]
@@ -483,7 +516,12 @@ def make_buffered_apply(server_opt: opt_lib.Optimizer,
         # does the same)
         norm = (opt_lib.tree_global_norm(delta) if noised
                 else jnp.sqrt(flat_lib.sumsq(flat_delta, layout.align)))
-        return y_new, server_state, {"delta_norm": norm}
+        out = {"delta_norm": norm}
+        if qinfo is not None:
+            out["quarantine_nonfinite"] = qinfo["nonfinite"]
+            out["quarantine_outlier"] = qinfo["outlier"]
+            out["quarantine_norms"] = qinfo["norms"]
+        return y_new, server_state, out
 
     if tiered:
         def apply_fn(y, server_state, flat_deltas, weights, tier_ids,

@@ -1,0 +1,126 @@
+"""Delta quarantine: screen the flat ``(K, size)`` buffer before it
+touches aggregation.
+
+DP clipping does **not** protect the server from corrupted uploads:
+``NaN * scale`` is still NaN, so one poisoned row nukes the weighted
+mean, the noise addition, and every server update after it. The screen
+runs as the *first* stage of both round engines (sync cohort step and
+async buffered apply), before quantization and clipping, and
+quarantines two classes of row:
+
+* **non-finite** — any NaN/±Inf element (the ``corrupt_nan`` fault, or
+  a genuinely diverged client);
+* **norm-outlier** — finite rows whose L2 norm exceeds
+  ``norm_mult`` x the median live-row norm (the ``corrupt_bitflip``
+  fault's signature: exponent-bit flips produce finite-but-astronomical
+  values that ``isfinite`` alone misses).
+
+Quarantined rows are zeroed *and* given zero weight — zero weight alone
+is not enough, since ``NaN * 0 = NaN`` inside the weighted mean. The
+fixed DP denominator is untouched: under per-flush DP the mean divides
+by ``goal_count`` regardless of how many rows survive, so sigma
+calibration and the ``FlushAccountant`` epsilon ledger stay valid — a
+quarantined row simply contributes the same zero signal as a padding
+row. Every quarantine emits a traced ``quarantine`` event at the call
+sites (grid / scheduler), driven by the masks this module returns.
+
+The screen is pure ``jnp`` and branch-free, so it jits into the
+existing single-pass server tail; with clean data it computes
+``where(False, ...)`` everywhere and the aggregate is bit-identical to
+the unscreened path (test-enforced).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+import jax.numpy as jnp
+
+from repro.core import flat as flat_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class SanitizeConfig:
+    """Quarantine screen knobs.
+
+    ``nonfinite`` toggles the NaN/Inf row mask. ``norm_mult`` sets the
+    outlier threshold as a multiple of the median norm over *live*
+    rows (weight > 0, finite, norm > 0 — padding rows never vote);
+    ``norm_mult <= 0`` disables the outlier screen."""
+
+    nonfinite: bool = True
+    norm_mult: float = 10.0
+
+    @property
+    def trivial(self) -> bool:
+        return not self.nonfinite and self.norm_mult <= 0
+
+
+def screen_rows(mat: jnp.ndarray, weights: jnp.ndarray, cfg: SanitizeConfig,
+                align: int = flat_lib.ALIGN
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Screen a flat ``(K, size)`` delta buffer.
+
+    Returns ``(clean_mat, clean_weights, info)`` where quarantined rows
+    are zeroed in ``clean_mat`` and ``clean_weights``, and ``info``
+    carries the ``nonfinite`` / ``outlier`` bool masks plus the
+    pre-screen row ``norms`` (0 where a row had non-finite elements) —
+    the call site turns these into traced events and counters."""
+    finite = jnp.isfinite(mat)
+    row_finite = jnp.all(finite, axis=1)
+    # compute norms on a NaN-free view so a poisoned row cannot poison
+    # the median either
+    safe = jnp.where(finite, mat, 0.0)
+    norms = jnp.sqrt(flat_lib.row_sumsq(safe, align))
+
+    if cfg.nonfinite:
+        nonfinite_q = ~row_finite
+    else:
+        nonfinite_q = jnp.zeros_like(row_finite)
+
+    if cfg.norm_mult > 0:
+        live = (weights > 0) & row_finite & (norms > 0)
+        med = jnp.nanmedian(jnp.where(live, norms, jnp.nan))
+        # no live rows -> med is NaN -> comparisons are False (no
+        # quarantine), which is the right degenerate answer
+        outlier_q = live & (norms > cfg.norm_mult * med)
+    else:
+        outlier_q = jnp.zeros_like(row_finite)
+
+    q = nonfinite_q | outlier_q
+    clean = jnp.where(q[:, None], 0.0, mat)
+    clean_w = jnp.where(q, 0.0, weights)
+    info = {"nonfinite": nonfinite_q, "outlier": outlier_q,
+            "norms": jnp.where(row_finite, norms, 0.0)}
+    return clean, clean_w, info
+
+
+def resolve_sanitize(
+        spec: Union[None, bool, str, dict, SanitizeConfig]
+) -> Optional[SanitizeConfig]:
+    """GridConfig.sanitize -> SanitizeConfig or None (screen off).
+
+    ``None``/``False``/``"off"`` and a trivial config resolve to
+    ``None`` — the round engines then build the exact unscreened
+    aggregation. ``True``/``"on"`` gives the default screen; a dict
+    builds a config from fields; a config passes through."""
+    if spec is None or spec is False:
+        return None
+    if spec is True:
+        cfg = SanitizeConfig()
+    elif isinstance(spec, str):
+        if spec == "off":
+            return None
+        if spec == "on":
+            cfg = SanitizeConfig()
+        else:
+            raise ValueError(f"unknown sanitize spec {spec!r}; options: "
+                             "'on', 'off'")
+    elif isinstance(spec, dict):
+        cfg = SanitizeConfig(**spec)
+    elif isinstance(spec, SanitizeConfig):
+        cfg = spec
+    else:
+        raise TypeError(f"sanitize must be None, bool, 'on'/'off', a dict or "
+                        f"a SanitizeConfig, got {type(spec).__name__}")
+    return None if cfg.trivial else cfg

@@ -4,10 +4,11 @@ The Perfetto export renders the grid's *virtual* clock as trace_event
 process/thread tracks, so a run opens directly in ``ui.perfetto.dev``
 (or ``chrome://tracing``):
 
-* process "server" — round spans and flush instants on one track,
-  ``dp_flush`` accounting instants on a "privacy" track, ``tier_upload``
-  wire-billing instants on a "wire" track, parked-dispatch ``retry``
-  instants alongside the rounds;
+* process "server" — round spans, flush and ``checkpoint`` instants on
+  one track, ``dp_flush`` accounting instants on a "privacy" track,
+  ``tier_upload`` wire-billing instants on a "wire" track, injected
+  ``fault`` firings and sanitize ``quarantine`` instants on a "faults"
+  track, parked-dispatch ``retry`` instants alongside the rounds;
 * process "clients" — one thread track per client id, carrying that
   client's ``dispatch`` round-trip spans and ``upload`` arrival
   instants.
@@ -25,9 +26,10 @@ from repro.obs import schema as schema_lib
 # server-process thread ids by event kind
 _SERVER_PID = 0
 _CLIENT_PID = 1
-_SERVER_TIDS = {"round": 0, "flush": 0, "retry": 0, "dp_flush": 1,
-                "tier_upload": 2}
-_SERVER_TID_NAMES = {0: "rounds", 1: "privacy", 2: "wire"}
+_SERVER_TIDS = {"round": 0, "flush": 0, "retry": 0, "checkpoint": 0,
+                "dp_flush": 1, "tier_upload": 2,
+                "fault": 3, "quarantine": 3}
+_SERVER_TID_NAMES = {0: "rounds", 1: "privacy", 2: "wire", 3: "faults"}
 
 
 def record_json(rec) -> Dict[str, Any]:

@@ -132,3 +132,42 @@ class MetricsRegistry:
             "histograms": {n: h.summary()
                            for n, h in sorted(self.histograms.items())},
         }
+
+    def state_dict(self) -> Dict[str, Any]:
+        """Exact restorable state — unlike :meth:`snapshot`, labels are
+        kept as ``[key, value]`` pairs so integer label keys (tier
+        indices) survive a JSON round trip, and histograms keep their
+        raw accumulators (min/max stored as ``None`` when empty)."""
+        return {
+            "counters": {
+                n: [c.value, [[k, v] for k, v in c.labels.items()]]
+                for n, c in self.counters.items()},
+            "gauges": {
+                n: [g.value, [[k, v] for k, v in g.labels.items()]]
+                for n, g in self.gauges.items()},
+            "histograms": {
+                n: [h.count, h.total,
+                    None if h.count == 0 else h.min,
+                    None if h.count == 0 else h.max]
+                for n, h in self.histograms.items()},
+        }
+
+    def load_state(self, state: Dict[str, Any]) -> None:
+        """Restore in place from a :meth:`state_dict` blob (metrics not
+        named in the blob are left untouched — a restored run registers
+        the same names anyway)."""
+        for n, (value, labels) in state.get("counters", {}).items():
+            c = self.counter(n)
+            c.value = value
+            c.labels = {k: v for k, v in labels}
+        for n, (value, labels) in state.get("gauges", {}).items():
+            g = self.gauge(n)
+            g.value = value
+            g.labels = {k: v for k, v in labels}
+        for n, (count, total, lo, hi) in state.get(
+                "histograms", {}).items():
+            h = self.histogram(n)
+            h.count = int(count)
+            h.total = float(total)
+            h.min = math.inf if lo is None else float(lo)
+            h.max = -math.inf if hi is None else float(hi)

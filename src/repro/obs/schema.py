@@ -21,7 +21,10 @@ import json
 import math
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+# schema v2 added the fault/quarantine/checkpoint kinds; v1 streams are
+# a strict subset and stay valid
+ACCEPTED_VERSIONS = (1, 2)
 
 _NUM = (int, float)
 _INT = (int,)
@@ -58,6 +61,22 @@ EVENT_SCHEMA: Dict[str, Tuple[Dict[str, tuple], Dict[str, tuple]]] = {
     "tier_upload": ({"tier_name": _STR, "down_bytes": _INT,
                      "up_bytes": _INT},
                     {"transfers": _INT, "uploads": _INT}),
+    # --- schema v2 ---
+    # one injected fault firing (sim/faults.py): crash_compute,
+    # truncate_upload (frac/up_bytes = what arrived), corrupt_nan,
+    # corrupt_bitflip, duplicate_upload (instant)
+    "fault": ({"fault": _STR},
+              {"cid": _INT, "tier": _INT, "frac": _NUM, "up_bytes": _INT}),
+    # one row quarantined by the sanitize screen (core/sanitize.py)
+    # before aggregation: cause is "nonfinite" or "norm-outlier"
+    # (instant at the flush/round that screened it)
+    "quarantine": ({"cause": _STR},
+                   {"cid": _INT, "tier": _INT, "norm": _NUM,
+                    "flush": _INT, "round": _INT}),
+    # one grid-state snapshot written (checkpoint/grid_state.py)
+    "checkpoint": ({"path": _STR},
+                   {"applied": _INT, "round": _INT, "mode": _STR,
+                    "buffer_fill": _NUM, "events_in_flight": _INT}),
 }
 
 KINDS = tuple(EVENT_SCHEMA)
@@ -78,8 +97,8 @@ def validate_record(rec: Any) -> List[str]:
         return [f"record is {type(rec).__name__}, not an object"]
     errs: List[str] = []
     v = rec.get("v")
-    if v != SCHEMA_VERSION:
-        errs.append(f"v={v!r} (expected {SCHEMA_VERSION})")
+    if v not in ACCEPTED_VERSIONS:
+        errs.append(f"v={v!r} (expected one of {ACCEPTED_VERSIONS})")
     kind = rec.get("kind")
     if kind not in EVENT_SCHEMA:
         return errs + [f"unknown kind {kind!r}"]

@@ -196,10 +196,20 @@ class DynamicsConfig:
     link: LinkModel = dataclasses.field(default_factory=LinkModel)
     availability: AvailabilityTrace = dataclasses.field(
         default_factory=AlwaysOn)
-    # async: virtual seconds to wait before re-trying dispatch when no
-    # sampled client passes the availability check (the trace has the
-    # fleet dark); sync rounds just close empty at their deadline
+    # async: base virtual seconds to wait before re-trying dispatch when
+    # no sampled client passes the availability check (the trace has the
+    # fleet dark); sync rounds just close empty at their deadline. The
+    # async wait escalates exponentially per consecutive retry
+    # (base * growth^k, capped, with deterministic jitter — see
+    # BoundDynamics.backoff_seconds); the sync dark-window re-poll uses
+    # the flat base.
     redispatch_backoff: float = 30.0
+    backoff_growth: float = 2.0           # escalation per consecutive retry
+    backoff_cap: float = 1_920.0          # ceiling on one backoff wait
+    # async: virtual-seconds budget for one *continuous* dark window —
+    # past it the scheduler raises instead of retrying forever (replaces
+    # the old raw 100k-consecutive-retry guard)
+    retry_budget: float = 1e7
 
     @property
     def trivial(self) -> bool:
@@ -211,7 +221,10 @@ class DynamicsConfig:
         return BoundDynamics(
             links=links,
             trace=self.availability.bind(len(fleet), rng),
-            redispatch_backoff=float(self.redispatch_backoff))
+            redispatch_backoff=float(self.redispatch_backoff),
+            backoff_growth=float(self.backoff_growth),
+            backoff_cap=float(self.backoff_cap),
+            retry_budget=float(self.retry_budget))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -223,6 +236,22 @@ class BoundDynamics:
     links: tuple
     trace: AvailabilityTrace
     redispatch_backoff: float
+    backoff_growth: float = 2.0
+    backoff_cap: float = 1_920.0
+    retry_budget: float = 1e7
+
+    # jitter the k-th consecutive backoff by a *deterministic* factor in
+    # [0.75, 1.25): the golden-ratio low-discrepancy sequence de-phases
+    # parked dispatch slots without consuming a single PRNG draw (the
+    # zero-draw hygiene rule — backoffs must not move any stream)
+    _JITTER_STEP = 0.6180339887498949
+
+    def backoff_seconds(self, k: int) -> float:
+        """Virtual seconds to park the k-th consecutive failed dispatch:
+        capped exponential escalation with deterministic jitter."""
+        base = min(self.redispatch_backoff * self.backoff_growth ** k,
+                   self.backoff_cap)
+        return base * (0.75 + 0.5 * ((k * self._JITTER_STEP) % 1.0))
 
     def link_for(self, cid: int) -> LinkModel:
         return self.links[int(cid)]

@@ -31,9 +31,11 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core.partition as part
+from repro.checkpoint import grid_state as gstate_lib
 from repro.core import comm, dp as dp_lib, fedpt
 from repro.core import flat as flat_lib
 from repro.core import plan as plan_lib
+from repro.core import sanitize as sanitize_lib
 from repro.data import synthetic as syn
 from repro.launch import mesh as mesh_lib
 from repro.launch import sharding as shard_lib
@@ -42,6 +44,7 @@ from repro.obs import profiling as prof_lib
 from repro.obs import trace as trace_lib
 from repro.sim import devices as dev_lib
 from repro.sim import dynamics as dyn_lib
+from repro.sim import faults as faults_lib
 from repro.sim import scheduler as sched_lib
 from repro.sim import selection as sel_lib
 from repro.sim import wire
@@ -117,12 +120,38 @@ class GridConfig:
     # a Chrome/Perfetto timeline. The metrics registry backing
     # GridResult.scheduler_stats/tier_stats is always on either way.
     telemetry: Any = None
+    # --- fault injection (sim/faults.py) ---
+    # None = no failure model: zero extra PRNG draws, bit-identical
+    # histories (test-enforced). A preset name ("chaos"), a FaultConfig
+    # or a dict of its fields injects client crash-mid-compute, upload
+    # truncation, payload corruption (NaN / bit-flip), duplicate
+    # deliveries and a server kill at virtual time T — all drawn from an
+    # independent spawned fault stream. Sync mode supports crashes and
+    # the kill only (payload faults need a per-client wire payload).
+    faults: Any = None
+    # --- delta quarantine (core/sanitize.py) ---
+    # None/False = off (clean-data aggregation is bit-identical either
+    # way). True / a SanitizeConfig / a dict screens the delta buffer
+    # before aggregation: non-finite rows and norm outliers are zeroed
+    # with zero weight (under DP the fixed denominator is untouched);
+    # every quarantined row emits a traced "quarantine" event.
+    sanitize: Any = None
+    # --- mid-run checkpoint / resume (checkpoint/grid_state.py) ---
+    # checkpoint_every > 0 snapshots the full execution state into
+    # checkpoint_dir every N server updates (async: at flush
+    # boundaries; sync: at round boundaries). resume_from restores a
+    # snapshot and continues — the resumed run reproduces the
+    # uninterrupted run's history exactly (bitwise on CPU).
+    checkpoint_every: int = 0
+    checkpoint_dir: Optional[str] = None
+    resume_from: Optional[str] = None
     # --- rng plumbing ---
     fleet_seed: int = 0                     # profile sampling
     device_seed: int = 13                   # availability/dropout/latency
     # (dynamics draws — jitter, trace phases — come from an independent
     # child stream spawned off [seed, device_seed], so enabling dynamics
-    # never moves the availability/dropout stream above)
+    # never moves the availability/dropout stream above; fault draws
+    # come from a SECOND spawned child, created only when faults are on)
 
 
 @dataclasses.dataclass
@@ -158,6 +187,10 @@ class GridResult:
     # holds the virtual-time records, `.export_jsonl`/`.export_perfetto`
     # write them out
     telemetry: Any = None
+    # fault-injection summary (GridConfig.faults set): the run's fired
+    # fault counters — crashes, truncated, corrupted, duplicates — plus
+    # quarantined rows (None when no failure model was active)
+    faults: Optional[Dict[str, int]] = None
 
     @property
     def stats(self) -> Dict[str, int]:
@@ -259,6 +292,23 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
     dyn_cfg = dyn_lib.resolve_dynamics(grid.dynamics, fleet)
     dyn = dyn_cfg.bind(fleet, dyn_rng) if dyn_cfg is not None else None
 
+    # the fault stream: a SECOND independent child, spawned ONLY when a
+    # failure model is active — spawning advances no dev_rng draws and
+    # the fault stream's own draws never touch the other streams, so
+    # faults=None runs are bit-identical (test-enforced)
+    faults_cfg = faults_lib.resolve_faults(grid.faults)
+    if faults_cfg is not None and grid.mode == "sync" \
+            and faults_cfg.payload_prob > 0:
+        raise ValueError(
+            "sync mode supports only crash_compute and server_kill_at "
+            "faults — payload faults (truncate/corrupt/duplicate) need "
+            "the async per-client wire path")
+    bfaults = (faults_cfg.bind(dev_rng.spawn(1)[0])
+               if faults_cfg is not None else None)
+    san = sanitize_lib.resolve_sanitize(grid.sanitize)
+    if grid.checkpoint_every > 0 and not grid.checkpoint_dir:
+        raise ValueError("checkpoint_every > 0 needs a checkpoint_dir")
+
     # cohort-selection policy: estimates feed bandwidth-aware inclusion
     # probabilities and seed the adaptive policy's observed-RTT EMA
     policy = sel_lib.resolve_policy(grid.selection)
@@ -281,7 +331,7 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
                   tier_of_client=tier_of_client, tier_up=tier_up,
                   tier_compute=tier_compute, dyn=dyn, dyn_rng=dyn_rng,
                   policy=policy, registry=registry, tracer=tracer,
-                  profile=profile)
+                  profile=profile, bfaults=bfaults, san=san)
     if grid.mode == "sync":
         return _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid,
                          server_opt, **common)
@@ -299,9 +349,12 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
 # the normalized scheduler-stats schema: BOTH modes emit every key,
 # with explicit zeros where a counter cannot fire (sync never retries
 # in-flight dispatches; async has no over-selection excess and no
-# availability-draw offline stage) — regression-tested
+# availability-draw offline stage; sync supports only the crash fault)
+# — regression-tested
 STAT_KEYS = ("dispatches", "uploads", "offline", "dropouts",
-             "deadline_drops", "excess", "retries")
+             "deadline_drops", "excess", "retries",
+             "crashes", "truncated", "corrupted", "duplicates",
+             "quarantined")
 
 
 def _stats_view(registry: metrics_lib.MetricsRegistry) -> Dict[str, int]:
@@ -350,7 +403,7 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
               fleet, report, down_bytes, up_bytes, compute_seconds,
               data_rng, dev_rng, seed, data_kind, eval_every, eval_fn, log,
               cplan, tier_of_client, tier_up, tier_compute, dyn, dyn_rng,
-              policy, registry, tracer, profile):
+              policy, registry, tracer, profile, bfaults, san):
     mesh = mesh_lib.resolve_mesh(grid.mesh)
     constrain_flat = shard_lib.flat_constrainer(mesh) if mesh else None
     constrain_batch = shard_lib.cohort_constrainer(mesh) if mesh else None
@@ -360,7 +413,7 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
     round_fn, sopt = fedpt.make_round_fn(loss_fn, rc, server_opt=server_opt,
                                          constrain_flat_fn=constrain_flat,
                                          constrain_batch_fn=constrain_batch,
-                                         plan=cplan)
+                                         plan=cplan, sanitize=san)
     round_fn = prof_lib.annotate(jax.jit(round_fn, donate_argnums=(0, 1)),
                                  "grid/round_fn", enabled=profile)
     sstate = sopt.init(y)
@@ -368,11 +421,28 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
     C = rc.clients_per_round
     m = min(N, max(C, int(math.ceil(C * grid.over_selection))))
 
+    # every live RNG stream a snapshot must capture (the fault stream
+    # only exists when a failure model is active)
+    rngs = {"data": data_rng, "dev": dev_rng, "dyn": dyn_rng}
+    if bfaults is not None:
+        rngs["fault"] = bfaults.rng
+
     history: List[Dict[str, float]] = []
     mc = registry.counter
     vt = 0.0
+    start_round = 0
+    last_ckpt: Optional[str] = None
+    if grid.resume_from:
+        meta, arrays = gstate_lib.load_state(grid.resume_from)
+        y, sstate, start_round, vt, history = gstate_lib.decode_sync(
+            meta, arrays, sstate_template=sstate, rngs=rngs,
+            policy=policy, registry=registry, report=report)
+        last_ckpt = grid.resume_from
     t0 = None
-    for r in range(rounds):
+    for r in range(start_round, rounds):
+        if bfaults is not None and vt > bfaults.kill_at:
+            raise faults_lib.ServerKilled(at=vt, applied=r,
+                                          checkpoint=last_ckpt)
         # the policy's tier map can move between rounds (tier-rotation,
         # adaptive-capability); static policies return the bound map
         tiers_now = policy.current_tiers() if cplan is not None else None
@@ -388,7 +458,8 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
             fleet, cids, down_bytes, cohort_up, cohort_comp, C, dev_rng,
             deadline=grid.straggler_deadline, dynamics=dyn,
             dyn_rng=dyn_rng, now=vt, tracer=tracer,
-            tiers=tiers_now[cids] if cplan is not None else None)
+            tiers=tiers_now[cids] if cplan is not None else None,
+            faults=bfaults)
         # the C slots the compiled round engine sees: participants in
         # arrival order, padded (weight 0) with the remaining cohort in
         # dispatch order when drops leave the round short
@@ -414,9 +485,24 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
             args += (jnp.asarray(tiers_now[sel], jnp.int32),)
         y, sstate, rmetrics = round_fn(*args,
                                        jax.random.key(seed * 100_003 + r))
-        if r == 0:
+        if t0 is None:
             jax.block_until_ready(y)
             t0 = time.time()  # exclude compile from the per-round timing
+        if san is not None:
+            # quarantined cohort rows -> traced events + counter (the
+            # masks are tiny (C,) vectors; one host sync per round)
+            nonf = np.asarray(rmetrics["quarantine_nonfinite"])
+            outl = np.asarray(rmetrics["quarantine_outlier"])
+            norms = np.asarray(rmetrics["quarantine_norms"])
+            for i in np.nonzero(nonf | outl)[0]:
+                mc("quarantined").inc()
+                tracer.instant(
+                    "quarantine", vt,
+                    cause="nonfinite" if nonf[i] else "norm-outlier",
+                    cid=int(sel[i]),
+                    tier=(int(tiers_now[sel[i]]) if cplan is not None
+                          else None),
+                    norm=float(norms[i]), round=r)
 
         vt0, vt = vt, vt + plan.round_seconds
         registry.histogram("round_seconds").observe(plan.round_seconds)
@@ -456,6 +542,7 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         mc("deadline_drops").inc(plan.deadline_drops)
         mc("excess").inc(plan.excess)
         mc("retries").inc(plan.retries)
+        mc("crashes").inc(plan.crashes)
 
         rec = {"round": r, "loss": float(rmetrics["loss"])}
         if eval_fn and eval_every and (r + 1) % eval_every == 0:
@@ -467,11 +554,23 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                     participants=float(len(kept_cids)), cohort=int(m),
                     loss=rec["loss"])
         policy.end_round(r)
+        if grid.checkpoint_every > 0 \
+                and (r + 1) % grid.checkpoint_every == 0:
+            meta, arrays = gstate_lib.encode_sync(
+                y=y, sstate=sstate, round_idx=r, now=vt, history=history,
+                rngs=rngs, policy=policy, registry=registry, report=report)
+            last_ckpt = gstate_lib.save_state(
+                gstate_lib.checkpoint_path(grid.checkpoint_dir, r + 1,
+                                           "sync"), meta, arrays)
+            mc("checkpoints").inc()
+            tracer.instant("checkpoint", vt, path=last_ckpt, round=r,
+                           mode="sync")
         if log and (r % max(1, rounds // 10) == 0):
             print(f"  round {r}: " + " ".join(
                 f"{k}={v:.4f}" for k, v in rec.items() if k != "round"))
     jax.block_until_ready(y)
-    spr = (time.time() - t0) / max(rounds - 1, 1) if t0 else float("nan")
+    spr = (time.time() - t0) / max(rounds - start_round - 1, 1) \
+        if t0 else float("nan")
     final_tiers = (policy.current_tiers() if cplan is not None
                    else tier_of_client)
     if tracer.enabled:
@@ -484,7 +583,20 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                                              registry),
                       plan=cplan, policy=policy, dynamics=dyn,
                       metrics=registry,
-                      telemetry=tracer if tracer.enabled else None)
+                      telemetry=tracer if tracer.enabled else None,
+                      faults=_faults_view(registry, bfaults))
+
+
+def _faults_view(registry: metrics_lib.MetricsRegistry,
+                 bfaults) -> Optional[Dict[str, int]]:
+    """GridResult.faults: the fired-fault counters, when a failure model
+    was active (quarantined rows ride along — they are the sanitize
+    screen's answer to the corruption faults)."""
+    if bfaults is None:
+        return None
+    return {k: int(registry.counter(k).value)
+            for k in ("crashes", "truncated", "corrupted", "duplicates",
+                      "quarantined")}
 
 
 # ---------------------------------------------------------------------------
@@ -509,7 +621,7 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                fleet, report, down_bytes, up_bytes, compute_seconds,
                data_rng, dev_rng, seed, data_kind, eval_every, eval_fn, log,
                cplan, tier_of_client, tier_up, tier_compute, dyn, dyn_rng,
-               policy, registry, tracer, profile):
+               policy, registry, tracer, profile, bfaults, san):
     if server_opt is None:
         server_opt = fedpt.resolve_server_opt(rc)
     # trivial plans keep the pre-plan engine (lane-exact acceptance);
@@ -559,7 +671,7 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
     apply_fn = prof_lib.annotate(
         jax.jit(fedpt.make_buffered_apply(
             server_opt, flush_dp=flush_dp, constrain_flat_fn=constrain_flat,
-            plan=cplan), donate_argnums=(0, 1)),
+            plan=cplan, sanitize=san), donate_argnums=(0, 1)),
         "grid/server_apply", enabled=profile)
     staleness_fn = fedpt.get_staleness_fn(grid.staleness, **grid.staleness_kw)
     if flush_dp is not None:
@@ -652,7 +764,19 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
     def apply_update(entries, now, version):
         if lane > 0:
             run_pending()
-        rows, losses = zip(*[entry_arrays(e) for e in entries])
+        rows, losses = [], []
+        for e in entries:
+            d, l = entry_arrays(e)
+            f = e.work.get("fault")
+            if f is not None and f["kind"] in ("nan", "bitflip"):
+                # materialize the wire corruption from the per-event
+                # seed (duplicate rows share the work dict and damage
+                # identically; the client's reported loss predates the
+                # wire, so it stays intact)
+                d = jnp.asarray(faults_lib.corrupt_row(
+                    np.asarray(d), f["kind"], f["seed"], bfaults.cfg))
+            rows.append(d)
+            losses.append(l)
         wts = [e.weight for e in entries]
         # pad a short (drained) flush to the fixed goal_count shape with
         # zero-weight rows, so apply_fn never re-traces — and under DP
@@ -684,6 +808,21 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         out = {"loss": float(jnp.mean(jnp.stack(losses))),
                "delta_norm": float(m["delta_norm"])}
         applied = state["applied"]
+        if san is not None:
+            # quarantined buffer rows -> traced events + counter (the
+            # masks are tiny (K,) vectors, synced with the losses above)
+            nonf = np.asarray(m["quarantine_nonfinite"])
+            outl = np.asarray(m["quarantine_outlier"])
+            norms = np.asarray(m["quarantine_norms"])
+            for i in np.nonzero((nonf | outl)[:len(entries)])[0]:
+                registry.counter("quarantined").inc()
+                w = entries[i].work
+                tracer.instant(
+                    "quarantine", now,
+                    cause="nonfinite" if nonf[i] else "norm-outlier",
+                    cid=int(w["cid"]),
+                    tier=None if w.get("tier") is None else int(w["tier"]),
+                    norm=float(norms[i]), flush=applied)
         state["applied"] = applied + 1
         if eval_fn and eval_every and state["applied"] % eval_every == 0:
             out.update(eval_fn(part.merge(y_new, frozen)))
@@ -691,6 +830,32 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         # their tier maps here
         policy.end_round(applied)
         return out
+
+    # every live RNG stream a snapshot must capture (the fault stream
+    # only exists when a failure model is active)
+    rngs = {"data": data_rng, "dev": dev_rng, "dyn": dyn_rng}
+    if bfaults is not None:
+        rngs["fault"] = bfaults.rng
+    last_ckpt = {"path": None}
+
+    def checkpoint_hook(s, now):
+        # called by the scheduler after every full-buffer flush — the
+        # one boundary where run_pending() has resolved every lane cell
+        if state["applied"] % grid.checkpoint_every != 0:
+            return
+        meta, arrays = gstate_lib.encode_async(
+            state=state, sched=s, rngs=rngs, accountant=accountant,
+            policy=policy, registry=registry)
+        path = gstate_lib.save_state(
+            gstate_lib.checkpoint_path(grid.checkpoint_dir,
+                                       state["applied"], "async"),
+            meta, arrays)
+        last_ckpt["path"] = path
+        registry.counter("checkpoints").inc()
+        tracer.instant("checkpoint", now, path=path,
+                       applied=state["applied"], mode="async",
+                       buffer_fill=float(len(s.buffer)),
+                       events_in_flight=len(s.q))
 
     sched = sched_lib.BufferedAsyncScheduler(
         fleet=fleet, concurrency=min(grid.concurrency, N),
@@ -702,9 +867,24 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         compute_of=((lambda cid: float(tier_compute[tier_of(cid)]))
                     if cplan is not None else None),
         dynamics=dyn, dyn_rng=dyn_rng, observe=policy.observe,
-        tracer=tracer, metrics=registry)
+        tracer=tracer, metrics=registry, faults=bfaults,
+        checkpoint_hook=(checkpoint_hook if grid.checkpoint_every > 0
+                         else None))
+    if grid.resume_from:
+        gstate_lib.decode_async(
+            *gstate_lib.load_state(grid.resume_from), state=state,
+            sched=sched, sstate_template=state["sstate"], rngs=rngs,
+            accountant=accountant, policy=policy, registry=registry,
+            make_cell=_LaneCell if lane > 0 else None)
+        last_ckpt["path"] = grid.resume_from
     t_wall = time.time()
-    history = sched.run(rounds, deadline=grid.async_deadline)
+    try:
+        history = sched.run(rounds, deadline=grid.async_deadline)
+    except faults_lib.ServerKilled as e:
+        # annotate the kill with the latest snapshot so callers can
+        # resume (None when checkpointing was off)
+        e.checkpoint = last_ckpt["path"]
+        raise
     spr = (time.time() - t_wall) / max(rounds, 1)
     if log:
         for rec in history[:: max(1, rounds // 10)]:
@@ -737,4 +917,5 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                                              registry),
                       plan=cplan, policy=policy, dynamics=dyn,
                       metrics=registry,
-                      telemetry=tracer if tracer.enabled else None)
+                      telemetry=tracer if tracer.enabled else None,
+                      faults=_faults_view(registry, bfaults))

@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import itertools
 import math
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
@@ -32,6 +31,7 @@ import numpy as np
 from repro.obs import metrics as metrics_lib
 from repro.obs import trace as trace_lib
 from repro.sim import devices as dev_lib
+from repro.sim import faults as faults_lib
 
 
 @dataclasses.dataclass(order=True)
@@ -50,12 +50,15 @@ class EventQueue:
 
     def __init__(self):
         self._heap: List[Event] = []
-        self._seq = itertools.count()
+        # a plain int (not itertools.count) so a grid-state snapshot can
+        # save and restore the insertion counter exactly
+        self._next_seq = 0
         self.now = 0.0
 
     def push(self, time: float, kind: str, **payload) -> Event:
-        ev = Event(time=float(time), seq=next(self._seq), kind=kind,
+        ev = Event(time=float(time), seq=self._next_seq, kind=kind,
                    payload=payload)
+        self._next_seq += 1
         heapq.heappush(self._heap, ev)
         return ev
 
@@ -88,6 +91,9 @@ class SyncRoundPlan:
     # server advanced the clock by the redispatch backoff (the sync
     # analogue of the async engine's parked-dispatch retries)
     retries: int = 0
+    # injected crash-mid-compute faults (sim/faults.py): dispatched,
+    # consumed downlink + partial compute, never uploads
+    crashes: int = 0
 
     def participant_cids(self) -> np.ndarray:
         """Participants in arrival order (dispatch order on ties)."""
@@ -102,7 +108,7 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
                     dyn_rng: Optional[np.random.Generator] = None,
                     now: float = 0.0,
                     tracer=trace_lib.NULL_TRACER,
-                    tiers=None) -> SyncRoundPlan:
+                    tiers=None, faults=None) -> SyncRoundPlan:
     """Simulate one synchronous round over the cohort `cids` (possibly
     over-selected: len(cids) >= clients_needed) and decide who counts.
 
@@ -125,7 +131,16 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
     trip; dropouts get a null duration — they never finish) and one
     ``upload`` instant per completed upload; ``tiers`` optionally
     supplies the per-member tier indices for those payloads. The
-    default NULL_TRACER emits nothing and costs nothing."""
+    default NULL_TRACER emits nothing and costs nothing.
+
+    ``faults`` (a ``sim/faults.BoundFaults``) injects crash-mid-compute:
+    a fixed-count vector of crash draws from the *fault* stream (zero
+    draws of ``rng``/``dyn_rng``, so ``faults=None`` rounds are
+    bit-identical) marks cohort members that consume their downlink and
+    part of their compute but never upload. Payload faults (truncation,
+    corruption, duplicates) are async-only — the sync engine computes
+    deltas inside one jitted cohort step and has no per-client wire
+    payload to damage — and the grid rejects them before calling here."""
     cids = np.asarray(cids, np.int64)
     m = len(cids)
     up_arr = np.broadcast_to(np.asarray(up_bytes, np.int64), (m,))
@@ -134,6 +149,9 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
     # outcomes (and entirely separate from the data-sampling stream)
     avail_u = rng.random(m)
     drop_u = rng.random(m)
+    # fixed-count crash draws from the independent fault stream
+    crash = (faults.crash_draws(m) if faults is not None
+             else np.zeros(m, bool))
     if dynamics is not None:
         # fixed-count N(0,1) draws from the dynamics stream: one per
         # potential transfer, consumed even for members that never
@@ -144,6 +162,7 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
     q = EventQueue()
     dispatched = np.zeros(m, bool)
     will_complete = np.zeros(m, bool)
+    crashed = np.zeros(m, bool)
     arrival = np.full(m, math.inf)
     for i, cid in enumerate(cids):
         p = fleet.profile(cid)
@@ -156,6 +175,11 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
         if drop_u[i] < p.dropout:
             # mid-round dropout: consumed the downlink + some compute but
             # never uploads; the server just never hears back
+            continue
+        if crash[i]:
+            # injected crash-mid-compute: same server-side footprint as
+            # a dropout (downlink billed, no upload), counted separately
+            crashed[i] = True
             continue
         will_complete[i] = True
         if dynamics is None:
@@ -195,11 +219,16 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
             if not dispatched[i]:
                 continue
             dur = float(arrival[i]) if math.isfinite(arrival[i]) else None
+            outcome = ("ok" if will_complete[i]
+                       else "crash" if crashed[i] else "dropout")
             tracer.span("dispatch", now, dur, cid=int(cids[i]),
                         tier=None if tiers is None else int(tiers[i]),
                         down_bytes=int(down_bytes),
-                        up_bytes=int(up_arr[i]),
-                        outcome="ok" if will_complete[i] else "dropout")
+                        up_bytes=int(up_arr[i]), outcome=outcome)
+            if crashed[i]:
+                tracer.instant(
+                    "fault", now, fault="crash_compute", cid=int(cids[i]),
+                    tier=None if tiers is None else int(tiers[i]))
             if completed[i]:
                 tracer.instant(
                     "upload", now + float(arrival[i]), cid=int(cids[i]),
@@ -214,9 +243,10 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
         participant=participant, arrival=arrival,
         round_seconds=float(round_seconds),
         offline=int(np.sum(~dispatched)),
-        dropouts=int(np.sum(dispatched & ~will_complete)),
+        dropouts=int(np.sum(dispatched & ~will_complete & ~crashed)),
         deadline_drops=int(np.sum(will_complete & (arrival > deadline))),
-        excess=int(np.sum(completed & ~participant)), retries=retried)
+        excess=int(np.sum(completed & ~participant)), retries=retried,
+        crashes=int(np.sum(crashed)))
 
 
 # ---------------------------------------------------------------------------
@@ -287,6 +317,27 @@ class BufferedAsyncScheduler:
     ``obs/metrics.MetricsRegistry``) backs ALL of the scheduler's
     counters — the legacy attributes (``dispatches``, ``tier_uploads``,
     ...) are read-only views over it.
+
+    ``faults`` (a ``sim/faults.BoundFaults``) injects the failure model:
+    exactly two fault-stream draws per dispatch (zero draws of ``rng``/
+    ``dyn_rng``, so ``faults=None`` runs are bit-identical and a
+    corruption-only config keeps the exact dispatch timeline) decide a
+    crash-mid-compute, an upload truncation (partial bytes billed, delta
+    dropped), a payload corruption (NaN/bitflip — carried on the work
+    dict for the apply stage to materialize), a duplicate delivery (the
+    entry buffers and bills twice), or nothing. When the virtual clock
+    crosses ``faults.kill_at`` the run raises
+    :class:`~repro.sim.faults.ServerKilled`.
+
+    ``checkpoint_hook(scheduler, now)`` (optional) is called after every
+    full-buffer flush — the one boundary where no lane work is pending
+    and every in-flight completion holds concrete arrays, i.e. where
+    ``checkpoint/grid_state.py`` can snapshot the whole execution state.
+
+    Run state (event heap, carry-over buffer, history records) lives on
+    the instance (``self.q``/``self.buffer``/``self.records``) so a
+    snapshot can serialize it and a restore can pre-seed it before
+    calling :meth:`run`.
     """
 
     def __init__(self, fleet: dev_lib.Fleet, concurrency: int,
@@ -300,7 +351,9 @@ class BufferedAsyncScheduler:
                  dyn_rng: Optional[np.random.Generator] = None,
                  observe: Optional[Callable[[int, float], None]] = None,
                  tracer=trace_lib.NULL_TRACER,
-                 metrics: Optional[metrics_lib.MetricsRegistry] = None):
+                 metrics: Optional[metrics_lib.MetricsRegistry] = None,
+                 faults=None,
+                 checkpoint_hook: Optional[Callable] = None):
         if goal_count < 1:
             raise ValueError("goal_count must be >= 1")
         self.fleet = fleet
@@ -323,8 +376,20 @@ class BufferedAsyncScheduler:
         # for the comm ledger and GridResult.scheduler_stats)
         self.metrics = metrics if metrics is not None \
             else metrics_lib.MetricsRegistry()
+        self.faults = faults
+        self.kill_at = faults.kill_at if faults is not None else math.inf
+        self.checkpoint_hook = checkpoint_hook
         self._consecutive_retries = 0
+        # virtual time when the current dark window started (None = the
+        # fleet is not dark): backs the retry budget below
+        self._dark_since: Optional[float] = None
         self.version = 0
+        # run state, on the instance so grid-state snapshots can
+        # serialize it and restores can pre-seed it (run() initializes
+        # fresh when untouched)
+        self.q: Optional[EventQueue] = None
+        self.buffer: List[BufferEntry] = []
+        self.records: List[Dict[str, float]] = []
 
     # legacy counter attributes, now read-only views over the registry
     @property
@@ -377,21 +442,33 @@ class BufferedAsyncScheduler:
         else:
             if self.dynamics is not None:
                 # the trace has (essentially) everyone offline right now:
-                # park this dispatch slot and retry when the clock moves
-                self.metrics.counter("retries").inc()
-                self._consecutive_retries += 1
-                if self._consecutive_retries > 100_000:
+                # park this dispatch slot and retry when the clock moves.
+                # Backoff escalates exponentially (capped, with
+                # deterministic jitter so parked slots don't thundering-
+                # herd on the same instant) and a *virtual-time* retry
+                # budget bounds how long a dark window may stall the run.
+                if self._dark_since is None:
+                    self._dark_since = now
+                dark = now - self._dark_since
+                if dark > self.dynamics.retry_budget:
                     raise RuntimeError(
-                        "availability trace kept the whole fleet offline "
-                        "for 100k consecutive redispatch backoffs — set a "
-                        "deadline or fix the trace")
-                self.tracer.instant(
-                    "retry", now,
-                    backoff=float(self.dynamics.redispatch_backoff))
-                q.push(now + self.dynamics.redispatch_backoff, "retry")
+                        f"availability trace kept the whole fleet offline "
+                        f"for {dark:.0f} consecutive virtual seconds, "
+                        f"past the retry budget of "
+                        f"{self.dynamics.retry_budget:.0f}s — set "
+                        "GridConfig.async_deadline, fix the trace, or "
+                        "raise DynamicsConfig.retry_budget")
+                backoff = self.dynamics.backoff_seconds(
+                    self._consecutive_retries)
+                self._consecutive_retries += 1
+                self.metrics.counter("retries").inc()
+                self.tracer.instant("retry", now, backoff=float(backoff))
+                q.push(now + backoff, "retry")
                 return
             raise RuntimeError("no available client after 1000 draws")
         self._consecutive_retries = 0
+        self._dark_since = None
+        fault = self.faults.draw() if self.faults is not None else None
         self.metrics.counter("dispatches").inc()
         comp = (self.compute_of(cid) if self.compute_of is not None
                 else self.compute_seconds)
@@ -417,7 +494,29 @@ class BufferedAsyncScheduler:
                              version=self.version, outcome="dropout")
             q.push(t, "failed", cid=cid, tier=tier)
             return
+        if fault is not None and fault["kind"] == "crash":
+            # injected crash-mid-compute: downlink + crash_frac of the
+            # local work, then silence — the server redispatches on the
+            # failure event, like a dropout but counted separately
+            if self.dynamics is None:
+                dl = self.down_bytes / p.downlink_bps
+            else:
+                dl = lm.transfer_seconds(self.down_bytes, p.downlink_bps,
+                                         z_down)
+            t = now + dl + (self.faults.cfg.crash_frac * comp
+                            * p.compute_multiplier)
+            self.tracer.span("dispatch", now, t - now, cid=cid, tier=tier,
+                             down_bytes=self.down_bytes,
+                             version=self.version, outcome="crash")
+            self.tracer.instant("fault", t, fault="crash_compute",
+                                cid=cid, tier=tier)
+            q.push(t, "failed", cid=cid, tier=tier, cause="crash")
+            return
         work = self.run_client(cid, self.version)
+        if fault is not None:
+            # a payload fault (truncate/nan/bitflip/duplicate) rides on
+            # the work dict to the arrival/apply stages
+            work["fault"] = fault
         if self.dynamics is None:
             rtt = p.round_trip_seconds(self.down_bytes,
                                        int(work["up_bytes"]), comp)
@@ -451,6 +550,23 @@ class BufferedAsyncScheduler:
                             staleness_max=float(stale.max()))
         self.version += 1
 
+    def finish_event(self, now: float) -> None:
+        """Replay the tail of the complete-branch a snapshot interrupted.
+
+        The checkpoint hook fires *inside* the flush loop — before any
+        further full-buffer flushes of the same event and before the
+        freed slot's redispatch (both of which the original run then
+        performed). A restore must replay exactly that tail, from the
+        restored RNG positions, or the resumed timeline shifts by one
+        dispatch. Checkpoint hooks are NOT re-fired here: the replayed
+        flushes would just rewrite the snapshots the original run
+        already wrote."""
+        while len(self.buffer) >= self.goal_count:
+            batch = self.buffer[:self.goal_count]
+            del self.buffer[:self.goal_count]
+            self._flush(batch, now, self.records)
+        self._dispatch(self.q, now)
+
     def run(self, num_updates: int,
             deadline: float = math.inf) -> List[Dict[str, float]]:
         """Run until `num_updates` server updates have been applied.
@@ -460,22 +576,33 @@ class BufferedAsyncScheduler:
         ``deadline`` is a *virtual-seconds* budget: at the first event
         past it the run stops, flushing the partially-filled buffer as
         one final short update (the consumer pads it to ``goal_count``
-        with zero weights, so the apply shape never changes)."""
-        q = EventQueue()
-        buffer: List[BufferEntry] = []
-        records: List[Dict[str, float]] = []
-        for _ in range(self.concurrency):
-            self._dispatch(q, 0.0)
+        with zero weights, so the apply shape never changes).
+
+        A restored grid-state snapshot pre-seeds ``self.q`` / ``self.
+        buffer`` / ``self.records`` / ``self.version`` before calling
+        this; a fresh run initializes them and primes ``concurrency``
+        dispatches at t=0."""
+        if self.q is None:
+            self.q = EventQueue()
+            for _ in range(self.concurrency):
+                self._dispatch(self.q, 0.0)
+        q, records = self.q, self.records
         while len(records) < num_updates:
             if not len(q):
                 raise RuntimeError("async scheduler starved: no in-flight "
                                    "clients and buffer below goal_count")
             ev = q.pop()
+            if ev.time > self.kill_at:
+                # injected server kill: die exactly at the virtual time
+                # the fault plan asked for (resume via grid_state)
+                raise faults_lib.ServerKilled(at=ev.time,
+                                              applied=self.version)
             if ev.time > deadline:
                 # out of virtual time: drain the partial buffer as the
                 # final (padded) server update
-                if buffer:
-                    self._flush(buffer, deadline, records)
+                if self.buffer:
+                    self._flush(self.buffer, deadline, records)
+                    self.buffer = []
                 break
             if ev.kind == "retry":
                 # a dispatch slot parked by a dark availability window:
@@ -483,35 +610,88 @@ class BufferedAsyncScheduler:
                 self._dispatch(q, ev.time)
                 continue
             if ev.kind == "failed":
-                self.metrics.counter("dropouts").inc()
+                if ev.payload.get("cause") == "crash":
+                    self.metrics.counter("crashes").inc()
+                else:
+                    self.metrics.counter("dropouts").inc()
                 self._dispatch(q, ev.time)
                 continue
             work = ev.payload["work"]
+            fault = work.get("fault")
+            cid = int(ev.payload["cid"])
+            tier = ev.payload.get("tier")
+            if fault is not None and fault["kind"] == "truncate":
+                # the upload died partway: the wire carried (and bills)
+                # a fraction of the bytes; the server detects the length
+                # mismatch and drops the delta before buffering
+                arrived = int(work["up_bytes"] * fault["frac"])
+                self.metrics.counter("truncated").inc()
+                self.metrics.counter("up_bytes").inc(arrived)
+                if tier is not None:
+                    self.metrics.counter("tier_up_bytes").inc(arrived,
+                                                              label=tier)
+                self.tracer.instant("fault", ev.time,
+                                    fault="truncate_upload", cid=cid,
+                                    tier=tier, frac=float(fault["frac"]),
+                                    up_bytes=arrived)
+                self._dispatch(q, ev.time)
+                continue
             s = self.version - ev.payload["version"]
             self.metrics.counter("uploads").inc()
             self.metrics.counter("up_bytes").inc(int(work["up_bytes"]))
             if self.observe is not None:
-                self.observe(int(ev.payload["cid"]), ev.payload["rtt"])
-            self.tracer.instant("upload", ev.time,
-                                cid=int(ev.payload["cid"]),
-                                tier=ev.payload.get("tier"),
+                self.observe(cid, ev.payload["rtt"])
+            self.tracer.instant("upload", ev.time, cid=cid, tier=tier,
                                 up_bytes=int(work["up_bytes"]),
                                 staleness=int(s),
                                 rtt=float(ev.payload["rtt"]))
-            if ev.payload.get("tier") is not None:
-                tier = ev.payload["tier"]
+            if tier is not None:
                 self.metrics.counter("tier_uploads").inc(label=tier)
                 self.metrics.counter("tier_up_bytes").inc(
                     int(work["up_bytes"]), label=tier)
                 self.metrics.counter("tier_rtt_sum").inc(
                     float(ev.payload["rtt"]), label=tier)
                 self.metrics.counter("tier_rtt_n").inc(label=tier)
-            buffer.append(BufferEntry(
+            entry = BufferEntry(
                 work=work,
                 weight=float(self.staleness_fn(s)) * float(work["weight"]),
-                staleness=int(s)))
-            if len(buffer) >= self.goal_count:
-                self._flush(buffer, ev.time, records)
-                buffer = []
+                staleness=int(s))
+            self.buffer.append(entry)
+            if fault is not None and fault["kind"] in ("nan", "bitflip"):
+                # the corrupted payload buffers normally — the apply
+                # stage materializes the damage; the sanitize screen
+                # (core/sanitize.py) is what should catch it
+                self.metrics.counter("corrupted").inc()
+                self.tracer.instant("fault", ev.time,
+                                    fault="corrupt_" + fault["kind"],
+                                    cid=cid, tier=tier)
+            elif fault is not None and fault["kind"] == "duplicate":
+                # retransmit after a lost ack: the same delta buffers
+                # (and bills) twice
+                self.metrics.counter("duplicates").inc()
+                self.metrics.counter("uploads").inc()
+                self.metrics.counter("up_bytes").inc(int(work["up_bytes"]))
+                if tier is not None:
+                    self.metrics.counter("tier_uploads").inc(label=tier)
+                    self.metrics.counter("tier_up_bytes").inc(
+                        int(work["up_bytes"]), label=tier)
+                self.tracer.instant("fault", ev.time,
+                                    fault="duplicate_upload", cid=cid,
+                                    tier=tier)
+                self.buffer.append(BufferEntry(work=work,
+                                               weight=entry.weight,
+                                               staleness=entry.staleness))
+            # duplicates can leave the buffer past goal_count: flush in
+            # exact goal_count batches and carry the remainder (when
+            # faults are off the buffer never exceeds goal_count, so
+            # this is the old flush-everything behavior, bit for bit)
+            while len(self.buffer) >= self.goal_count:
+                batch = self.buffer[:self.goal_count]
+                del self.buffer[:self.goal_count]
+                self._flush(batch, ev.time, records)
+                if self.checkpoint_hook is not None:
+                    # flush boundaries are the one point where no lane
+                    # work is pending: snapshot-safe
+                    self.checkpoint_hook(self, ev.time)
             self._dispatch(q, ev.time)
         return records

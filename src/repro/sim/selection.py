@@ -123,6 +123,22 @@ class SelectionPolicy:
     def current_tiers(self) -> Optional[np.ndarray]:
         return self._tiers
 
+    # -- checkpointing -----------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-serializable mutable state for mid-run checkpoints.
+        Uniform and bandwidth-aware policies carry no mutable state
+        beyond what ``bind`` derives, so the base blob is just the
+        policy name (used as a resume-time consistency check)."""
+        return {"name": self.name}
+
+    def load_state(self, state: dict) -> None:
+        if state.get("name") != self.name:
+            raise ValueError(
+                f"checkpointed selection policy {state.get('name')!r} "
+                f"does not match this run's {self.name!r} — resume with "
+                "the same GridConfig.selection")
+
 
 class UniformPolicy(SelectionPolicy):
     pass
@@ -219,6 +235,16 @@ class TierRotationPolicy(SelectionPolicy):
             self.rotation = rotation
             self._map = (self.base + rotation) % self.n_tiers
 
+    def state_dict(self) -> dict:
+        state = super().state_dict()
+        state["rotation"] = int(self.rotation)
+        return state
+
+    def load_state(self, state: dict) -> None:
+        super().load_state(state)
+        self.rotation = int(state["rotation"])
+        self._map = (self.base + self.rotation) % self.n_tiers
+
 
 class AdaptiveCapabilityPolicy(SelectionPolicy):
     """Re-tier the fleet online from observed round-trip times.
@@ -277,6 +303,24 @@ class AdaptiveCapabilityPolicy(SelectionPolicy):
             1.0 / np.maximum(self.ema_rtt, 1e-12), self.n_tiers)
         self.refit_ema = self.ema_rtt.copy()
         self.refits += 1
+
+    def state_dict(self) -> dict:
+        state = super().state_dict()
+        state.update(
+            ema_rtt=[float(x) for x in self.ema_rtt],
+            observed=[bool(x) for x in self.observed],
+            tier_map=[int(x) for x in self._map],
+            refits=int(self.refits),
+            refit_ema=[float(x) for x in self.refit_ema])
+        return state
+
+    def load_state(self, state: dict) -> None:
+        super().load_state(state)
+        self.ema_rtt = np.asarray(state["ema_rtt"], np.float64)
+        self.observed = np.asarray(state["observed"], bool)
+        self._map = np.asarray(state["tier_map"], np.int32)
+        self.refits = int(state["refits"])
+        self.refit_ema = np.asarray(state["refit_ema"], np.float64)
 
 
 POLICIES = {

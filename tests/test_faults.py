@@ -1,0 +1,412 @@
+"""Fault injection (sim/faults.py), the delta-quarantine screen
+(core/sanitize.py), and their grid wiring: the faults=None zero-draw
+contract, corruption-only timeline invariance, NaN-poisoning with and
+without the sanitize screen, fault counters/traces, the sync crash path,
+the server kill, and the escalating-backoff retry machinery."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fedpt
+from repro.core import sanitize as sanitize_lib
+from repro.data import synthetic as syn
+from repro.nn import basic
+from repro.sim import dynamics as dyn_lib
+from repro.sim import faults as faults_lib
+from repro.sim import grid as simgrid
+
+pytestmark = pytest.mark.chaos
+
+
+def init_fn(seed):
+    return {"dense": basic.init_dense(seed, "dense", 64, 4, jnp.float32,
+                                      bias=True)}
+
+
+def loss_fn(params, b):
+    x = b["images"].reshape(b["images"].shape[0], -1)
+    logits = basic.dense(x, params["dense"])
+    lp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(lp, b["labels"][:, None], 1)), {}
+
+
+def make_ds(n_clients=12, seed=0):
+    return syn.make_federated_images(n_clients, 30, (8, 8, 1), 4, seed=seed,
+                                     test_examples=64)
+
+
+RC = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0)
+
+CHAOS = dict(crash_compute=0.05, truncate_upload=0.05, corrupt_nan=0.08,
+             corrupt_bitflip=0.08, duplicate_upload=0.05)
+
+
+def _flat(y):
+    return np.concatenate([np.asarray(v).ravel()
+                           for _, v in basic.flatten_params(y)])
+
+
+def _same_history(a, b):
+    assert [h["loss"] for h in a.history] == [h["loss"] for h in b.history]
+    for ha, hb in zip(a.history, b.history):
+        assert ha["virtual_seconds"] == hb["virtual_seconds"]
+
+
+# ---------------------------------------------------------------------------
+# resolution & config validation
+
+
+def test_resolve_faults_trivial_is_none():
+    assert faults_lib.resolve_faults(None) is None
+    assert faults_lib.resolve_faults(faults_lib.FaultConfig()) is None
+    assert faults_lib.resolve_faults({}) is None
+    assert faults_lib.resolve_faults({"crash_compute": 0.0}) is None
+
+
+def test_resolve_faults_variants():
+    cfg = faults_lib.resolve_faults("chaos")
+    assert cfg is not None and cfg.prob_total > 0
+    cfg2 = faults_lib.resolve_faults({"corrupt_nan": 0.5})
+    assert cfg2.corrupt_nan == 0.5
+    assert faults_lib.resolve_faults(cfg) is cfg
+    with pytest.raises(ValueError, match="unknown fault preset"):
+        faults_lib.resolve_faults("nope")
+    with pytest.raises(TypeError):
+        faults_lib.resolve_faults(42)
+
+
+def test_fault_config_validation():
+    with pytest.raises(ValueError, match="probabilit"):
+        faults_lib.FaultConfig(crash_compute=1.5)
+    with pytest.raises(ValueError, match="sum"):
+        faults_lib.FaultConfig(crash_compute=0.6, corrupt_nan=0.6)
+    with pytest.raises(ValueError, match="server_kill_at"):
+        faults_lib.FaultConfig(server_kill_at=0.0)
+
+
+def test_resolve_sanitize_variants():
+    assert sanitize_lib.resolve_sanitize(None) is None
+    assert sanitize_lib.resolve_sanitize(False) is None
+    assert sanitize_lib.resolve_sanitize("off") is None
+    assert sanitize_lib.resolve_sanitize(True) is not None
+    got = sanitize_lib.resolve_sanitize({"norm_mult": 5.0})
+    assert got.norm_mult == 5.0
+    # a config that screens nothing resolves to None (trivial-is-exact)
+    assert sanitize_lib.resolve_sanitize(
+        sanitize_lib.SanitizeConfig(nonfinite=False, norm_mult=0.0)) is None
+
+
+# ---------------------------------------------------------------------------
+# fault-stream hygiene & corruption primitives
+
+
+def test_fault_draw_consumes_exactly_two_stream_draws():
+    cfg = faults_lib.FaultConfig(corrupt_nan=0.5)
+    a, b = np.random.default_rng(3), np.random.default_rng(3)
+    bf = cfg.bind(a)
+    for _ in range(7):
+        bf.draw()
+    b.random()  # 7 x (uniform + 63-bit integer)
+    b.integers(0, 2 ** 63 - 1)
+    for _ in range(6):
+        b.random()
+        b.integers(0, 2 ** 63 - 1)
+    assert a.bit_generator.state == b.bit_generator.state
+
+
+def test_corrupt_row_deterministic_and_damaging():
+    cfg = faults_lib.FaultConfig(corrupt_nan=0.1, corrupt_bitflip=0.1)
+    row = np.linspace(-1.0, 1.0, 256).astype(np.float32)
+    a = faults_lib.corrupt_row(row, "nan", 12345, cfg)
+    b = faults_lib.corrupt_row(row, "nan", 12345, cfg)
+    np.testing.assert_array_equal(a, b)
+    assert np.sum(~np.isfinite(a)) >= 1
+    # the original row is untouched
+    assert np.all(np.isfinite(row))
+    c = faults_lib.corrupt_row(row, "bitflip", 999, cfg)
+    # bit 30 flips the top exponent bit: |x| < 2 becomes huge
+    assert np.max(np.abs(c[np.isfinite(c)]), initial=0.0) > 1e9 \
+        or np.any(~np.isfinite(c))
+
+
+# ---------------------------------------------------------------------------
+# sanitize screen unit behavior
+
+
+def test_screen_rows_quarantines_nonfinite_and_outliers():
+    mat = np.ones((5, 8), np.float32)
+    mat[1, 3] = np.nan
+    mat[2, 0] = np.inf
+    mat[3] *= 1e6                      # norm outlier vs the ones rows
+    w = np.ones(5, np.float32)
+    clean, cw, info = sanitize_lib.screen_rows(
+        jnp.asarray(mat), jnp.asarray(w), sanitize_lib.SanitizeConfig())
+    nonf = np.asarray(info["nonfinite"])
+    outl = np.asarray(info["outlier"])
+    assert list(nonf) == [False, True, True, False, False]
+    assert list(outl) == [False, False, False, True, False]
+    cw = np.asarray(cw)
+    assert list(cw) == [1.0, 0.0, 0.0, 0.0, 1.0]
+    clean = np.asarray(clean)
+    assert np.all(np.isfinite(clean))
+    assert np.all(clean[1] == 0.0) and np.all(clean[3] == 0.0)
+
+
+def test_screen_rows_clean_data_bitwise_noop():
+    rng = np.random.default_rng(0)
+    mat = jnp.asarray(rng.standard_normal((4, 16)).astype(np.float32))
+    w = jnp.asarray(np.ones(4, np.float32))
+    clean, cw, _ = sanitize_lib.screen_rows(
+        mat, w, sanitize_lib.SanitizeConfig())
+    assert bool(jnp.all(clean == mat)) and bool(jnp.all(cw == w))
+
+
+# ---------------------------------------------------------------------------
+# grid wiring: zero-draw contract & timeline invariance
+
+
+def test_trivial_faults_config_bit_identical_to_none():
+    ds = make_ds()
+    a = simgrid.run_grid(init_fn, loss_fn, ds, RC, 5,
+                         grid=simgrid.GridConfig(mode="async"), seed=3)
+    b = simgrid.run_grid(
+        init_fn, loss_fn, ds, RC, 5,
+        grid=simgrid.GridConfig(mode="async",
+                                faults={"crash_compute": 0.0}), seed=3)
+    _same_history(a, b)
+    assert a.faults is None and b.faults is None
+
+
+def test_corruption_only_faults_keep_dispatch_timeline():
+    """Payload corruption never touches the dev/dyn streams or the event
+    clock: a corrupt-everything run has the exact virtual timeline and
+    dispatch counts of the faults=None run — only the payloads differ."""
+    ds = make_ds()
+    off = simgrid.run_grid(init_fn, loss_fn, ds, RC, 5,
+                           grid=simgrid.GridConfig(mode="async"), seed=3)
+    on = simgrid.run_grid(
+        init_fn, loss_fn, ds, RC, 5,
+        grid=simgrid.GridConfig(mode="async", faults={"corrupt_nan": 1.0},
+                                sanitize=True), seed=3)
+    for ha, hb in zip(off.history, on.history):
+        assert ha["virtual_seconds"] == hb["virtual_seconds"]
+    assert on.scheduler_stats["dispatches"] == \
+        off.scheduler_stats["dispatches"]
+    assert on.scheduler_stats["uploads"] == off.scheduler_stats["uploads"]
+    # every buffered row was corrupted -> every row quarantined, and the
+    # sanitized model stays finite
+    assert on.faults["corrupted"] == on.scheduler_stats["uploads"]
+    assert on.faults["quarantined"] == 5 * simgrid.GridConfig().goal_count
+    assert np.all(np.isfinite(_flat(on.y)))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: poisoned cohort with/without the screen
+
+
+def test_nan_poison_without_sanitize_poisons_model():
+    ds = make_ds()
+    r = simgrid.run_grid(
+        init_fn, loss_fn, ds, RC, 5,
+        grid=simgrid.GridConfig(mode="async", faults={"corrupt_nan": 1.0}),
+        seed=3)
+    assert not np.all(np.isfinite(_flat(r.y)))
+    assert r.faults["corrupted"] > 0 and r.faults["quarantined"] == 0
+
+
+def test_nan_poison_with_sanitize_stays_finite_and_traces():
+    ds = make_ds()
+    r = simgrid.run_grid(
+        init_fn, loss_fn, ds, RC, 5,
+        grid=simgrid.GridConfig(mode="async", faults={"corrupt_nan": 1.0},
+                                sanitize=True, telemetry="memory"), seed=3)
+    assert np.all(np.isfinite(_flat(r.y)))
+    assert all(math.isfinite(h["loss"]) for h in r.history)
+    quars = r.telemetry.of_kind("quarantine")
+    assert len(quars) == r.faults["quarantined"] > 0
+    assert all(q.payload["cause"] == "nonfinite" for q in quars)
+    faults = r.telemetry.of_kind("fault")
+    assert all(f.payload["fault"] == "corrupt_nan" for f in faults)
+
+
+def test_bitflip_quarantined():
+    ds = make_ds()
+    r = simgrid.run_grid(
+        init_fn, loss_fn, ds, RC, 5,
+        grid=simgrid.GridConfig(mode="async",
+                                faults={"corrupt_bitflip": 1.0},
+                                sanitize=True, telemetry="memory"), seed=3)
+    assert np.all(np.isfinite(_flat(r.y)))
+    quars = r.telemetry.of_kind("quarantine")
+    assert len(quars) > 0
+    assert {q.payload["cause"] for q in quars} <= \
+        {"nonfinite", "norm-outlier"}
+
+
+# ---------------------------------------------------------------------------
+# the remaining async fault kinds
+
+
+def test_chaos_counters_and_traces():
+    ds = make_ds()
+    r = simgrid.run_grid(
+        init_fn, loss_fn, ds, RC, 12,
+        grid=simgrid.GridConfig(mode="async", faults="chaos",
+                                sanitize=True, telemetry="memory"), seed=3)
+    f = r.faults
+    assert f["crashes"] > 0 and f["truncated"] > 0 and f["corrupted"] > 0
+    assert f == {k: r.scheduler_stats[k] for k in f}
+    kinds = {e.payload["fault"] for e in r.telemetry.of_kind("fault")}
+    assert "crash_compute" in kinds and "truncate_upload" in kinds
+
+
+def test_duplicate_upload_bills_twice_and_raises_dp_multiplicity():
+    ds = make_ds()
+    rc = dataclasses.replace(RC, dp_clip_norm=1.0, dp_noise_multiplier=0.5)
+    base = simgrid.run_grid(init_fn, loss_fn, ds, rc, 6,
+                            grid=simgrid.GridConfig(mode="async"), seed=3)
+    dup = simgrid.run_grid(
+        init_fn, loss_fn, ds, rc, 6,
+        grid=simgrid.GridConfig(mode="async",
+                                faults={"duplicate_upload": 1.0}), seed=3)
+    assert dup.faults["duplicates"] > 0
+    # both copies bill uplink: two billed uploads per dispatched client,
+    # so the buffer fills in half the dispatches of the clean run
+    assert dup.scheduler_stats["uploads"] == 2 * dup.faults["duplicates"]
+    assert dup.comm.measured_up_bytes == \
+        dup.scheduler_stats["uploads"] * dup.comm.trainable_bytes
+    assert dup.scheduler_stats["dispatches"] < \
+        base.scheduler_stats["dispatches"]
+    # a duplicated client owns >= 2 rows of its flush: the accountant
+    # sees it and the conservative epsilon grows
+    assert dup.dp["max_multiplicity"] >= 2
+    assert dup.dp["epsilon"] > base.dp["epsilon"]
+
+
+def test_truncated_upload_drops_delta_but_bills_partial_bytes():
+    ds = make_ds()
+    r = simgrid.run_grid(
+        init_fn, loss_fn, ds, RC, 4,
+        grid=simgrid.GridConfig(mode="async",
+                                faults={"truncate_upload": 0.5},
+                                telemetry="memory"), seed=3)
+    assert r.faults["truncated"] > 0
+    truncs = [e for e in r.telemetry.of_kind("fault")
+              if e.payload["fault"] == "truncate_upload"]
+    assert truncs
+    full = r.metrics.gauge("payload_up_bytes").value
+    for e in truncs:
+        assert 0 <= e.payload["up_bytes"] < full
+        assert 0.1 <= e.payload["frac"] < 0.9 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# sync mode: crash faults only
+
+
+def test_sync_crash_faults_counted():
+    ds = make_ds()
+    r = simgrid.run_grid(
+        init_fn, loss_fn, ds, RC, 6,
+        grid=simgrid.GridConfig(mode="sync",
+                                faults={"crash_compute": 0.3},
+                                telemetry="memory"), seed=3)
+    assert r.faults["crashes"] > 0
+    assert r.scheduler_stats["crashes"] == r.faults["crashes"]
+    kinds = [e.payload["fault"] for e in r.telemetry.of_kind("fault")]
+    assert kinds.count("crash_compute") == r.faults["crashes"]
+
+
+def test_sync_rejects_payload_faults():
+    ds = make_ds()
+    with pytest.raises(ValueError, match="async"):
+        simgrid.run_grid(
+            init_fn, loss_fn, ds, RC, 2,
+            grid=simgrid.GridConfig(mode="sync",
+                                    faults={"corrupt_nan": 0.5}), seed=3)
+
+
+def test_sync_trivial_faults_bit_identical():
+    ds = make_ds()
+    a = simgrid.run_grid(init_fn, loss_fn, ds, RC, 4, seed=3)
+    b = simgrid.run_grid(init_fn, loss_fn, ds, RC, 4,
+                         grid=simgrid.GridConfig(faults=None, sanitize=None),
+                         seed=3)
+    _same_history(a, b)
+
+
+# ---------------------------------------------------------------------------
+# server kill
+
+
+def test_server_kill_raises_with_position():
+    ds = make_ds()
+    with pytest.raises(faults_lib.ServerKilled) as ei:
+        simgrid.run_grid(
+            init_fn, loss_fn, ds, RC, 50,
+            grid=simgrid.GridConfig(mode="async",
+                                    faults={"server_kill_at": 0.5}), seed=3)
+    assert ei.value.at > 0.5 and ei.value.applied >= 0
+    assert ei.value.checkpoint is None  # checkpointing was off
+
+
+# ---------------------------------------------------------------------------
+# schema v2: the new event kinds validate and export
+
+
+def test_fault_events_validate_against_schema(tmp_path):
+    from repro.obs import schema as schema_lib
+
+    ds = make_ds()
+    jsonl = str(tmp_path / "chaos.jsonl")
+    perfetto = str(tmp_path / "chaos.json")
+    r = simgrid.run_grid(
+        init_fn, loss_fn, ds, RC, 8,
+        grid=simgrid.GridConfig(
+            mode="async", faults="chaos", sanitize=True,
+            checkpoint_every=4, checkpoint_dir=str(tmp_path / "ckpt"),
+            telemetry={"jsonl_path": jsonl, "perfetto_path": perfetto}),
+        seed=3)
+    kinds = {e.kind for e in r.telemetry.events}
+    assert {"fault", "checkpoint"} <= kinds
+    assert not schema_lib.validate_records(
+        [e.to_json() for e in r.telemetry.events])
+    n, errs = schema_lib.validate_jsonl(jsonl)
+    assert not errs and n == len(r.telemetry.events)
+    got, perrs = schema_lib.validate_perfetto(
+        perfetto, require=["fault", "checkpoint"])
+    assert not perrs and got >= 2
+
+
+# ---------------------------------------------------------------------------
+# escalating backoff & retry budget
+
+
+def test_backoff_escalates_capped_with_deterministic_jitter():
+    cfg = dyn_lib.DynamicsConfig(redispatch_backoff=10.0,
+                                 backoff_growth=2.0, backoff_cap=100.0)
+    fleet = simgrid.dev_lib.make_fleet(4, "uniform", seed=0)
+    bd = cfg.bind(fleet, np.random.default_rng(0))
+    seq = [bd.backoff_seconds(k) for k in range(8)]
+    # deterministic: same k -> same backoff, no rng involved
+    assert seq == [bd.backoff_seconds(k) for k in range(8)]
+    # jitter keeps each backoff within [0.75, 1.25) of its base
+    for k, s in enumerate(seq):
+        base = min(10.0 * 2.0 ** k, 100.0)
+        assert 0.75 * base <= s < 1.25 * base
+    # escalation reaches (and never exceeds) the jittered cap
+    assert max(seq) <= 1.25 * 100.0
+    assert seq[5] > seq[0]
+
+
+def test_dark_window_retry_budget_raises():
+    ds = make_ds(4)
+    dark = dyn_lib.StepTrace(times=[0.0], values=[0.0])   # fleet never up
+    dyn = dyn_lib.DynamicsConfig(availability=dark, retry_budget=5_000.0)
+    gc = simgrid.GridConfig(mode="async", dynamics=dyn)
+    with pytest.raises(RuntimeError, match="retry budget"):
+        simgrid.run_grid(init_fn, loss_fn, ds, RC, 3, grid=gc, seed=3)

@@ -1,17 +1,32 @@
-"""Checkpoint-resume equivalence: training R rounds straight equals
-training r rounds, checkpointing (trainable + seed + server state only),
-restoring, and training R-r more — with identical client sampling.
+"""Checkpoint-resume equivalence.
+
+Two layers: (1) model checkpoints (``checkpoint.checkpoint``) — training
+R rounds straight equals training r rounds, checkpointing (trainable +
+seed + server state only), restoring, and training R-r more, with
+identical client sampling; (2) grid-state snapshots
+(``checkpoint.grid_state``) — kill a fault-injected grid run at virtual
+time T, restore its latest mid-run snapshot, continue, and the resumed
+run reproduces the uninterrupted run's history, final ``y`` (bitwise on
+CPU), privacy ledger and wire billing exactly.
 """
+import dataclasses as dc
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 import repro.core.partition as part
 from repro.checkpoint import checkpoint as ckpt
+from repro.checkpoint import grid_state as gstate
+from repro.core import dp as dp_lib
 from repro.core import fedpt
 from repro.data import synthetic as syn
 from repro.models import paper_models as pm
 from repro.nn import basic
+from repro.sim import faults as faults_lib
+from repro.sim import grid as simgrid
 
 
 def _loss(params, b):
@@ -63,3 +78,210 @@ def test_resume_equals_straight_run(tmp_path):
         assert ka == kb
         np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
                                    rtol=1e-6, atol=1e-7)
+
+
+def test_checkpoint_save_load_appends_npz_suffix(tmp_path):
+    """save()/load() agree on the on-disk name even when the caller
+    omits ``.npz`` (np.savez appends it on write; load used to miss)."""
+    y = {"dense": basic.init_dense(0, "dense", 8, 4, jnp.float32,
+                                   bias=True)}
+    bare = str(tmp_path / "model")            # no suffix
+    ckpt.save(bare, y, seed=0, freeze_spec=(), round_num=3)
+    assert (tmp_path / "model.npz").exists()
+    y2, seed, spec, ss, rnd, meta = ckpt.load(bare)
+    assert seed == 0 and rnd == 3
+    for (ka, va), (kb, vb) in zip(basic.flatten_params(y),
+                                  basic.flatten_params(y2)):
+        assert ka == kb
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+
+
+# ---------------------------------------------------------------------------
+# grid-state snapshots: kill -> restore -> continue (chaos marker: these
+# exercise the fault model end to end)
+
+pytest_grid = pytest.mark.chaos
+
+
+def _g_init(seed):
+    return {"dense": basic.init_dense(seed, "dense", 64, 4, jnp.float32,
+                                      bias=True)}
+
+
+def _g_loss(params, b):
+    x = b["images"].reshape(b["images"].shape[0], -1)
+    lp = jax.nn.log_softmax(basic.dense(x, params["dense"]))
+    return -jnp.mean(jnp.take_along_axis(lp, b["labels"][:, None], 1)), {}
+
+
+def _g_ds():
+    return syn.make_federated_images(12, 30, (8, 8, 1), 4, seed=0,
+                                     test_examples=64)
+
+
+G_RC = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0)
+CHAOS = dict(crash_compute=0.05, truncate_upload=0.05, corrupt_nan=0.08,
+             corrupt_bitflip=0.08, duplicate_upload=0.05)
+
+
+def _assert_same_run(a, b):
+    assert [h["loss"] for h in a.history] == [h["loss"] for h in b.history]
+    for ha, hb in zip(a.history, b.history):
+        assert ha["virtual_seconds"] == hb["virtual_seconds"]
+    for (ka, va), (kb, vb) in zip(basic.flatten_params(a.y),
+                                  basic.flatten_params(b.y)):
+        assert ka == kb
+        assert bool(jnp.all(va == vb)), f"{ka} differs after resume"
+    assert a.scheduler_stats == b.scheduler_stats
+    assert a.comm.measured_up_bytes == b.comm.measured_up_bytes
+    assert a.comm.measured_down_bytes == b.comm.measured_down_bytes
+    assert a.dp == b.dp
+
+
+def _kill_then_resume(gbase, killed_cfg, rc, n, seed=3):
+    """Run ``killed_cfg`` until ServerKilled, then resume ``gbase`` from
+    the checkpoint the kill left behind."""
+    ds = _g_ds()
+    with pytest.raises(faults_lib.ServerKilled) as ei:
+        simgrid.run_grid(_g_init, _g_loss, ds, rc, n, grid=killed_cfg,
+                         seed=seed)
+    assert ei.value.checkpoint is not None
+    return simgrid.run_grid(
+        _g_init, _g_loss, ds, rc, n,
+        grid=dc.replace(gbase, resume_from=ei.value.checkpoint), seed=seed)
+
+
+@pytest_grid
+def test_async_kill_resume_bitwise(tmp_path):
+    """The flagship acceptance: chaos faults + sanitize + per-flush DP +
+    jittered dynamics, killed mid-run, resumed from the latest snapshot —
+    history, y, epsilon ledger and wire billing all match the
+    uninterrupted run."""
+    ds = _g_ds()
+    rc = dc.replace(G_RC, dp_clip_norm=1.0, dp_noise_multiplier=0.6)
+    gbase = simgrid.GridConfig(mode="async", faults=CHAOS, sanitize=True,
+                               dynamics="jitter")
+    straight = simgrid.run_grid(_g_init, _g_loss, ds, rc, 8, grid=gbase,
+                                seed=3)
+    # kill between the 5th and 6th flush: checkpoints at applied 2 and 4
+    # exist, and the run still has work to redo after restore
+    T = 0.5 * (straight.history[4]["virtual_seconds"]
+               + straight.history[5]["virtual_seconds"])
+    killed = dc.replace(gbase, faults=dict(CHAOS, server_kill_at=T),
+                        checkpoint_every=2,
+                        checkpoint_dir=str(tmp_path / "ckpt"))
+    resumed = _kill_then_resume(gbase, killed, rc, 8)
+    _assert_same_run(straight, resumed)
+    assert resumed.dp["epsilon"] == straight.dp["epsilon"]
+
+
+@pytest_grid
+def test_sync_kill_resume_bitwise(tmp_path):
+    ds = _g_ds()
+    gbase = simgrid.GridConfig(mode="sync",
+                               faults={"crash_compute": 0.1})
+    straight = simgrid.run_grid(_g_init, _g_loss, ds, G_RC, 8, grid=gbase,
+                                seed=3)
+    T = 0.5 * (straight.history[4]["virtual_seconds"]
+               + straight.history[5]["virtual_seconds"])
+    killed = dc.replace(gbase,
+                        faults={"crash_compute": 0.1, "server_kill_at": T},
+                        checkpoint_every=2,
+                        checkpoint_dir=str(tmp_path / "ckpt"))
+    resumed = _kill_then_resume(gbase, killed, G_RC, 8)
+    _assert_same_run(straight, resumed)
+
+
+@pytest_grid
+def test_async_resume_multitier_adaptive_policy(tmp_path):
+    """Resume carries the whole policy/plan state: a two-tier TrainPlan
+    with the adaptive-capability policy (observed-RTT EMAs, refit maps)
+    continues exactly — kill-only fault config, resumed without faults."""
+    ds = _g_ds()
+    gbase = simgrid.GridConfig(mode="async",
+                               plan={"full": (), "lite": (r"/kernel$",)},
+                               selection="adaptive-capability",
+                               fleet="pareto-mobile", dynamics="jitter")
+    straight = simgrid.run_grid(_g_init, _g_loss, ds, G_RC, 8, grid=gbase,
+                                seed=3)
+    T = 0.5 * (straight.history[5]["virtual_seconds"]
+               + straight.history[6]["virtual_seconds"])
+    killed = dc.replace(gbase, faults={"server_kill_at": T},
+                        checkpoint_every=2,
+                        checkpoint_dir=str(tmp_path / "ckpt"))
+    resumed = _kill_then_resume(gbase, killed, G_RC, 8)
+    _assert_same_run(straight, resumed)
+    assert straight.tier_stats == resumed.tier_stats
+
+
+@pytest_grid
+def test_resume_mode_mismatch_rejected(tmp_path):
+    ds = _g_ds()
+    gsync = simgrid.GridConfig(mode="sync", checkpoint_every=2,
+                               checkpoint_dir=str(tmp_path / "ckpt"))
+    simgrid.run_grid(_g_init, _g_loss, ds, G_RC, 4, grid=gsync, seed=3)
+    snap = gstate.latest(str(tmp_path / "ckpt"))
+    assert snap is not None
+    with pytest.raises(ValueError, match="mode must match"):
+        simgrid.run_grid(
+            _g_init, _g_loss, ds, G_RC, 4,
+            grid=simgrid.GridConfig(mode="async", resume_from=snap),
+            seed=3)
+
+
+@pytest_grid
+def test_grid_state_rejects_legacy_model_checkpoint(tmp_path):
+    """A model checkpoint is not a grid-state snapshot: load_state fails
+    with a pointer to checkpoint.load, which still reads it fine."""
+    y = {"dense": _g_init(0)["dense"]}
+    path = str(tmp_path / "model.npz")
+    ckpt.save(path, y, seed=0, freeze_spec=(), round_num=1)
+    with pytest.raises(ValueError, match="checkpoint.load"):
+        gstate.load_state(path)
+    y2, *_ = ckpt.load(path)
+    np.testing.assert_array_equal(np.asarray(y["dense"]["kernel"]),
+                                  np.asarray(y2["dense"]["kernel"]))
+
+
+@pytest_grid
+def test_grid_state_version_gate(tmp_path):
+    path = gstate.save_state(str(tmp_path / "future"),
+                             {"grid_state_version": 999, "mode": "async"},
+                             {})
+    with pytest.raises(ValueError, match="version 999"):
+        gstate.load_state(path)
+
+
+@pytest_grid
+def test_accountant_ledger_roundtrip():
+    cfg = dp_lib.FlushDPConfig(clip_norm=1.0, noise_multiplier=0.8,
+                               goal_count=5)
+    a = dp_lib.FlushAccountant(cfg)
+    a.record_flush(5, multiplicity=1, now=1.0)
+    a.record_flush(3, multiplicity=2, now=2.0)   # padded, duplicated
+    b = dp_lib.FlushAccountant(cfg)
+    b.load_state(a.state_dict())
+    assert b.summary() == a.summary()
+    assert b.epsilon(1e-5) == a.epsilon(1e-5)
+    # continuing the restored ledger composes identically
+    a.record_flush(5, now=3.0)
+    b.record_flush(5, now=3.0)
+    assert math.isclose(a.epsilon(1e-5), b.epsilon(1e-5), rel_tol=0.0)
+    # a different calibration must refuse the ledger
+    other = dp_lib.FlushAccountant(
+        dp_lib.FlushDPConfig(clip_norm=1.0, noise_multiplier=0.4,
+                             goal_count=5))
+    with pytest.raises(ValueError, match="calibration|sigma|match"):
+        other.load_state(a.state_dict())
+
+
+@pytest_grid
+def test_rng_state_json_roundtrip_exact():
+    import json
+    g = np.random.default_rng(1234)
+    g.standard_normal(17)
+    state = json.loads(json.dumps(gstate.rng_state(g)))
+    h = np.random.default_rng(0)
+    gstate.set_rng_state(h, state)
+    np.testing.assert_array_equal(g.standard_normal(32),
+                                  h.standard_normal(32))
