@@ -1,0 +1,340 @@
+"""Fleet-scale bench: per-object DeviceProfile paths vs FleetState arrays.
+
+Times the two per-run fleet hot paths the struct-of-arrays refactor
+(``sim/devices.FleetState``) replaces, at 10^3 / 10^4 / 10^5 clients:
+
+* ``build``  — fleet construction. The *object* path materializes one
+  ``DeviceProfile`` dataclass per client (the pre-FleetState world; the
+  lazy ``fleet.profiles`` view makes it reproducible here), the
+  *vector* path builds the preset's ``(N,)`` arrays only.
+* ``cohort`` — one over-selected synchronous cohort draw (10% of the
+  fleet): availability/dropout screens, per-member round trips and
+  arrival-order participant selection. The *object* path is the old
+  per-member event-heap loop verbatim (one ``fleet.profile(c)`` +
+  scalar arithmetic + heap push per member); the *vector* path is
+  ``sim/scheduler.plan_sync_round`` — one RNG call per draw kind and
+  array ops end to end. The two consume identical RNG streams and agree
+  bitwise (asserted in --smoke).
+
+Emits the harness's ``name,us_per_call,derived`` CSV rows and writes
+``BENCH_fleet.json`` next to the repo root. ``--smoke`` runs one tiny
+cell per kind, asserts object/vector agreement AND times it; with
+``--gate BENCH_fleet.json`` the smoke timings become a CI regression
+gate — each cell's vector_us must stay within ``--gate-tolerance``
+(default 3x, generous on purpose) of the committed baseline, with an
+absolute ``--gate-floor-us`` under which jitter never flakes the gate.
+``--scale`` is the CI scale smoke: build a 100k-client FleetState, draw
+10 cohorts through the vectorized planner, then run 2 hierarchical
+rounds (4 edge regions + a region shock) on the probe model, all under
+a hard wall-clock budget.
+
+    PYTHONPATH=src python -m benchmarks.fleet_bench [--reps 5]
+    PYTHONPATH=src python -m benchmarks.fleet_bench --smoke \
+        [--gate BENCH_fleet.json] [--gate-tolerance 3.0] [--fresh-out f.json]
+    PYTHONPATH=src python -m benchmarks.fleet_bench --scale \
+        [--budget-seconds 300]
+"""
+from __future__ import annotations
+
+import argparse
+import heapq
+import json
+import math
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.sim import devices as dev_lib
+from repro.sim import scheduler as sched_lib
+
+PRESET = "pareto-mobile"
+DOWN_BYTES = 120_008
+UP_BYTES = 120_000
+COMPUTE_SECONDS = 0.2
+
+
+def per_object_plan(fleet, cids, clients_needed: int,
+                    rng: np.random.Generator, deadline: float = math.inf):
+    """The pre-vectorization sync-round planner, verbatim semantics: one
+    DeviceProfile materialization + scalar arithmetic + event-heap push
+    per cohort member. Consumes the same fixed-count RNG vectors as
+    ``plan_sync_round``, so the two agree bitwise."""
+    cids = np.asarray(cids, np.int64)
+    m = len(cids)
+    avail_u = rng.random(m)
+    drop_u = rng.random(m)
+    arrival = np.full(m, math.inf)
+    heap = []
+    for i in range(m):
+        p = fleet.profile(int(cids[i]))
+        if not avail_u[i] < p.availability:
+            continue
+        if drop_u[i] < p.dropout:
+            continue
+        t = p.round_trip_seconds(DOWN_BYTES, UP_BYTES, COMPUTE_SECONDS)
+        arrival[i] = t
+        heapq.heappush(heap, (t, i))
+    participant = np.zeros(m, bool)
+    round_seconds, taken = 0.0, 0
+    while heap and taken < clients_needed:
+        t, i = heapq.heappop(heap)
+        if t > deadline:
+            break
+        participant[i] = True
+        round_seconds = t
+        taken += 1
+    return participant, arrival, float(round_seconds)
+
+
+def _time(fn, reps: int) -> float:
+    fn()                                      # warm (allocators, caches)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_build_cell(clients: int, reps: int):
+    def vector():
+        return dev_lib.make_fleet(clients, PRESET, seed=0)
+
+    def obj():
+        # the pre-FleetState world: preset draws PLUS one DeviceProfile
+        # dataclass per client
+        return list(dev_lib.make_fleet(clients, PRESET, seed=0).profiles)
+
+    t_obj = _time(obj, reps)
+    t_vec = _time(vector, reps)
+    return {"cell": "build", "clients": clients, "object_us": t_obj * 1e6,
+            "vector_us": t_vec * 1e6, "speedup": t_obj / t_vec}
+
+
+def run_cohort_cell(clients: int, reps: int, check: bool = False):
+    fleet = dev_lib.make_fleet(clients, PRESET, seed=0)
+    m = max(64, clients // 10)
+    needed = max(1, m // 2)
+    cohort_rng = np.random.default_rng(7)
+    cids = cohort_rng.integers(0, clients, m)
+
+    def vector():
+        return sched_lib.plan_sync_round(
+            fleet, cids, DOWN_BYTES, UP_BYTES, COMPUTE_SECONDS, needed,
+            np.random.default_rng(11))
+
+    def obj():
+        return per_object_plan(fleet, cids, needed,
+                               np.random.default_rng(11))
+
+    if check:
+        plan = vector()
+        participant, arrival, round_seconds = obj()
+        assert np.array_equal(plan.participant, participant), \
+            "vectorized participant set diverged from the per-object loop"
+        assert np.array_equal(plan.arrival, arrival), \
+            "vectorized arrivals diverged from the per-object loop"
+        assert plan.round_seconds == round_seconds, \
+            (plan.round_seconds, round_seconds)
+    t_obj = _time(obj, reps)
+    t_vec = _time(vector, reps)
+    return {"cell": "cohort", "clients": clients, "cohort": m,
+            "object_us": t_obj * 1e6, "vector_us": t_vec * 1e6,
+            "speedup": t_obj / t_vec}
+
+
+def run_smoke(reps: int):
+    cells = [run_build_cell(2_000, reps),
+             run_cohort_cell(2_000, reps, check=True)]
+    for c in cells:
+        print(f"fleet/smoke/{c['cell']},{c['vector_us']:.0f},"
+              f"object_us={c['object_us']:.0f};speedup={c['speedup']:.2f}")
+        sys.stdout.flush()
+    print("smoke OK: vectorized cohort plan == per-object loop, bitwise")
+    return cells
+
+
+def gate_smoke(cells, baseline_path: str, tolerance: float,
+               floor_us: float = 20_000.0) -> int:
+    """Regression gate: fresh smoke vector_us vs the committed baseline
+    (same idiom as agg_bench: limit = max(tolerance * baseline,
+    floor_us), so shared-runner jitter under the floor never flakes the
+    gate while an order-of-magnitude regression still fails)."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    ref = {c["cell"]: c for c in base.get("smoke", [])}
+    if not ref:
+        raise SystemExit(
+            f"bench gate ERROR: {baseline_path} has no 'smoke' section — "
+            "not a performance regression; regenerate the baseline with "
+            "--smoke --fresh-out (or the full bench) and commit it")
+    bad = 0
+    for c in cells:
+        b = ref.get(c["cell"])
+        if b is None:
+            raise SystemExit(
+                f"bench gate ERROR: baseline {baseline_path} is missing "
+                f"cell {c['cell']!r} — not a performance regression; "
+                "regenerate and commit the baseline")
+        limit = max(tolerance * b["vector_us"], floor_us)
+        verdict = "ok" if c["vector_us"] <= limit else "REGRESSION"
+        print(f"gate/{c['cell']}: vector {c['vector_us']:.0f}us vs "
+              f"baseline {b['vector_us']:.0f}us (limit {limit:.0f}us = "
+              f"max({tolerance:g}x, {floor_us:.0f}us floor)) -> {verdict}")
+        if c["vector_us"] > limit:
+            bad += 1
+    return bad
+
+
+def run_scale(budget_seconds: float) -> None:
+    """The CI scale smoke: 100k-client FleetState + 10 vectorized cohort
+    draws, then 2 hierarchical rounds on the probe model — all under one
+    hard wall-clock budget. (The dataset stays small: the federated
+    image sets materialize per-client arrays eagerly, so the 100k part
+    exercises fleet/scheduler scale and the grid part exercises the
+    topology machinery.)"""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import fedpt
+    from repro.data import synthetic as syn
+    from repro.nn import basic
+    from repro.sim import grid as grid_lib
+    from repro.sim.dynamics import DynamicsConfig, RegionShocks
+
+    t0 = time.perf_counter()
+    N = 100_000
+    fleet = dev_lib.make_fleet(N, PRESET, seed=0)
+    assert len(fleet) == N and fleet.state.downlink_bps.shape == (N,)
+    t_build = time.perf_counter() - t0
+    print(f"scale/build_100k,{t_build * 1e6:.0f},clients={N}")
+
+    rng = np.random.default_rng(3)
+    t1 = time.perf_counter()
+    total_participants = 0
+    for _ in range(10):
+        cids = rng.integers(0, N, 10_000)
+        plan = sched_lib.plan_sync_round(
+            fleet, cids, DOWN_BYTES, UP_BYTES, COMPUTE_SECONDS, 5_000, rng)
+        total_participants += int(np.sum(plan.participant))
+    t_draws = time.perf_counter() - t1
+    assert total_participants == 50_000, total_participants
+    print(f"scale/cohort_draws_10x10k,{t_draws * 1e6:.0f},"
+          f"participants={total_participants}")
+
+    def init_fn(seed):
+        return {"dense": basic.init_dense(seed, "dense", 64, 4,
+                                          jnp.float32, bias=True)}
+
+    def loss_fn(params, b):
+        x = b["images"].reshape(b["images"].shape[0], -1)
+        lp = jax.nn.log_softmax(basic.dense(x, params["dense"]))
+        return -jnp.mean(jnp.take_along_axis(lp, b["labels"][:, None],
+                                             1)), {}
+
+    t2 = time.perf_counter()
+    ds = syn.make_federated_images(32, 24, (8, 8, 1), 4, seed=0)
+    rc = fedpt.RoundConfig(8, 2, 8, "sgd", 0.1, "sgd", 1.0)
+    res = grid_lib.run_grid(
+        init_fn, loss_fn, ds, rc, 2,
+        grid_lib.GridConfig(
+            mode="sync", fleet=PRESET, topology=4,
+            dynamics=DynamicsConfig(shocks=RegionShocks(
+                every=0.5, duration=0.4, residual=0.0))),
+        seed=0)
+    t_grid = time.perf_counter() - t2
+    assert len(res.history) == 2
+    ce = res.comm.hop_traffic["client_edge"]
+    assert ce["down_bytes"] == res.comm.measured_down_bytes
+    assert ce["up_bytes"] == res.comm.measured_up_bytes
+    assert "edge_server" in res.comm.hop_traffic
+    print(f"scale/hierarchical_2rounds,{t_grid * 1e6:.0f},"
+          f"regions=4;hop_up_mb="
+          f"{res.comm.hop_table()['edge_server']['up_mb']:.3f}")
+
+    elapsed = time.perf_counter() - t0
+    print(f"scale smoke: {elapsed:.1f}s (budget {budget_seconds:.0f}s)")
+    if elapsed > budget_seconds:
+        sys.exit(f"scale smoke BLEW ITS BUDGET: {elapsed:.1f}s > "
+                 f"{budget_seconds:.0f}s wall-clock")
+    print("scale smoke passed")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny cells: correctness asserts + quick timings")
+    ap.add_argument("--scale", action="store_true",
+                    help="100k-client scale smoke under a wall-clock "
+                         "budget (the CI scale job)")
+    ap.add_argument("--budget-seconds", type=float, default=300.0)
+    ap.add_argument("--reps", type=int, default=4)
+    ap.add_argument("--gate", default=None, metavar="BASELINE_JSON",
+                    help="with --smoke: fail if any cell's vector_us "
+                         "exceeds gate-tolerance x the baseline's smoke "
+                         "timing")
+    ap.add_argument("--gate-tolerance", type=float, default=3.0)
+    ap.add_argument("--gate-floor-us", type=float, default=20_000.0,
+                    help="absolute per-cell limit floor (container noise)")
+    ap.add_argument("--fresh-out", default=None, metavar="JSON",
+                    help="with --smoke: write the fresh smoke cells here")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_fleet.json"))
+    args = ap.parse_args(argv)
+
+    if args.scale:
+        run_scale(args.budget_seconds)
+        return
+
+    if args.smoke:
+        cells = run_smoke(reps=max(1, min(args.reps, 3)))
+        if args.fresh_out:
+            with open(args.fresh_out, "w") as f:
+                json.dump({"smoke": cells}, f, indent=1)
+            print(f"wrote {args.fresh_out}")
+        if args.gate:
+            bad = gate_smoke(cells, args.gate, args.gate_tolerance,
+                             floor_us=args.gate_floor_us)
+            if bad:
+                sys.exit(f"bench gate FAILED: {bad} cell(s) regressed "
+                         f"past {args.gate_tolerance:g}x baseline")
+            print("bench gate passed")
+        return
+
+    # the full bench also records the smoke cells, so a regenerated
+    # BENCH_fleet.json always carries the baseline the CI gate reads
+    smoke_cells = run_smoke(reps=args.reps)
+    cells = []
+    for clients in (1_000, 10_000, 100_000):
+        for kind, runner in (("build", run_build_cell),
+                             ("cohort", run_cohort_cell)):
+            cell = runner(clients, args.reps)
+            cells.append(cell)
+            print(f"fleet/{kind}/c{clients},{cell['vector_us']:.0f},"
+                  f"object_us={cell['object_us']:.0f}"
+                  f";speedup={cell['speedup']:.2f}")
+            sys.stdout.flush()
+
+    head = next(c for c in cells
+                if c["cell"] == "cohort" and c["clients"] == 100_000)
+    if head["speedup"] < 10.0:
+        sys.exit(f"headline FAILED: cohort draw at 100k clients is only "
+                 f"{head['speedup']:.1f}x over the per-object path "
+                 "(needs >= 10x)")
+    out = {"preset": PRESET,
+           "down_bytes": DOWN_BYTES, "up_bytes": UP_BYTES,
+           "compute_seconds": COMPUTE_SECONDS,
+           "smoke": smoke_cells,
+           "headline": head,
+           "cells": cells}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"# cohort @100k: {head['speedup']:.1f}x "
+          f"({head['object_us']:.0f}us -> {head['vector_us']:.0f}us); "
+          f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

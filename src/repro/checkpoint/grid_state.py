@@ -191,9 +191,34 @@ def _restore_work(wm: Dict[str, Any], delta, loss,
     return work
 
 
+def _topology_meta(topo) -> Optional[Dict[str, int]]:
+    return (None if topo is None
+            else {"regions": int(topo.num_regions),
+                  "clients": int(topo.num_clients)})
+
+
+def _check_topology(meta: Dict[str, Any], topo, shocks) -> None:
+    """A snapshot taken under a topology / shock model must resume under
+    the same one: the region counters, hop ledger and shock RNG stream
+    in the snapshot are meaningless otherwise."""
+    tm = meta.get("topology")
+    if (tm is not None) != (topo is not None) or (
+            tm is not None and tm["regions"] != int(topo.num_regions)):
+        raise ValueError(
+            f"checkpointed topology {tm!r} does not match this run's "
+            "GridConfig.topology — resume with the same region layout")
+    if (meta.get("shocks") is not None) != (shocks is not None):
+        raise ValueError(
+            "checkpointed shock state does not match this run's "
+            "DynamicsConfig.shocks — resume with the same shock model")
+    if shocks is not None:
+        shocks.load_state(meta["shocks"])
+
+
 def encode_async(*, state: Dict[str, Any], sched, rngs, accountant,
-                 policy, registry) -> Tuple[Dict[str, Any],
-                                            Dict[str, np.ndarray]]:
+                 policy, registry, shocks=None,
+                 topo=None) -> Tuple[Dict[str, Any],
+                                     Dict[str, np.ndarray]]:
     """Snapshot a BufferedAsyncScheduler run at a flush boundary.
 
     ``rngs`` maps stream names to the run's live Generators (data /
@@ -248,13 +273,15 @@ def encode_async(*, state: Dict[str, Any], sched, rngs, accountant,
                        if accountant is not None else None),
         "policy": policy.state_dict(),
         "metrics": registry.state_dict(),
+        "topology": _topology_meta(topo),
+        "shocks": shocks.state_dict() if shocks is not None else None,
     }
     return meta, arrays
 
 
 def decode_async(meta: Dict[str, Any], arrays: Dict[str, np.ndarray], *,
                  state: Dict[str, Any], sched, sstate_template, rngs,
-                 accountant, policy, registry,
+                 accountant, policy, registry, shocks=None, topo=None,
                  make_cell=None) -> List[Dict[str, Any]]:
     """Restore a snapshot into a freshly-constructed scheduler + state
     dict, before ``sched.run`` is called. Returns the restored history
@@ -266,6 +293,7 @@ def decode_async(meta: Dict[str, Any], arrays: Dict[str, np.ndarray], *,
         raise ValueError("checkpointed DP state does not match this "
                          "run's dp_* settings — resume with the same "
                          "RoundConfig DP configuration")
+    _check_topology(meta, topo, shocks)
     state["y"] = unpack_tree("y", arrays)
     state["sstate"] = unpack_leaves("s", arrays, sstate_template)
     state["applied"] = int(meta["applied"])
@@ -320,8 +348,9 @@ def decode_async(meta: Dict[str, Any], arrays: Dict[str, np.ndarray], *,
 
 
 def encode_sync(*, y, sstate, round_idx: int, now: float, history, rngs,
-                policy, registry, report) -> Tuple[Dict[str, Any],
-                                                   Dict[str, np.ndarray]]:
+                policy, registry, report, shocks=None,
+                topo=None) -> Tuple[Dict[str, Any],
+                                    Dict[str, np.ndarray]]:
     """Snapshot a sync run after round ``round_idx`` finished (the next
     round to run is ``round_idx + 1``). The comm ledger is billed per
     round in sync mode, so its measured totals ride along."""
@@ -340,18 +369,23 @@ def encode_sync(*, y, sstate, round_idx: int, now: float, history, rngs,
         "comm": {"measured_down_bytes": int(report.measured_down_bytes),
                  "measured_up_bytes": int(report.measured_up_bytes),
                  "transfers": int(report.transfers),
-                 "tier_traffic": report.tier_traffic},
+                 "tier_traffic": report.tier_traffic,
+                 "hop_traffic": report.hop_traffic},
+        "topology": _topology_meta(topo),
+        "shocks": shocks.state_dict() if shocks is not None else None,
     }
     return meta, arrays
 
 
 def decode_sync(meta: Dict[str, Any], arrays: Dict[str, np.ndarray], *,
-                sstate_template, rngs, policy, registry, report):
+                sstate_template, rngs, policy, registry, report,
+                shocks=None, topo=None):
     """Returns (y, sstate, next_round, now, history) and restores the
     rng / policy / metrics / comm state in place."""
     if meta["mode"] != "sync":
         raise ValueError(f"cannot resume a {meta['mode']!r} snapshot in "
                          "sync mode — GridConfig.mode must match")
+    _check_topology(meta, topo, shocks)
     y = unpack_tree("y", arrays)
     sstate = unpack_leaves("s", arrays, sstate_template)
     for name, g in rngs.items():
@@ -364,5 +398,8 @@ def decode_sync(meta: Dict[str, Any], arrays: Dict[str, np.ndarray], *,
     report.transfers = int(c["transfers"])
     report.tier_traffic = {name: dict(rec)
                            for name, rec in c["tier_traffic"].items()}
+    report.hop_traffic = {name: dict(rec)
+                          for name, rec in c.get("hop_traffic",
+                                                 {}).items()}
     return (y, sstate, int(meta["round"]) + 1, float(meta["now"]),
             list(meta["history"]))

@@ -56,6 +56,21 @@ class CommReport:
     # downloads the full trainable tree — see core/plan.py).
     tier_traffic: Dict[str, Dict[str, int]] = dataclasses.field(
         default_factory=dict)
+    # per-hop breakdown under a two-level topology (sim/topology.py):
+    # hop name ("client_edge" / "edge_server") -> {down_bytes, up_bytes,
+    # transfers, uploads}. The client_edge hop carries exactly the
+    # transfers the legacy measured_* totals meter (hop == global totals
+    # by construction); the edge_server hop is the *additional* traffic
+    # hierarchical aggregation introduces — one pre-reduced flat buffer
+    # up and one model payload down per active region per flush.
+    hop_traffic: Dict[str, Dict[str, int]] = dataclasses.field(
+        default_factory=dict)
+    # set by the grid when a topology is active: every add_measured /
+    # add_tier_measured call then mirrors into hop_traffic["client_edge"]
+    # (one metering entry point, so the hop ledger can never drift from
+    # the legacy totals). Plumbing, not ledger state.
+    bill_hops: bool = dataclasses.field(default=False, repr=False,
+                                        compare=False)
     # the telemetry tracer the grid threads through (obs/trace.py):
     # tier-sliced wire billing emits one ``tier_upload`` instant per
     # metered batch. NULL_TRACER (the default) emits nothing; never
@@ -115,6 +130,9 @@ class CommReport:
         self.measured_down_bytes += int(down_bytes)
         self.measured_up_bytes += int(up_bytes)
         self.transfers += int(transfers)
+        if self.bill_hops:
+            self.add_hop("client_edge", down_bytes=down_bytes,
+                         up_bytes=up_bytes, transfers=transfers)
 
     def add_tier_measured(self, tier: str, down_bytes: int, up_bytes: int,
                           transfers: int = 1, uploads: int = 0,
@@ -138,6 +156,21 @@ class CommReport:
                             transfers=int(transfers),
                             uploads=int(uploads))
 
+    def add_hop(self, hop: str, down_bytes: int = 0, up_bytes: int = 0,
+                transfers: int = 0, uploads: int = 0) -> None:
+        """Accumulate observed bytes on one topology hop. The
+        ``client_edge`` hop is fed automatically by ``add_measured`` when
+        ``bill_hops`` is set; the grid calls this directly for the
+        ``edge_server`` hop (edge flush buffers + per-region downlink
+        fan-out), which the legacy single-hop totals do NOT include."""
+        rec = self.hop_traffic.setdefault(
+            hop, {"down_bytes": 0, "up_bytes": 0, "transfers": 0,
+                  "uploads": 0})
+        rec["down_bytes"] += int(down_bytes)
+        rec["up_bytes"] += int(up_bytes)
+        rec["transfers"] += int(transfers)
+        rec["uploads"] += int(uploads)
+
     @property
     def measured_total_bytes(self) -> int:
         return self.measured_down_bytes + self.measured_up_bytes
@@ -153,6 +186,17 @@ class CommReport:
             out[name]["up_mb"] = rec["up_bytes"] / mb
             out[name]["up_bytes_per_upload"] = (
                 rec["up_bytes"] / rec["uploads"] if rec["uploads"] else 0.0)
+        return out
+
+    def hop_table(self) -> Dict[str, Dict[str, float]]:
+        """Per-hop measured traffic with MB columns (README's hop ledger
+        table / the --regions example's report)."""
+        mb = 1024.0 * 1024.0
+        out = {}
+        for name, rec in self.hop_traffic.items():
+            out[name] = dict(rec)
+            out[name]["down_mb"] = rec["down_bytes"] / mb
+            out[name]["up_mb"] = rec["up_bytes"] / mb
         return out
 
 

@@ -7,8 +7,10 @@ process/thread tracks, so a run opens directly in ``ui.perfetto.dev``
 * process "server" — round spans, flush and ``checkpoint`` instants on
   one track, ``dp_flush`` accounting instants on a "privacy" track,
   ``tier_upload`` wire-billing instants on a "wire" track, injected
-  ``fault`` firings and sanitize ``quarantine`` instants on a "faults"
-  track, parked-dispatch ``retry`` instants alongside the rounds;
+  ``fault`` firings, sanitize ``quarantine`` instants and correlated
+  region ``shock`` firings on a "faults" track, ``edge_flush``
+  pre-reduce instants on an "edges" track, parked-dispatch ``retry``
+  instants alongside the rounds;
 * process "clients" — one thread track per client id, carrying that
   client's ``dispatch`` round-trip spans and ``upload`` arrival
   instants.
@@ -28,8 +30,10 @@ _SERVER_PID = 0
 _CLIENT_PID = 1
 _SERVER_TIDS = {"round": 0, "flush": 0, "retry": 0, "checkpoint": 0,
                 "dp_flush": 1, "tier_upload": 2,
-                "fault": 3, "quarantine": 3}
-_SERVER_TID_NAMES = {0: "rounds", 1: "privacy", 2: "wire", 3: "faults"}
+                "fault": 3, "quarantine": 3, "shock": 3,
+                "edge_flush": 4}
+_SERVER_TID_NAMES = {0: "rounds", 1: "privacy", 2: "wire", 3: "faults",
+                     4: "edges"}
 
 
 def record_json(rec) -> Dict[str, Any]:

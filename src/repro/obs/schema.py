@@ -21,10 +21,12 @@ import json
 import math
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
-SCHEMA_VERSION = 2
-# schema v2 added the fault/quarantine/checkpoint kinds; v1 streams are
-# a strict subset and stay valid
-ACCEPTED_VERSIONS = (1, 2)
+SCHEMA_VERSION = 3
+# schema v2 added the fault/quarantine/checkpoint kinds; v3 added the
+# edge_flush/shock kinds and the optional region field on
+# dispatch/upload (sim/topology.py). Earlier streams are strict subsets
+# and stay valid.
+ACCEPTED_VERSIONS = (1, 2, 3)
 
 _NUM = (int, float)
 _INT = (int,)
@@ -39,12 +41,12 @@ EVENT_SCHEMA: Dict[str, Tuple[Dict[str, tuple], Dict[str, tuple]]] = {
     # one client round trip attempt, dispatch -> upload-complete (span;
     # dur is null when the client never finishes: sync dropout)
     "dispatch": ({"cid": _INT},
-                 {"tier": _INT, "down_bytes": _INT, "up_bytes": _INT,
-                  "version": _INT, "outcome": _STR}),
+                 {"tier": _INT, "region": _INT, "down_bytes": _INT,
+                  "up_bytes": _INT, "version": _INT, "outcome": _STR}),
     # a delta arriving at the server (instant)
     "upload": ({"cid": _INT, "up_bytes": _INT},
-               {"tier": _INT, "staleness": _INT, "rtt": _NUM,
-                "participant": _BOOL}),
+               {"tier": _INT, "region": _INT, "staleness": _INT,
+                "rtt": _NUM, "participant": _BOOL}),
     # a dispatch slot parked by a dark availability window (instant)
     "retry": ({}, {"backoff": _NUM}),
     # one buffered async server update (instant at apply time)
@@ -77,6 +79,18 @@ EVENT_SCHEMA: Dict[str, Tuple[Dict[str, tuple], Dict[str, tuple]]] = {
     "checkpoint": ({"path": _STR},
                    {"applied": _INT, "round": _INT, "mode": _STR,
                     "buffer_fill": _NUM, "events_in_flight": _INT}),
+    # --- schema v3 (sim/topology.py) ---
+    # one edge aggregator forwarding its pre-reduced flat buffer
+    # upstream (instant at the flush/round that drained it): fill = how
+    # many client rows it reduced, up_bytes = the buffer's wire size
+    "edge_flush": ({"region": _INT},
+                   {"fill": _INT, "up_bytes": _INT, "norm": _NUM,
+                    "round": _INT, "flush": _INT}),
+    # one correlated region outage firing (sim/dynamics.RegionShocks):
+    # the region's clients' availability is scaled by residual until
+    # virtual time ``until`` (instant at the outage start)
+    "shock": ({"region": _INT},
+              {"duration": _NUM, "residual": _NUM, "until": _NUM}),
 }
 
 KINDS = tuple(EVENT_SCHEMA)

@@ -8,12 +8,15 @@ wire-level communication metering.
 ``fl.runtime.run_federated`` is the homogeneous-synchronous special case
 of ``sim.grid.run_grid``.
 """
-from repro.sim.devices import (DeviceProfile, Fleet, make_fleet,
+from repro.sim.devices import (DeviceProfile, Fleet, FleetState, make_fleet,
                                FLEET_PRESETS, assign_tiers,
                                capability_score, quantile_tiers)
 from repro.sim.dynamics import (LinkModel, AvailabilityTrace, AlwaysOn,
                                 DiurnalTrace, StepTrace, DynamicsConfig,
-                                DYNAMICS_PRESETS, resolve_dynamics)
+                                RegionShocks, DYNAMICS_PRESETS,
+                                resolve_dynamics)
+from repro.sim.topology import (TopologyConfig, Topology, resolve_topology,
+                                edge_reduce)
 from repro.obs.trace import TelemetryConfig
 from repro.sim.grid import GridConfig, GridResult, run_grid
 from repro.sim.scheduler import (EventQueue, SyncRoundPlan, plan_sync_round,

@@ -1,10 +1,14 @@
 """Client population model for the simulation grid.
 
-Each client gets a :class:`DeviceProfile` — link bandwidths, a compute
-multiplier (how much slower than the reference device its local steps
-run), an availability probability (is it online when the server samples
-it) and a mid-round dropout probability. Profiles are sampled from named
-**fleet presets**:
+The fleet is stored as a :class:`FleetState` **struct-of-arrays**: one
+numpy array per device attribute (link bandwidths, compute multiplier,
+availability, dropout, per-device link-model parameters, tier id) rather
+than one Python object per client. At 10^6 clients the arrays cost a few
+MB and every fleet-wide query (cohort RTT estimates, capability scoring,
+availability screens) is one vectorized op; :class:`DeviceProfile` is
+kept as a **lazy per-index view** for callers that want one device.
+
+Profiles are sampled from named **fleet presets**:
 
 ``uniform``
     Every client identical, on the paper's measured cross-device links
@@ -33,7 +37,7 @@ it) and a mid-round dropout probability. Profiles are sampled from named
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Union
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -65,15 +69,162 @@ class DeviceProfile:
 
 
 @dataclasses.dataclass
-class Fleet:
-    name: str
-    profiles: List[DeviceProfile]
+class FleetState:
+    """Struct-of-arrays device state, one ``(num_clients,)`` array per
+    attribute. ``link_sigma``/``link_rtt`` hold the per-device
+    :class:`~repro.sim.dynamics.LinkModel` parameters where ``has_link``
+    is True (0.0 elsewhere); ``tier`` is filled in by
+    :func:`assign_tiers` when a trainability plan is active."""
+
+    downlink_bps: np.ndarray
+    uplink_bps: np.ndarray
+    compute_multiplier: np.ndarray
+    availability: np.ndarray
+    dropout: np.ndarray
+    link_sigma: np.ndarray
+    link_rtt: np.ndarray
+    has_link: np.ndarray                 # bool: per-device link override?
+    tier: Optional[np.ndarray] = None    # (num_clients,) int32 or None
+
+    def __post_init__(self):
+        n = len(self.downlink_bps)
+        for name in ("downlink_bps", "uplink_bps", "compute_multiplier",
+                     "availability", "dropout", "link_sigma", "link_rtt"):
+            arr = np.ascontiguousarray(getattr(self, name), np.float64)
+            if arr.shape != (n,):
+                raise ValueError(f"FleetState.{name} has shape {arr.shape}, "
+                                 f"expected ({n},)")
+            setattr(self, name, arr)
+        self.has_link = np.ascontiguousarray(self.has_link, bool)
+        if self.has_link.shape != (n,):
+            raise ValueError("FleetState.has_link shape mismatch")
+
+    @classmethod
+    def of(cls, num_clients: int, *, downlink_bps, uplink_bps,
+           compute_multiplier=1.0, availability=1.0, dropout=0.0,
+           link_sigma=0.0, link_rtt=0.0, has_link=False) -> "FleetState":
+        """Build a state from scalars or arrays (scalars broadcast)."""
+        n = int(num_clients)
+        full = lambda v, dt=np.float64: np.full(n, v, dt) \
+            if np.ndim(v) == 0 else np.asarray(v, dt)
+        return cls(downlink_bps=full(downlink_bps),
+                   uplink_bps=full(uplink_bps),
+                   compute_multiplier=full(compute_multiplier),
+                   availability=full(availability),
+                   dropout=full(dropout),
+                   link_sigma=full(link_sigma),
+                   link_rtt=full(link_rtt),
+                   has_link=full(has_link, bool))
+
+    @classmethod
+    def from_profiles(cls, profiles: Sequence[DeviceProfile]) -> "FleetState":
+        links = [getattr(p, "link_model", None) for p in profiles]
+        return cls(
+            downlink_bps=np.array([p.downlink_bps for p in profiles],
+                                  np.float64),
+            uplink_bps=np.array([p.uplink_bps for p in profiles], np.float64),
+            compute_multiplier=np.array(
+                [p.compute_multiplier for p in profiles], np.float64),
+            availability=np.array([p.availability for p in profiles],
+                                  np.float64),
+            dropout=np.array([p.dropout for p in profiles], np.float64),
+            link_sigma=np.array([lm.jitter_sigma if lm else 0.0
+                                 for lm in links], np.float64),
+            link_rtt=np.array([lm.rtt_seconds if lm else 0.0
+                               for lm in links], np.float64),
+            has_link=np.array([lm is not None for lm in links], bool))
 
     def __len__(self) -> int:
-        return len(self.profiles)
+        return len(self.downlink_bps)
 
     def profile(self, cid: int) -> DeviceProfile:
-        return self.profiles[int(cid)]
+        """Lazy per-index view: materialize one DeviceProfile."""
+        i = int(cid)
+        lm = dyn_lib.LinkModel(jitter_sigma=float(self.link_sigma[i]),
+                               rtt_seconds=float(self.link_rtt[i])) \
+            if self.has_link[i] else None
+        return DeviceProfile(downlink_bps=float(self.downlink_bps[i]),
+                             uplink_bps=float(self.uplink_bps[i]),
+                             compute_multiplier=float(
+                                 self.compute_multiplier[i]),
+                             availability=float(self.availability[i]),
+                             dropout=float(self.dropout[i]),
+                             link_model=lm)
+
+    def round_trip_seconds(self, down_bytes, up_bytes, compute_seconds,
+                           cids: Optional[np.ndarray] = None) -> np.ndarray:
+        """Vectorized static round-trip times; any of the payload/compute
+        args may be scalars or per-client arrays. Elementwise this is
+        exactly ``DeviceProfile.round_trip_seconds`` (same float64 ops in
+        the same association)."""
+        if cids is None:
+            dl, ul, cm = (self.downlink_bps, self.uplink_bps,
+                          self.compute_multiplier)
+        else:
+            idx = np.asarray(cids)
+            dl, ul, cm = (self.downlink_bps[idx], self.uplink_bps[idx],
+                          self.compute_multiplier[idx])
+        return (np.asarray(down_bytes, np.float64) / dl
+                + np.asarray(compute_seconds, np.float64) * cm
+                + np.asarray(up_bytes, np.float64) / ul)
+
+    def capability_scores(self) -> np.ndarray:
+        """Vectorized :func:`capability_score` over the whole fleet."""
+        link = (self.downlink_bps * self.uplink_bps) ** 0.5
+        return link / np.maximum(self.compute_multiplier, 1e-9)
+
+
+class _ProfileView(Sequence):
+    """Lazy sequence of DeviceProfile views over a FleetState — supports
+    ``len``, indexing (int or slice) and iteration without ever holding
+    N profile objects at once."""
+
+    def __init__(self, state: FleetState):
+        self._state = state
+
+    def __len__(self) -> int:
+        return len(self._state)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self._state.profile(j)
+                    for j in range(*i.indices(len(self._state)))]
+        n = len(self._state)
+        j = int(i)
+        if j < 0:
+            j += n
+        if not 0 <= j < n:
+            raise IndexError(i)
+        return self._state.profile(j)
+
+
+class Fleet:
+    """A named client population. Construct from a ``FleetState``
+    (preferred at scale) or from an explicit profile list (the pre-SoA
+    API, kept for tests and hand-built fleets); ``.profiles`` is always
+    a lazy per-index view over the arrays."""
+
+    def __init__(self, name: str,
+                 profiles: Optional[Sequence[DeviceProfile]] = None,
+                 state: Optional[FleetState] = None):
+        if (profiles is None) == (state is None):
+            raise ValueError("Fleet needs exactly one of profiles= / state=")
+        self.name = name
+        self.state = state if state is not None \
+            else FleetState.from_profiles(list(profiles))
+
+    def __repr__(self) -> str:
+        return f"Fleet(name={self.name!r}, clients={len(self)})"
+
+    @property
+    def profiles(self) -> _ProfileView:
+        return _ProfileView(self.state)
+
+    def __len__(self) -> int:
+        return len(self.state)
+
+    def profile(self, cid: int) -> DeviceProfile:
+        return self.state.profile(cid)
 
     def round_trip_seconds(self, cid: int, down_bytes: int, up_bytes: int,
                            compute_seconds: float) -> float:
@@ -81,63 +232,61 @@ class Fleet:
                                                     compute_seconds)
 
     def summary(self) -> Dict[str, float]:
-        dl = np.array([p.downlink_bps for p in self.profiles])
-        ul = np.array([p.uplink_bps for p in self.profiles])
-        cm = np.array([p.compute_multiplier for p in self.profiles])
+        st = self.state
         return {
-            "clients": float(len(self.profiles)),
-            "downlink_mbps_median": float(np.median(dl)) / MB,
-            "uplink_mbps_median": float(np.median(ul)) / MB,
-            "compute_mult_p90": float(np.quantile(cm, 0.9)),
-            "availability_mean": float(np.mean(
-                [p.availability for p in self.profiles])),
+            "clients": float(len(st)),
+            "downlink_mbps_median": float(np.median(st.downlink_bps)) / MB,
+            "uplink_mbps_median": float(np.median(st.uplink_bps)) / MB,
+            "compute_mult_p90": float(np.quantile(st.compute_multiplier,
+                                                  0.9)),
+            "availability_mean": float(np.mean(st.availability)),
         }
 
 
 # ---------------------------------------------------------------------------
-# Presets
+# Presets (each builds a FleetState directly — no per-client objects;
+# the RNG call sequences are byte-identical to the old per-object
+# builders, so seeded fleets are unchanged)
 
 
-def _uniform(num_clients: int, rng: np.random.Generator) -> List[DeviceProfile]:
-    p = DeviceProfile(downlink_bps=comm.DOWNLINK_MBPS * MB,
-                      uplink_bps=comm.UPLINK_MBPS * MB,
-                      compute_multiplier=1.0)
-    return [p] * num_clients
+def _uniform(num_clients: int, rng: np.random.Generator) -> FleetState:
+    return FleetState.of(num_clients,
+                         downlink_bps=comm.DOWNLINK_MBPS * MB,
+                         uplink_bps=comm.UPLINK_MBPS * MB,
+                         compute_multiplier=1.0)
 
-def _pareto_mobile(num_clients: int,
-                   rng: np.random.Generator) -> List[DeviceProfile]:
+
+def _pareto_mobile(num_clients: int, rng: np.random.Generator) -> FleetState:
     # Pareto(alpha) slowdown factors >= 1 -> bandwidths at or below the
     # reference links, with a heavy tail of very slow phones.
     slow_dl = 1.0 + rng.pareto(2.5, num_clients)
     slow_ul = 1.0 + rng.pareto(2.5, num_clients)
     cmult = np.clip(rng.lognormal(0.25, 0.5, num_clients), 0.5, 10.0)
-    return [DeviceProfile(downlink_bps=comm.DOWNLINK_MBPS * MB / slow_dl[i],
-                          uplink_bps=comm.UPLINK_MBPS * MB / slow_ul[i],
-                          compute_multiplier=float(cmult[i]),
-                          availability=0.8, dropout=0.1)
-            for i in range(num_clients)]
+    return FleetState.of(num_clients,
+                         downlink_bps=comm.DOWNLINK_MBPS * MB / slow_dl,
+                         uplink_bps=comm.UPLINK_MBPS * MB / slow_ul,
+                         compute_multiplier=cmult,
+                         availability=0.8, dropout=0.1)
+
 
 def _pareto_mobile_diurnal(num_clients: int,
-                           rng: np.random.Generator) -> List[DeviceProfile]:
+                           rng: np.random.Generator) -> FleetState:
     # the pareto-mobile fleet, each phone with its own stochastic link:
     # jitter sigma drawn per device (flaky phones are flakier), one
     # shared 200ms latency floor. The grid pairs this preset with the
     # "diurnal" availability trace by default (dynamics.py).
     base = _pareto_mobile(num_clients, rng)
     sigmas = rng.uniform(0.1, 0.4, num_clients)
-    return [dataclasses.replace(
-        p, link_model=dyn_lib.LinkModel(jitter_sigma=float(sigmas[i]),
-                                        rtt_seconds=0.2))
-        for i, p in enumerate(base)]
+    return dataclasses.replace(base, link_sigma=sigmas,
+                               link_rtt=np.full(num_clients, 0.2),
+                               has_link=np.ones(num_clients, bool))
 
 
-def _cross_silo(num_clients: int,
-                rng: np.random.Generator) -> List[DeviceProfile]:
+def _cross_silo(num_clients: int, rng: np.random.Generator) -> FleetState:
     bw = 125.0 * MB  # ~1 Gb/s symmetric
     cmult = rng.uniform(0.8, 1.2, num_clients)
-    return [DeviceProfile(downlink_bps=bw, uplink_bps=bw,
-                          compute_multiplier=float(cmult[i]))
-            for i in range(num_clients)]
+    return FleetState.of(num_clients, downlink_bps=bw, uplink_bps=bw,
+                         compute_multiplier=cmult)
 
 
 # ---------------------------------------------------------------------------
@@ -149,7 +298,8 @@ def capability_score(p: DeviceProfile) -> float:
     compute slowdown. Higher = more capable = lower (more-trainable)
     tier. Uplink dominates the FedPT round trip (0.25 vs 0.75 MB/s
     reference links), and slow compute delays the upload just the same,
-    so both enter the score."""
+    so both enter the score. The fleet-wide version is the vectorized
+    :meth:`FleetState.capability_scores`."""
     link = (p.downlink_bps * p.uplink_bps) ** 0.5
     return link / max(p.compute_multiplier, 1e-9)
 
@@ -179,6 +329,7 @@ def assign_tiers(fleet: Fleet, n_tiers: int,
     the more capable tier, so a homogeneous fleet lands entirely in
     tier 0 — i.e. the plan's ``full`` tier), a callable
     ``profile -> tier index``, or an explicit per-client index sequence.
+    The result is also recorded on ``fleet.state.tier``.
     """
     n = len(fleet)
     if callable(assignment):
@@ -189,9 +340,7 @@ def assign_tiers(fleet: Fleet, n_tiers: int,
             raise ValueError(f"unknown tier assignment {assignment!r}; "
                              "options: 'capability', a callable, or an "
                              "explicit per-client index array")
-        tiers = quantile_tiers(
-            np.asarray([capability_score(p) for p in fleet.profiles]),
-            n_tiers)
+        tiers = quantile_tiers(fleet.state.capability_scores(), n_tiers)
     else:
         tiers = np.asarray(assignment, np.int32)
         if tiers.shape != (n,):
@@ -200,11 +349,12 @@ def assign_tiers(fleet: Fleet, n_tiers: int,
     if tiers.size and (tiers.min() < 0 or tiers.max() >= n_tiers):
         raise ValueError(f"tier indices must be in [0, {n_tiers}); got "
                          f"range [{tiers.min()}, {tiers.max()}]")
+    fleet.state.tier = tiers
     return tiers
 
 
 FLEET_PRESETS: Dict[str, Callable[[int, np.random.Generator],
-                                  List[DeviceProfile]]] = {
+                                  FleetState]] = {
     "uniform": _uniform,
     "pareto-mobile": _pareto_mobile,
     "pareto-mobile-diurnal": _pareto_mobile_diurnal,
@@ -224,4 +374,4 @@ def make_fleet(num_clients: int, preset: Union[str, Fleet] = "uniform",
         raise ValueError(f"unknown fleet preset {preset!r}; "
                          f"options: {sorted(FLEET_PRESETS)}") from None
     rng = np.random.default_rng(seed)
-    return Fleet(name=preset, profiles=builder(num_clients, rng))
+    return Fleet(name=preset, state=builder(num_clients, rng))

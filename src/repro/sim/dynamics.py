@@ -1,5 +1,5 @@
-"""Device dynamics for the simulation grid: stochastic links and
-trace-driven availability.
+"""Device dynamics for the simulation grid: stochastic links,
+trace-driven availability, and correlated region-level shocks.
 
 PR 1's fleet was a *static* snapshot: every transfer moved at exactly the
 profile's base bandwidth and availability was one Bernoulli probability,
@@ -22,25 +22,38 @@ so async flushes see the clock move:
   :class:`AlwaysOn` (trivial, the pre-dynamics behavior),
   :class:`DiurnalTrace` (sinusoid with per-client phase, the diurnal
   preset) and :class:`StepTrace` (arbitrary per-client step functions —
-  e.g. a maintenance window where the whole fleet goes dark).
+  e.g. a maintenance window where the whole fleet goes dark). Every
+  trace also answers ``prob_batch(cids, t)`` — one vectorized query per
+  cohort, which is how the sync engine consumes it.
 
-* :class:`DynamicsConfig` — the pair, plus the async scheduler's
-  redispatch backoff (how long to wait, in virtual seconds, before
-  re-trying dispatch when the trace has everyone offline). ``bind``-ing
-  a config to a fleet resolves per-profile ``link_model`` overrides and
-  draws the per-client trace phases — from the grid's *dynamics* RNG
-  stream, an independent child spawned off ``device_seed``, so enabling
-  dynamics never perturbs the scheduler's fixed-count
-  availability/dropout draws (the trivial-case bit-for-bit contract).
+* :class:`RegionShocks` — **correlated** availability shocks over the
+  two-level topology (``sim/topology.py``): a Poisson process of
+  outages, each downing *one whole edge region* (a cell-tower outage
+  takes out its geographic client group together) for ``duration``
+  virtual seconds, scaling every member's availability by ``residual``.
+  Bound to its own spawned RNG stream (zero draws of any other stream),
+  advanced lazily at monotone virtual time, snapshot/restorable.
 
-The trivial config (static links, always-on) resolves to ``None`` in the
-grid and the schedulers take their exact pre-dynamics paths.
+* :class:`DynamicsConfig` — link + trace + shocks, plus the async
+  scheduler's redispatch backoff (how long to wait, in virtual seconds,
+  before re-trying dispatch when the trace has everyone offline).
+  ``bind``-ing a config to a fleet resolves per-profile ``link_model``
+  overrides into per-client sigma/RTT *arrays* (no N-tuple of link
+  objects) and draws the per-client trace phases — from the grid's
+  *dynamics* RNG stream, an independent child spawned off
+  ``device_seed``, so enabling dynamics never perturbs the scheduler's
+  fixed-count availability/dropout draws (the trivial-case bit-for-bit
+  contract).
+
+The trivial config (static links, always-on, no shocks) resolves to
+``None`` in the grid and the schedulers take their exact pre-dynamics
+paths.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional, Union
+from typing import Any, Dict, List, Optional, Union
 
 import numpy as np
 
@@ -86,7 +99,9 @@ class AvailabilityTrace:
     """``prob(cid, t) in [0, 1]``, multiplied into the profile's base
     availability at dispatch time. ``bind(num_clients, rng)`` resolves
     any per-client randomness (e.g. diurnal phases) from the dynamics
-    stream and returns the bound trace."""
+    stream and returns the bound trace. ``prob_batch(cids, t)`` is the
+    vectorized form — subclasses should override it with one array op
+    (the base-class fallback loops)."""
 
     trivial = False
 
@@ -97,6 +112,10 @@ class AvailabilityTrace:
     def prob(self, cid: int, t: float) -> float:
         raise NotImplementedError
 
+    def prob_batch(self, cids: np.ndarray, t: float) -> np.ndarray:
+        return np.array([self.prob(int(c), t) for c in np.asarray(cids)],
+                        np.float64)
+
 
 class AlwaysOn(AvailabilityTrace):
     """The pre-dynamics behavior: the trace never gates anyone."""
@@ -105,6 +124,9 @@ class AlwaysOn(AvailabilityTrace):
 
     def prob(self, cid: int, t: float) -> float:
         return 1.0
+
+    def prob_batch(self, cids: np.ndarray, t: float) -> np.ndarray:
+        return np.ones(len(np.asarray(cids)), np.float64)
 
 
 @dataclasses.dataclass
@@ -142,6 +164,13 @@ class DiurnalTrace(AvailabilityTrace):
     def prob(self, cid: int, t: float) -> float:
         ph = float(self.phases[cid]) if self.phases is not None else 0.0
         s = math.sin(2.0 * math.pi * (t / self.period + ph))
+        return self.low + (self.high - self.low) * 0.5 * (1.0 + s)
+
+    def prob_batch(self, cids: np.ndarray, t: float) -> np.ndarray:
+        cids = np.asarray(cids)
+        ph = self.phases[cids] if self.phases is not None \
+            else np.zeros(len(cids))
+        s = np.sin(2.0 * np.pi * (t / self.period + ph))
         return self.low + (self.high - self.low) * 0.5 * (1.0 + s)
 
 
@@ -182,6 +211,127 @@ class StepTrace(AvailabilityTrace):
             return float(self.values[cid, k])
         return float(self.values[k])
 
+    def prob_batch(self, cids: np.ndarray, t: float) -> np.ndarray:
+        cids = np.asarray(cids)
+        k = max(int(np.searchsorted(self.times, t, side="right")) - 1, 0)
+        if self.values.ndim == 2:
+            return self.values[cids, k]
+        return np.full(len(cids), self.values[k])
+
+
+# ---------------------------------------------------------------------------
+# Correlated region shocks (the topology-aware failure mode)
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionShocks:
+    """Poisson process of correlated edge-region outages.
+
+    Inter-arrival times are exponential with mean ``every`` virtual
+    seconds; each shock picks one region uniformly and scales every
+    member's availability by ``residual`` for ``duration`` seconds
+    (``residual=0`` is a full cell-tower outage). Requires a topology
+    (``GridConfig.topology``) — a flat grid has no regions to down."""
+
+    every: float = 2_000.0
+    duration: float = 300.0
+    residual: float = 0.0
+
+    def __post_init__(self):
+        if self.every <= 0 or self.duration <= 0:
+            raise ValueError("RegionShocks.every/duration must be positive")
+        if not 0.0 <= self.residual <= 1.0:
+            raise ValueError(f"residual={self.residual} must lie in [0, 1]")
+
+    def bind(self, num_regions: int, rng: np.random.Generator,
+             tracer=None) -> "BoundShocks":
+        return BoundShocks(self, num_regions, rng, tracer=tracer)
+
+
+class BoundShocks:
+    """A RegionShocks config bound to its own RNG stream (a spawn child
+    of the device stream — zero parent draws, like ``sim/faults.py``).
+
+    The outage process is advanced *lazily* at monotone virtual time:
+    each shock consumes exactly two draws (a uniform region pick and the
+    next exponential gap; the first gap is drawn at bind), so the stream
+    position depends only on how far the clock has advanced — never on
+    cohort outcomes — and a snapshot (``state_dict``/``load_state``)
+    restores the process bit-exactly."""
+
+    def __init__(self, cfg: RegionShocks, num_regions: int,
+                 rng: np.random.Generator, tracer=None):
+        if num_regions < 1:
+            raise ValueError("shocks need >= 1 region")
+        self.cfg = cfg
+        self.num_regions = int(num_regions)
+        self.rng = rng
+        self.tracer = tracer
+        self.fired = 0
+        # every outage ever fired, as [region, start, end] — kept whole
+        # (runs are finite) so tests and ops can audit the shock history
+        self.outages: List[List[float]] = []
+        # the still-live subset, pruned as the (monotone) clock advances
+        # — factor queries scan only this, so dense shock schedules stay
+        # O(active), not O(history)
+        self._active: List[List[float]] = []
+        self._t_last = 0.0
+        self.next_t = float(rng.exponential(cfg.every))
+
+    def _advance(self, t: float) -> None:
+        while self.next_t <= t:
+            start = self.next_t
+            region = int(self.rng.integers(0, self.num_regions))
+            outage = [float(region), start, start + self.cfg.duration]
+            self.outages.append(outage)
+            self._active.append(outage)
+            self.fired += 1
+            if self.tracer is not None and self.tracer.enabled:
+                self.tracer.instant("shock", start, region=region,
+                                    duration=float(self.cfg.duration),
+                                    residual=float(self.cfg.residual),
+                                    until=start + self.cfg.duration)
+            self.next_t = start + float(self.rng.exponential(self.cfg.every))
+        if t > self._t_last:
+            self._t_last = t
+            if self._active:
+                self._active = [o for o in self._active if o[2] > t]
+
+    def factor(self, regions: np.ndarray, t: float) -> np.ndarray:
+        """Per-member availability multipliers for a cohort whose members
+        live in ``regions`` (int array), queried at virtual time ``t``."""
+        self._advance(t)
+        regions = np.asarray(regions)
+        f = np.ones(len(regions), np.float64)
+        for r, start, end in self._active:
+            if start <= t < end:
+                f[regions == int(r)] *= self.cfg.residual
+        return f
+
+    def factor_one(self, region: int, t: float) -> float:
+        """Scalar form for the async scheduler's per-dispatch check."""
+        self._advance(t)
+        f = 1.0
+        for r, start, end in self._active:
+            if int(r) == int(region) and start <= t < end:
+                f *= self.cfg.residual
+        return f
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"rng": self.rng.bit_generator.state,
+                "next_t": float(self.next_t),
+                "fired": int(self.fired),
+                "t_last": float(self._t_last),
+                "outages": [list(o) for o in self.outages]}
+
+    def load_state(self, state: Dict[str, Any]) -> None:
+        self.rng.bit_generator.state = state["rng"]
+        self.next_t = float(state["next_t"])
+        self.fired = int(state["fired"])
+        self._t_last = float(state.get("t_last", 0.0))
+        self.outages = [list(o) for o in state["outages"]]
+        self._active = [o for o in self.outages if o[2] > self._t_last]
+
 
 # ---------------------------------------------------------------------------
 # The config the grid consumes
@@ -191,11 +341,15 @@ class StepTrace(AvailabilityTrace):
 class DynamicsConfig:
     """Fleet-wide device dynamics: the default link model (per-profile
     ``DeviceProfile.link_model`` overrides it client by client), the
-    availability trace, and the async scheduler's redispatch backoff."""
+    availability trace, correlated region shocks (needs a topology), and
+    the async scheduler's redispatch backoff."""
 
     link: LinkModel = dataclasses.field(default_factory=LinkModel)
     availability: AvailabilityTrace = dataclasses.field(
         default_factory=AlwaysOn)
+    # correlated edge-region outages (sim/topology.py must be active);
+    # bound by the grid against the topology with its own spawned stream
+    shocks: Optional[RegionShocks] = None
     # async: base virtual seconds to wait before re-trying dispatch when
     # no sampled client passes the availability check (the trace has the
     # fleet dark); sync rounds just close empty at their deadline. The
@@ -213,13 +367,17 @@ class DynamicsConfig:
 
     @property
     def trivial(self) -> bool:
-        return self.link.trivial and self.availability.trivial
+        return (self.link.trivial and self.availability.trivial
+                and self.shocks is None)
 
     def bind(self, fleet, rng: np.random.Generator) -> "BoundDynamics":
-        links = tuple(getattr(p, "link_model", None) or self.link
-                      for p in fleet.profiles)
+        st = fleet.state
+        link_sigma = np.where(st.has_link, st.link_sigma,
+                              self.link.jitter_sigma)
+        link_rtt = np.where(st.has_link, st.link_rtt,
+                            self.link.rtt_seconds)
         return BoundDynamics(
-            links=links,
+            link_sigma=link_sigma, link_rtt=link_rtt,
             trace=self.availability.bind(len(fleet), rng),
             redispatch_backoff=float(self.redispatch_backoff),
             backoff_growth=float(self.backoff_growth),
@@ -227,13 +385,15 @@ class DynamicsConfig:
             retry_budget=float(self.retry_budget))
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class BoundDynamics:
     """A DynamicsConfig resolved against one fleet: per-client link
-    models (profile override or the config default) and a bound trace.
+    parameters as ``(num_clients,)`` arrays (profile override or the
+    config default — no per-client link objects) and a bound trace.
     This is what the schedulers consume."""
 
-    links: tuple
+    link_sigma: np.ndarray
+    link_rtt: np.ndarray
     trace: AvailabilityTrace
     redispatch_backoff: float
     backoff_growth: float = 2.0
@@ -254,10 +414,16 @@ class BoundDynamics:
         return base * (0.75 + 0.5 * ((k * self._JITTER_STEP) % 1.0))
 
     def link_for(self, cid: int) -> LinkModel:
-        return self.links[int(cid)]
+        """Lazy per-client view over the link-parameter arrays."""
+        i = int(cid)
+        return LinkModel(jitter_sigma=float(self.link_sigma[i]),
+                         rtt_seconds=float(self.link_rtt[i]))
 
     def prob(self, cid: int, t: float) -> float:
         return self.trace.prob(cid, t)
+
+    def prob_batch(self, cids: np.ndarray, t: float) -> np.ndarray:
+        return self.trace.prob_batch(cids, t)
 
     def round_trip_seconds(self, profile, down_bytes: int, up_bytes: int,
                            compute_seconds: float, cid: int,
@@ -269,6 +435,28 @@ class BoundDynamics:
         return (lm.transfer_seconds(down_bytes, profile.downlink_bps, z_down)
                 + compute_seconds * profile.compute_multiplier
                 + lm.transfer_seconds(up_bytes, profile.uplink_bps, z_up))
+
+    def round_trip_seconds_batch(self, st, cids: np.ndarray, down_bytes,
+                                 up_bytes, compute_seconds,
+                                 z_down: np.ndarray,
+                                 z_up: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`round_trip_seconds` over a cohort — one
+        array op per round instead of one LinkModel call per member.
+        ``st`` is the fleet's :class:`~repro.sim.devices.FleetState`;
+        the float64 expression matches the scalar path's association
+        elementwise."""
+        cids = np.asarray(cids)
+        sig = self.link_sigma[cids]
+        rtt = self.link_rtt[cids]
+        down = (rtt + (np.asarray(down_bytes, np.float64)
+                       / st.downlink_bps[cids])
+                * np.exp(sig * z_down - 0.5 * sig * sig))
+        up = (rtt + (np.asarray(up_bytes, np.float64) / st.uplink_bps[cids])
+              * np.exp(sig * z_up - 0.5 * sig * sig))
+        return (down
+                + np.asarray(compute_seconds, np.float64)
+                * st.compute_multiplier[cids]
+                + up)
 
 
 # ---------------------------------------------------------------------------
@@ -337,8 +525,12 @@ def resolve_dynamics(spec: Union[None, str, DynamicsConfig],
     else:
         raise TypeError(f"dynamics must be None, a preset name or a "
                         f"DynamicsConfig, got {type(spec).__name__}")
-    has_profile_links = any(getattr(p, "link_model", None) is not None
-                            for p in fleet.profiles)
+    state = getattr(fleet, "state", None)
+    if state is not None:
+        has_profile_links = bool(np.any(state.has_link))
+    else:
+        has_profile_links = any(getattr(p, "link_model", None) is not None
+                                for p in fleet.profiles)
     if cfg is None and not has_profile_links:
         return None
     if cfg is None:

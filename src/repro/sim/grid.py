@@ -47,6 +47,7 @@ from repro.sim import dynamics as dyn_lib
 from repro.sim import faults as faults_lib
 from repro.sim import scheduler as sched_lib
 from repro.sim import selection as sel_lib
+from repro.sim import topology as topo_lib
 from repro.sim import wire
 
 
@@ -110,6 +111,18 @@ class GridConfig:
     # "tier-rotation", "adaptive-capability", or a SelectionPolicy
     # instance
     selection: Any = "uniform"
+    # --- two-level aggregation topology (sim/topology.py) ---
+    # None = the flat single-hop grid (no hierarchical machinery at
+    # all). An int region count, a TopologyConfig or an explicit
+    # per-client region array partitions the fleet into edge regions:
+    # each edge pre-reduces its members' flat deltas into one (size,)
+    # buffer per flush, the wire bills the client->edge and
+    # edge->server hops separately (CommReport.hop_traffic), and
+    # correlated region shocks (DynamicsConfig.shocks) can down a
+    # whole edge at once. A one-region topology runs the full edge
+    # machinery and stays bit-identical to the flat grid
+    # (test-enforced), so hierarchy can be A/B'd against flat.
+    topology: Any = None
     # --- telemetry (repro/obs) ---
     # None = the NULL tracer: no event records, no extra PRNG draws,
     # bit-identical histories (test-enforced). A TelemetryConfig (or
@@ -179,6 +192,9 @@ class GridResult:
     policy: Any = None
     # the BoundDynamics the run used (None = static links, always-on)
     dynamics: Any = None
+    # the bound Topology the run used (None = flat single-hop grid);
+    # per-hop wire traffic lives in comm.hop_traffic
+    topology: Any = None
     # the run's MetricsRegistry (always present): scheduler_stats and
     # tier_stats above are dict views over it — metrics.snapshot() is
     # the superset
@@ -243,6 +259,13 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
 
     report = comm.report_for(y, frozen, uplink_bits=rc.uplink_bits)
     report.tracer = tracer                       # tier_upload billing
+    # two-level aggregation topology: None keeps the flat single-hop
+    # grid untouched; otherwise every add_measured call mirrors into
+    # the client_edge hop ledger and the grid bills the edge_server
+    # hop (pre-reduced flat buffers) separately per flush
+    topo = topo_lib.resolve_topology(grid.topology, N)
+    if topo is not None:
+        report.bill_hops = True
     down_bytes = wire.downlink_bytes(y)          # y + 8-byte seed, measured
     up_bytes = _uplink_bytes(y, rc.uplink_bits)  # shape-determined
     compute_seconds = rc.local_steps * grid.base_step_time
@@ -305,6 +328,18 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
             "the async per-client wire path")
     bfaults = (faults_cfg.bind(dev_rng.spawn(1)[0])
                if faults_cfg is not None else None)
+    # the shock stream: a THIRD independent child, spawned ONLY when
+    # correlated region shocks are configured — same hygiene as the
+    # fault stream, so shock-free runs see identical streams everywhere
+    shocks_cfg = dyn_cfg.shocks if dyn_cfg is not None else None
+    if shocks_cfg is not None and topo is None:
+        raise ValueError(
+            "DynamicsConfig.shocks needs a topology (GridConfig."
+            "topology): shocks down whole edge regions, and the flat "
+            "grid has none")
+    bshocks = (shocks_cfg.bind(topo.num_regions, dev_rng.spawn(1)[0],
+                               tracer=tracer)
+               if shocks_cfg is not None else None)
     san = sanitize_lib.resolve_sanitize(grid.sanitize)
     if grid.checkpoint_every > 0 and not grid.checkpoint_dir:
         raise ValueError("checkpoint_every > 0 needs a checkpoint_dir")
@@ -316,10 +351,12 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
               else np.full(N, up_bytes, np.int64))
     est_comp = (tier_compute[tier_of_client] if cplan is not None
                 else np.full(N, compute_seconds, np.float64))
+    # one array op over the FleetState struct-of-arrays — the former
+    # per-profile listcomp was O(N) Python objects per run and dominated
+    # startup at 10^5+ clients (benchmarks/fleet_bench.py)
     rtt_estimate = np.asarray(
-        [fleet.profile(c).round_trip_seconds(down_bytes, int(est_up[c]),
-                                             float(est_comp[c]))
-         for c in range(N)], np.float64)
+        fleet.state.round_trip_seconds(down_bytes, est_up, est_comp),
+        np.float64)
     policy.bind(fleet=fleet, num_clients=N, cplan=cplan,
                 tiers=tier_of_client, rtt_estimate=rtt_estimate)
 
@@ -331,7 +368,8 @@ def run_grid(init_fn: Callable[[int], Any], loss_fn: Callable, dataset,
                   tier_of_client=tier_of_client, tier_up=tier_up,
                   tier_compute=tier_compute, dyn=dyn, dyn_rng=dyn_rng,
                   policy=policy, registry=registry, tracer=tracer,
-                  profile=profile, bfaults=bfaults, san=san)
+                  profile=profile, bfaults=bfaults, san=san,
+                  topo=topo, bshocks=bshocks)
     if grid.mode == "sync":
         return _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid,
                          server_opt, **common)
@@ -403,7 +441,8 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
               fleet, report, down_bytes, up_bytes, compute_seconds,
               data_rng, dev_rng, seed, data_kind, eval_every, eval_fn, log,
               cplan, tier_of_client, tier_up, tier_compute, dyn, dyn_rng,
-              policy, registry, tracer, profile, bfaults, san):
+              policy, registry, tracer, profile, bfaults, san, topo,
+              bshocks):
     mesh = mesh_lib.resolve_mesh(grid.mesh)
     constrain_flat = shard_lib.flat_constrainer(mesh) if mesh else None
     constrain_batch = shard_lib.cohort_constrainer(mesh) if mesh else None
@@ -420,6 +459,9 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
     N = num_clients(dataset)
     C = rc.clients_per_round
     m = min(N, max(C, int(math.ceil(C * grid.over_selection))))
+    # one pre-reduced fp32 flat buffer per active edge per round
+    # (shape-determined, so measured once)
+    edge_bytes = wire.edge_flush_bytes(y) if topo is not None else 0
 
     # every live RNG stream a snapshot must capture (the fault stream
     # only exists when a failure model is active)
@@ -436,7 +478,8 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         meta, arrays = gstate_lib.load_state(grid.resume_from)
         y, sstate, start_round, vt, history = gstate_lib.decode_sync(
             meta, arrays, sstate_template=sstate, rngs=rngs,
-            policy=policy, registry=registry, report=report)
+            policy=policy, registry=registry, report=report,
+            shocks=bshocks, topo=topo)
         last_ckpt = grid.resume_from
     t0 = None
     for r in range(start_round, rounds):
@@ -454,12 +497,13 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                      else up_bytes)
         cohort_comp = (tier_compute[tiers_now[cids]] if cplan is not None
                        else compute_seconds)
+        cohort_regions = topo.region_of[cids] if topo is not None else None
         plan = sched_lib.plan_sync_round(
             fleet, cids, down_bytes, cohort_up, cohort_comp, C, dev_rng,
             deadline=grid.straggler_deadline, dynamics=dyn,
             dyn_rng=dyn_rng, now=vt, tracer=tracer,
             tiers=tiers_now[cids] if cplan is not None else None,
-            faults=bfaults)
+            faults=bfaults, shocks=bshocks, regions=cohort_regions)
         # the C slots the compiled round engine sees: participants in
         # arrival order, padded (weight 0) with the remaining cohort in
         # dispatch order when drops leave the round short
@@ -535,6 +579,31 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
             report.add_measured(down_bytes * n_dispatched,
                                 up_bytes * n_uploads,
                                 transfers=n_dispatched)
+        if topo is not None:
+            # hierarchical hop billing: every region with a dispatch
+            # downloads one model payload server->edge (the edge fans it
+            # out on the client hop); every region with a completed
+            # upload pre-reduces its members' deltas and flushes one
+            # flat buffer upstream
+            disp_counts = np.bincount(cohort_regions[plan.dispatched],
+                                      minlength=topo.num_regions)
+            up_counts = np.bincount(cohort_regions[plan.completed],
+                                    minlength=topo.num_regions)
+            for k in np.nonzero(disp_counts)[0]:
+                mc("region_dispatches").inc(int(disp_counts[k]),
+                                            label=int(k))
+            active = np.nonzero(up_counts)[0]
+            for k in active:
+                mc("region_uploads").inc(int(up_counts[k]), label=int(k))
+                mc("edge_flushes").inc(label=int(k))
+                mc("edge_up_bytes").inc(edge_bytes, label=int(k))
+                tracer.instant("edge_flush", vt, region=int(k),
+                               fill=int(up_counts[k]),
+                               up_bytes=edge_bytes, round=r)
+            n_down = int(np.sum(disp_counts > 0))
+            report.add_hop("edge_server", down_bytes=down_bytes * n_down,
+                           up_bytes=edge_bytes * len(active),
+                           transfers=n_down, uploads=len(active))
         mc("dispatches").inc(n_dispatched)
         mc("uploads").inc(n_uploads)
         mc("offline").inc(plan.offline)
@@ -558,7 +627,8 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                 and (r + 1) % grid.checkpoint_every == 0:
             meta, arrays = gstate_lib.encode_sync(
                 y=y, sstate=sstate, round_idx=r, now=vt, history=history,
-                rngs=rngs, policy=policy, registry=registry, report=report)
+                rngs=rngs, policy=policy, registry=registry, report=report,
+                shocks=bshocks, topo=topo)
             last_ckpt = gstate_lib.save_state(
                 gstate_lib.checkpoint_path(grid.checkpoint_dir, r + 1,
                                            "sync"), meta, arrays)
@@ -582,7 +652,7 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                       tier_stats=_tier_stats(report, cplan, final_tiers,
                                              registry),
                       plan=cplan, policy=policy, dynamics=dyn,
-                      metrics=registry,
+                      topology=topo, metrics=registry,
                       telemetry=tracer if tracer.enabled else None,
                       faults=_faults_view(registry, bfaults))
 
@@ -621,7 +691,8 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                fleet, report, down_bytes, up_bytes, compute_seconds,
                data_rng, dev_rng, seed, data_kind, eval_every, eval_fn, log,
                cplan, tier_of_client, tier_up, tier_compute, dyn, dyn_rng,
-               policy, registry, tracer, profile, bfaults, san):
+               policy, registry, tracer, profile, bfaults, san, topo,
+               bshocks):
     if server_opt is None:
         server_opt = fedpt.resolve_server_opt(rc)
     # trivial plans keep the pre-plan engine (lane-exact acceptance);
@@ -691,6 +762,9 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
     N = num_clients(dataset)
     batch_fn = (syn.client_batch_images if data_kind == "images"
                 else syn.client_batch_tokens)
+    # one pre-reduced fp32 flat buffer per active edge per flush
+    # (shape-determined, so measured once)
+    edge_bytes = wire.edge_flush_bytes(y) if topo is not None else 0
 
     # mutable server state shared with the scheduler callbacks; events are
     # processed in virtual-time order, so "the model right now" is exactly
@@ -823,6 +897,28 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                     cid=int(w["cid"]),
                     tier=None if w.get("tier") is None else int(w["tier"]),
                     norm=float(norms[i]), flush=applied)
+        if topo is not None and entries:
+            # edge pre-reduce: this flush's rows grouped by uploader
+            # region — each edge's (size,) buffer is what it transmits
+            # upstream (billed on the edge_server hop at end of run).
+            # The authoritative server reduce above consumed the same
+            # rows fused, so the model path is topology-invariant.
+            regs = topo.region_of[[int(e.work["cid"]) for e in entries]]
+            ebuf = topo_lib.edge_reduce(
+                np.asarray(flat_deltas)[:len(entries)],
+                np.asarray(wts[:len(entries)], np.float32),
+                regs, topo.num_regions)
+            counts = np.bincount(regs, minlength=topo.num_regions)
+            for k in np.nonzero(counts)[0]:
+                registry.counter("edge_flushes").inc(label=int(k))
+                registry.counter("edge_up_bytes").inc(edge_bytes,
+                                                      label=int(k))
+                registry.counter("edge_down_bytes").inc(down_bytes,
+                                                        label=int(k))
+                tracer.instant("edge_flush", now, region=int(k),
+                               fill=int(counts[k]), up_bytes=edge_bytes,
+                               norm=float(np.linalg.norm(ebuf[k])),
+                               flush=applied)
         state["applied"] = applied + 1
         if eval_fn and eval_every and state["applied"] % eval_every == 0:
             out.update(eval_fn(part.merge(y_new, frozen)))
@@ -845,7 +941,7 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
             return
         meta, arrays = gstate_lib.encode_async(
             state=state, sched=s, rngs=rngs, accountant=accountant,
-            policy=policy, registry=registry)
+            policy=policy, registry=registry, shocks=bshocks, topo=topo)
         path = gstate_lib.save_state(
             gstate_lib.checkpoint_path(grid.checkpoint_dir,
                                        state["applied"], "async"),
@@ -866,6 +962,9 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         tier_of=tier_of if cplan is not None else None,
         compute_of=((lambda cid: float(tier_compute[tier_of(cid)]))
                     if cplan is not None else None),
+        region_of=((lambda cid: int(topo.region_of[cid]))
+                   if topo is not None else None),
+        shocks=bshocks,
         dynamics=dyn, dyn_rng=dyn_rng, observe=policy.observe,
         tracer=tracer, metrics=registry, faults=bfaults,
         checkpoint_hook=(checkpoint_hook if grid.checkpoint_every > 0
@@ -875,6 +974,7 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
             *gstate_lib.load_state(grid.resume_from), state=state,
             sched=sched, sstate_template=state["sstate"], rngs=rngs,
             accountant=accountant, policy=policy, registry=registry,
+            shocks=bshocks, topo=topo,
             make_cell=_LaneCell if lane > 0 else None)
         last_ckpt["path"] = grid.resume_from
     t_wall = time.time()
@@ -904,6 +1004,16 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         report.add_measured(down_bytes * sched.dispatches,
                             sched.up_bytes_total,
                             transfers=sched.dispatches)
+    if topo is not None:
+        # edge_server hop, billed from the registry's per-region edge
+        # counters — the registry is snapshotted/restored with the run,
+        # so a resumed run bills this hop exactly
+        n_flush = int(registry.counter("edge_flushes").value)
+        report.add_hop(
+            "edge_server",
+            down_bytes=int(registry.counter("edge_down_bytes").value),
+            up_bytes=int(registry.counter("edge_up_bytes").value),
+            transfers=n_flush, uploads=n_flush)
     final_tiers = (policy.current_tiers() if cplan is not None
                    else tier_of_client)
     if tracer.enabled:
@@ -916,6 +1026,6 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                       tier_stats=_tier_stats(report, cplan, final_tiers,
                                              registry),
                       plan=cplan, policy=policy, dynamics=dyn,
-                      metrics=registry,
+                      topology=topo, metrics=registry,
                       telemetry=tracer if tracer.enabled else None,
                       faults=_faults_view(registry, bfaults))

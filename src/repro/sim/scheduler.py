@@ -108,7 +108,8 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
                     dyn_rng: Optional[np.random.Generator] = None,
                     now: float = 0.0,
                     tracer=trace_lib.NULL_TRACER,
-                    tiers=None, faults=None) -> SyncRoundPlan:
+                    tiers=None, faults=None,
+                    shocks=None, regions=None) -> SyncRoundPlan:
     """Simulate one synchronous round over the cohort `cids` (possibly
     over-selected: len(cids) >= clients_needed) and decide who counts.
 
@@ -140,9 +141,21 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
     part of their compute but never upload. Payload faults (truncation,
     corruption, duplicates) are async-only — the sync engine computes
     deltas inside one jitted cohort step and has no per-client wire
-    payload to damage — and the grid rejects them before calling here."""
+    payload to damage — and the grid rejects them before calling here.
+
+    ``shocks`` (a ``sim/dynamics.BoundShocks``) + ``regions`` (the
+    cohort members' edge-region indices, from ``sim/topology.py``)
+    multiply correlated region-outage factors into the availability
+    screen — one whole edge's clients go dark together.
+
+    The round is fully vectorized: one RNG call per draw *kind* per
+    cohort and array ops for arrivals/selection — no per-client Python
+    objects or events (the arrival-order selection below reproduces the
+    old per-member event heap exactly: events were pushed in member
+    order, so (time, push-order) heap order == lexsort(arrival, index))."""
     cids = np.asarray(cids, np.int64)
     m = len(cids)
+    st = fleet.state
     up_arr = np.broadcast_to(np.asarray(up_bytes, np.int64), (m,))
     comp_arr = np.broadcast_to(np.asarray(compute_seconds, np.float64), (m,))
     # fixed-count rng draws so the stream is deterministic regardless of
@@ -159,49 +172,32 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
         z_down = dyn_rng.standard_normal(m)
         z_up = dyn_rng.standard_normal(m)
 
-    q = EventQueue()
-    dispatched = np.zeros(m, bool)
-    will_complete = np.zeros(m, bool)
-    crashed = np.zeros(m, bool)
-    arrival = np.full(m, math.inf)
-    for i, cid in enumerate(cids):
-        p = fleet.profile(cid)
-        avail = p.availability
-        if dynamics is not None:
-            avail = avail * dynamics.prob(int(cid), now)
-        if avail_u[i] >= avail:
-            continue                      # offline: never dispatched
-        dispatched[i] = True
-        if drop_u[i] < p.dropout:
-            # mid-round dropout: consumed the downlink + some compute but
-            # never uploads; the server just never hears back
-            continue
-        if crash[i]:
-            # injected crash-mid-compute: same server-side footprint as
-            # a dropout (downlink billed, no upload), counted separately
-            crashed[i] = True
-            continue
-        will_complete[i] = True
-        if dynamics is None:
-            t = p.round_trip_seconds(down_bytes, int(up_arr[i]),
-                                     float(comp_arr[i]))
-        else:
-            t = dynamics.round_trip_seconds(
-                p, down_bytes, int(up_arr[i]), float(comp_arr[i]),
-                int(cid), z_down[i], z_up[i])
-        arrival[i] = t
-        q.push(t, "complete", idx=i)
+    avail = st.availability[cids]
+    if dynamics is not None:
+        avail = avail * dynamics.prob_batch(cids, now)
+    if shocks is not None:
+        avail = avail * shocks.factor(regions, now)
+    dispatched = avail_u < avail
+    dropped = dispatched & (drop_u < st.dropout[cids])
+    crashed = dispatched & ~dropped & crash
+    will_complete = dispatched & ~dropped & ~crash
+    if dynamics is None:
+        t = st.round_trip_seconds(down_bytes, up_arr, comp_arr, cids=cids)
+    else:
+        t = dynamics.round_trip_seconds_batch(st, cids, down_bytes, up_arr,
+                                              comp_arr, z_down, z_up)
+    arrival = np.where(will_complete, t, math.inf)
 
+    # the first clients_needed arrivals at or before the deadline, in
+    # (arrival, dispatch-order) order — the old event-heap pop loop
     participant = np.zeros(m, bool)
-    taken = 0
-    round_seconds = 0.0
-    while len(q) and taken < clients_needed:
-        ev = q.pop()
-        if ev.time > deadline:
-            break                          # everyone later is also late
-        participant[ev.payload["idx"]] = True
-        taken += 1
-        round_seconds = ev.time
+    order = np.lexsort((np.arange(m), arrival))
+    comp_order = order[will_complete[order]]
+    arr_sorted = arrival[comp_order]
+    n_eligible = int(np.searchsorted(arr_sorted, deadline, side="right"))
+    taken = min(int(clients_needed), n_eligible)
+    participant[comp_order[:taken]] = True
+    round_seconds = float(arr_sorted[taken - 1]) if taken else 0.0
     retried = 0
     if taken < clients_needed and math.isfinite(deadline):
         round_seconds = deadline           # server waited the round out
@@ -347,6 +343,8 @@ class BufferedAsyncScheduler:
                  compute_seconds: float, rng: np.random.Generator,
                  tier_of: Optional[Callable[[int], int]] = None,
                  compute_of: Optional[Callable[[int], float]] = None,
+                 region_of: Optional[Callable[[int], int]] = None,
+                 shocks=None,
                  dynamics=None,
                  dyn_rng: Optional[np.random.Generator] = None,
                  observe: Optional[Callable[[int, float], None]] = None,
@@ -368,6 +366,12 @@ class BufferedAsyncScheduler:
         self.rng = rng
         self.tier_of = tier_of
         self.compute_of = compute_of
+        # two-level topology (sim/topology.py): region_of names each
+        # client's edge region — dispatch/upload events route through it
+        # (payloads + per-region counters), and correlated region shocks
+        # (sim/dynamics.BoundShocks) gate availability region-wide
+        self.region_of = region_of
+        self.shocks = shocks
         self.dynamics = dynamics
         self.dyn_rng = dyn_rng
         self.observe = observe
@@ -434,9 +438,15 @@ class BufferedAsyncScheduler:
         for _ in range(1000):
             cid = int(self.sample_cid(self.rng))
             p = self.fleet.profile(cid)
+            region = (int(self.region_of(cid))
+                      if self.region_of is not None else None)
             avail = p.availability
             if self.dynamics is not None:
                 avail = avail * self.dynamics.prob(cid, now)
+            if self.shocks is not None:
+                # correlated region outage: the whole edge's clients are
+                # gated together (zero extra draws at query time)
+                avail = avail * self.shocks.factor_one(region, now)
             if self.rng.random() < avail:
                 break
         else:
@@ -480,6 +490,8 @@ class BufferedAsyncScheduler:
         tier = int(self.tier_of(cid)) if self.tier_of is not None else None
         if tier is not None:
             self.metrics.counter("tier_dispatches").inc(label=tier)
+        if region is not None:
+            self.metrics.counter("region_dispatches").inc(label=region)
         if self.rng.random() < p.dropout:
             # dies after download + local work, before upload
             if self.dynamics is None:
@@ -490,9 +502,9 @@ class BufferedAsyncScheduler:
                                                p.downlink_bps, z_down)
                            + comp * p.compute_multiplier)
             self.tracer.span("dispatch", now, t - now, cid=cid, tier=tier,
-                             down_bytes=self.down_bytes,
+                             region=region, down_bytes=self.down_bytes,
                              version=self.version, outcome="dropout")
-            q.push(t, "failed", cid=cid, tier=tier)
+            q.push(t, "failed", cid=cid, tier=tier, region=region)
             return
         if fault is not None and fault["kind"] == "crash":
             # injected crash-mid-compute: downlink + crash_frac of the
@@ -506,11 +518,12 @@ class BufferedAsyncScheduler:
             t = now + dl + (self.faults.cfg.crash_frac * comp
                             * p.compute_multiplier)
             self.tracer.span("dispatch", now, t - now, cid=cid, tier=tier,
-                             down_bytes=self.down_bytes,
+                             region=region, down_bytes=self.down_bytes,
                              version=self.version, outcome="crash")
             self.tracer.instant("fault", t, fault="crash_compute",
                                 cid=cid, tier=tier)
-            q.push(t, "failed", cid=cid, tier=tier, cause="crash")
+            q.push(t, "failed", cid=cid, tier=tier, region=region,
+                   cause="crash")
             return
         work = self.run_client(cid, self.version)
         if fault is not None:
@@ -525,11 +538,11 @@ class BufferedAsyncScheduler:
                 p, self.down_bytes, int(work["up_bytes"]), comp, cid,
                 z_down, z_up)
         self.tracer.span("dispatch", now, rtt, cid=cid, tier=tier,
-                         down_bytes=self.down_bytes,
+                         region=region, down_bytes=self.down_bytes,
                          up_bytes=int(work["up_bytes"]),
                          version=self.version, outcome="ok")
         q.push(now + rtt, "complete", cid=cid, version=self.version,
-               work=work, tier=tier, rtt=rtt)
+               work=work, tier=tier, rtt=rtt, region=region)
 
     def _flush(self, buffer, now: float, records) -> None:
         metrics = self.apply_update(buffer, now, self.version)
@@ -620,6 +633,7 @@ class BufferedAsyncScheduler:
             fault = work.get("fault")
             cid = int(ev.payload["cid"])
             tier = ev.payload.get("tier")
+            region = ev.payload.get("region")
             if fault is not None and fault["kind"] == "truncate":
                 # the upload died partway: the wire carried (and bills)
                 # a fraction of the bytes; the server detects the length
@@ -630,6 +644,9 @@ class BufferedAsyncScheduler:
                 if tier is not None:
                     self.metrics.counter("tier_up_bytes").inc(arrived,
                                                               label=tier)
+                if region is not None:
+                    self.metrics.counter("region_up_bytes").inc(
+                        arrived, label=region)
                 self.tracer.instant("fault", ev.time,
                                     fault="truncate_upload", cid=cid,
                                     tier=tier, frac=float(fault["frac"]),
@@ -642,9 +659,14 @@ class BufferedAsyncScheduler:
             if self.observe is not None:
                 self.observe(cid, ev.payload["rtt"])
             self.tracer.instant("upload", ev.time, cid=cid, tier=tier,
+                                region=region,
                                 up_bytes=int(work["up_bytes"]),
                                 staleness=int(s),
                                 rtt=float(ev.payload["rtt"]))
+            if region is not None:
+                self.metrics.counter("region_uploads").inc(label=region)
+                self.metrics.counter("region_up_bytes").inc(
+                    int(work["up_bytes"]), label=region)
             if tier is not None:
                 self.metrics.counter("tier_uploads").inc(label=tier)
                 self.metrics.counter("tier_up_bytes").inc(
@@ -675,6 +697,10 @@ class BufferedAsyncScheduler:
                     self.metrics.counter("tier_uploads").inc(label=tier)
                     self.metrics.counter("tier_up_bytes").inc(
                         int(work["up_bytes"]), label=tier)
+                if region is not None:
+                    self.metrics.counter("region_uploads").inc(label=region)
+                    self.metrics.counter("region_up_bytes").inc(
+                        int(work["up_bytes"]), label=region)
                 self.tracer.instant("fault", ev.time,
                                     fault="duplicate_upload", cid=cid,
                                     tier=tier)

@@ -137,6 +137,15 @@ def uplink_bytes(delta, bits: int = 0) -> int:
     return len(encode_uplink(delta, bits))
 
 
+def edge_flush_bytes(y) -> int:
+    """Edge->server payload under a two-level topology
+    (``sim/topology.py``): one region's pre-reduced flat delta buffer,
+    serialized fp32 (edges aggregate dequantized rows, so the int8
+    client-hop compression never rides this hop) — no seed, the server
+    already has the architecture out-of-band."""
+    return len(encode_uplink(y, bits=0))
+
+
 def tier_payloads(y, cplan, bits: int = 0) -> dict:
     """Per-tier wire payload sizes under a trainability plan:
     ``{tier name: {"down": bytes, "up": bytes}}``.

@@ -193,6 +193,75 @@ def test_sync_kill_resume_bitwise(tmp_path):
 
 
 @pytest_grid
+def test_async_hierarchical_shock_kill_resume_bitwise(tmp_path):
+    """Hierarchical + correlated-shock resume: the topology meta, the
+    shock process (its RNG stream, pending arrival and outage history)
+    and the per-region edge counters all ride the snapshot — the
+    resumed run matches the uninterrupted one bitwise, down to the
+    edge_server hop ledger."""
+    from repro.sim import dynamics as dyn_lib
+    ds = _g_ds()
+    gbase = simgrid.GridConfig(
+        mode="async", faults=CHAOS, sanitize=True, topology=3,
+        dynamics=dyn_lib.DynamicsConfig(shocks=dyn_lib.RegionShocks(
+            every=0.01, duration=0.05, residual=0.0)))
+    straight = simgrid.run_grid(_g_init, _g_loss, ds, G_RC, 8, grid=gbase,
+                                seed=3)
+    T = 0.5 * (straight.history[4]["virtual_seconds"]
+               + straight.history[5]["virtual_seconds"])
+    killed = dc.replace(gbase, faults=dict(CHAOS, server_kill_at=T),
+                        checkpoint_every=2,
+                        checkpoint_dir=str(tmp_path / "ckpt"))
+    resumed = _kill_then_resume(gbase, killed, G_RC, 8)
+    _assert_same_run(straight, resumed)
+    assert straight.comm.hop_traffic == resumed.comm.hop_traffic
+    assert straight.comm.hop_traffic["edge_server"]["uploads"] > 0
+
+
+@pytest_grid
+def test_sync_hierarchical_shock_kill_resume_bitwise(tmp_path):
+    from repro.sim import dynamics as dyn_lib
+    ds = _g_ds()
+    gbase = simgrid.GridConfig(
+        mode="sync", faults={"crash_compute": 0.1}, topology=3,
+        over_selection=1.5,
+        dynamics=dyn_lib.DynamicsConfig(shocks=dyn_lib.RegionShocks(
+            every=0.01, duration=0.05, residual=0.0)))
+    straight = simgrid.run_grid(_g_init, _g_loss, ds, G_RC, 8, grid=gbase,
+                                seed=3)
+    T = 0.5 * (straight.history[4]["virtual_seconds"]
+               + straight.history[5]["virtual_seconds"])
+    killed = dc.replace(gbase,
+                        faults={"crash_compute": 0.1, "server_kill_at": T},
+                        checkpoint_every=2,
+                        checkpoint_dir=str(tmp_path / "ckpt"))
+    resumed = _kill_then_resume(gbase, killed, G_RC, 8)
+    _assert_same_run(straight, resumed)
+    assert straight.comm.hop_traffic == resumed.comm.hop_traffic
+
+
+@pytest_grid
+def test_resume_topology_mismatch_rejected(tmp_path):
+    """A snapshot from a 3-region run must not silently resume onto a
+    different (or flat) topology."""
+    ds = _g_ds()
+    gtopo = simgrid.GridConfig(mode="sync", topology=3, checkpoint_every=2,
+                               checkpoint_dir=str(tmp_path / "ckpt"))
+    simgrid.run_grid(_g_init, _g_loss, ds, G_RC, 4, grid=gtopo, seed=3)
+    snap = gstate.latest(str(tmp_path / "ckpt"))
+    assert snap is not None
+    with pytest.raises(ValueError):
+        simgrid.run_grid(
+            _g_init, _g_loss, ds, G_RC, 4,
+            grid=simgrid.GridConfig(mode="sync", resume_from=snap), seed=3)
+    with pytest.raises(ValueError):
+        simgrid.run_grid(
+            _g_init, _g_loss, ds, G_RC, 4,
+            grid=simgrid.GridConfig(mode="sync", topology=5,
+                                    resume_from=snap), seed=3)
+
+
+@pytest_grid
 def test_async_resume_multitier_adaptive_policy(tmp_path):
     """Resume carries the whole policy/plan state: a two-tier TrainPlan
     with the adaptive-capability policy (observed-RTT EMAs, refit maps)
