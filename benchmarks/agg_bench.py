@@ -18,13 +18,27 @@ Both are jitted whole; inputs sit in each path's native layout (the
 tree path never pays a flatten, the flat path never pays an unflatten
 back — the engine unflattens once per round in both worlds).
 
+Each cell also times the *fused* one-sweep tail
+(``kernels.ops.agg_tail`` with the fused path forced) and the
+*dispatcher* (``ops.agg_tail`` with its shape- and pipeline-aware
+default: fused only for quantized pipelines of at least
+:data:`~repro.kernels.ops.AGG_FUSE_THRESHOLD` elements — unquantized
+tails are already minimal-sweep, so everything else stays staged),
+checks fused-vs-staged parity (bitwise for mean/clip/dp, fp
+round-off for full — the int8 coeff route reassociates the dequant
+multiply), and reports a bytes-moved / TPU-HBM-roofline column for the
+fused sweep (three reads of the client buffer + one output write).
+
 Emits the harness's ``name,us_per_call,derived`` CSV rows and writes
 ``BENCH_agg.json`` next to the repo root. ``--smoke`` runs a tiny cell
 per pipeline, asserts tree/flat agreement AND times it; with ``--gate
 BENCH_agg.json`` the smoke timings become a CI regression gate — each
 pipeline's flat_us must stay within ``--gate-tolerance`` (default 3x,
 generous on purpose: it catches order-of-magnitude regressions, not
-shared-runner noise) of the committed baseline's ``smoke`` section.
+shared-runner noise) of the committed baseline's ``smoke`` section,
+AND the dispatcher must not lose more than 10% to the staged path at
+smoke shapes (the 0.9x no-lose floor: small buffers must keep routing
+to the staged program, never the fused stage orchestration).
 ``--fresh-out`` writes the fresh smoke numbers as JSON (uploaded as a
 workflow artifact by CI).
 
@@ -44,7 +58,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import roofline
 from repro.core import compress, flat as flat_lib
+from repro.kernels import ops as kernel_ops
 from repro.optim import optimizers as opt_lib
 
 CLIP = 1.0
@@ -138,6 +154,53 @@ def flat_tail(pipeline: str, clients: int, layout: flat_lib.FlatLayout,
     return run
 
 
+def fused_tail(pipeline: str, clients: int, layout: flat_lib.FlatLayout,
+               noise: bool = True, threshold=None):
+    """The shipped tail: ``ops.agg_tail``. ``threshold=0`` forces the
+    fused one-sweep path, ``threshold=None`` exercises the shape-aware
+    dispatcher (what the round engines run). Not wrapped in jax.jit:
+    on concrete CPU buffers the fused path orchestrates separately
+    jitted stages from Python on purpose (one whole-tail XLA program
+    pays a large composition penalty at 10M x 16 — see
+    kernels/agg_tail.py)."""
+    bl = jnp.asarray(layout.block_leaf(), jnp.int32)
+    kw = dict(block_leaf=bl, n_leaves=len(layout.sizes),
+              align=layout.align, threshold=threshold)
+    if pipeline == "full":
+        kw["bits"] = 8
+    if pipeline != "mean":
+        kw.update(clip_norm=CLIP, uniform=True, wsum_fixed=float(clients))
+    noised = noise and pipeline in ("dp", "full")
+    if noised:
+        kw["sigma"] = SIGMA
+
+    def run(mat, w, rng):
+        out, info = kernel_ops.agg_tail(mat, w,
+                                        rng=rng if noised else None, **kw)
+        return out, info
+
+    return run
+
+
+def agg_bytes_moved(pipeline: str, params: int, clients: int) -> int:
+    """HBM traffic model for the fused sweep over the (clients, params)
+    f32 buffer: mean = one GEMV read; clip/dp = stats read + GEMV read;
+    full (int8) = stats read + pack read/write(int8) + apply read(int8);
+    every pipeline writes the (params,) update once, dp/full also read
+    the pre-drawn noise vector."""
+    kxs = clients * params
+    if pipeline == "mean":
+        b = kxs * 4
+    elif pipeline in ("clip", "dp"):
+        b = kxs * 4 * 2
+    else:  # full: f32 stats + f32 pack-read + int8 pack-write + int8 apply
+        b = kxs * (4 + 4 + 1 + 1)
+    b += params * 4                       # update write
+    if pipeline in ("dp", "full"):
+        b += params * 4                   # pre-drawn noise read
+    return b
+
+
 def _time(fn, args, reps: int) -> float:
     jax.block_until_ready(fn(*args))          # compile + warm
     best = float("inf")
@@ -162,6 +225,8 @@ def run_cell(pipeline: str, params: int, clients: int, reps: int,
 
     tfn = jax.jit(tree_tail(pipeline, clients))
     ffn = jax.jit(flat_tail(pipeline, clients, layout))
+    fused = fused_tail(pipeline, clients, layout, threshold=0)
+    dispatch = fused_tail(pipeline, clients, layout)
     if check:
         # compare the deterministic part: the two paths draw their DP
         # noise differently by design (one key vs one key per leaf)
@@ -178,11 +243,33 @@ def run_cell(pipeline: str, params: int, clients: int, reps: int,
             err = float(jnp.max(jnp.abs(va - vb.reshape(va.shape))))
             rel = err / max(float(jnp.max(jnp.abs(vb))), 1e-12)
             assert rel <= tol, (pipeline, ka, rel)
+        # fused-vs-staged parity, noise ON (both draw the identical
+        # pre-drawn vector): bits==0 pipelines take the exact chunked
+        # GEMV route (bitwise contract); full takes the int8 coeff
+        # route (fp round-off: the dequant scale folds into the
+        # aggregation weight instead of multiplying post-sum)
+        f_out, _ = fused(mat, w, rng)
+        s_out, _ = fused_tail(pipeline, clients, layout,
+                              threshold=1 << 60)(mat, w, rng)
+        if pipeline == "full":
+            assert np.allclose(np.asarray(f_out), np.asarray(s_out),
+                               rtol=1e-4, atol=1e-5), pipeline
+        else:
+            assert np.array_equal(np.asarray(f_out),
+                                  np.asarray(s_out)), pipeline
     t_tree = _time(tfn, (deltas, w, rng), reps)
     t_flat = _time(ffn, (mat, w, rng), reps)
+    t_fused = _time(lambda *a: fused(*a)[0], (mat, w, rng), reps)
+    t_agg = _time(lambda *a: dispatch(*a)[0], (mat, w, rng), reps)
+    route = dispatch(mat, w, rng)[1]["route"]
+    nbytes = agg_bytes_moved(pipeline, layout.size, clients)
     return {"pipeline": pipeline, "params": total, "clients": clients,
             "leaves": len(sizes), "tree_us": t_tree * 1e6,
-            "flat_us": t_flat * 1e6, "speedup": t_tree / t_flat}
+            "flat_us": t_flat * 1e6, "speedup": t_tree / t_flat,
+            "fused_us": t_fused * 1e6, "fused_speedup": t_tree / t_fused,
+            "agg_us": t_agg * 1e6, "route": route,
+            "bytes_moved": nbytes,
+            "tpu_roofline_us": nbytes / roofline.HBM * 1e6}
 
 
 def run_smoke(reps: int):
@@ -191,9 +278,10 @@ def run_smoke(reps: int):
         cell = run_cell(pipeline, 300_000, 4, reps=reps, check=True)
         cells.append(cell)
         print(f"agg/smoke/{pipeline},{cell['flat_us']:.0f},"
-              f"speedup={cell['speedup']:.2f};leaves={cell['leaves']}")
+              f"speedup={cell['speedup']:.2f};leaves={cell['leaves']}"
+              f";agg_us={cell['agg_us']:.0f};route={cell['route']}")
         sys.stdout.flush()
-    print("smoke OK: flat == tree on every pipeline")
+    print("smoke OK: flat == tree and fused == staged on every pipeline")
     return cells
 
 
@@ -206,7 +294,14 @@ def gate_smoke(cells, baseline_path: str, tolerance: float,
     run ~1-20ms, where shared-runner scheduling noise alone spans a few
     x — the absolute floor keeps sub-floor jitter from flaking the gate
     while an order-of-magnitude regression (e.g. a path that silently
-    falls back to per-leaf sweeps) still blows through it."""
+    falls back to per-leaf sweeps) still blows through it.
+
+    A second, baseline-free check enforces the dispatcher's no-lose
+    floor within the fresh run itself: at smoke shapes ``agg_tail``
+    must route to the staged program and cost at most 1/0.9 of the
+    plain staged tail (plus the same absolute noise floor) — the
+    small-shape clip regression the fused path used to cause can never
+    come back silently."""
     with open(baseline_path) as f:
         base = json.load(f)
     ref = {c["pipeline"]: c for c in base.get("smoke", [])}
@@ -230,6 +325,18 @@ def gate_smoke(cells, baseline_path: str, tolerance: float,
               f"max({tolerance:g}x, {floor_us:.0f}us floor)) -> {verdict}")
         if c["flat_us"] > limit:
             bad += 1
+        # dispatcher no-lose floor (fresh-run-relative, no baseline
+        # needed): the shape-aware dispatch must keep small buffers on
+        # the staged path, within 0.9x of running it directly
+        if "agg_us" in c:
+            nl_limit = max(c["flat_us"] / 0.9, floor_us)
+            nl_ok = c["agg_us"] <= nl_limit and c["route"] == "staged"
+            print(f"gate/{c['pipeline']}/dispatch: agg_tail "
+                  f"{c['agg_us']:.0f}us route={c['route']} vs staged "
+                  f"{c['flat_us']:.0f}us (limit {nl_limit:.0f}us) -> "
+                  f"{'ok' if nl_ok else 'REGRESSION'}")
+            if not nl_ok:
+                bad += 1
     return bad
 
 
@@ -283,6 +390,10 @@ def main(argv=None):
                       f"{cell['flat_us']:.0f},"
                       f"tree_us={cell['tree_us']:.0f}"
                       f";speedup={cell['speedup']:.2f}"
+                      f";fused_us={cell['fused_us']:.0f}"
+                      f";fused_speedup={cell['fused_speedup']:.2f}"
+                      f";route={cell['route']}"
+                      f";roofline_us={cell['tpu_roofline_us']:.0f}"
                       f";leaves={cell['leaves']}")
                 sys.stdout.flush()
 
@@ -290,7 +401,9 @@ def main(argv=None):
         c = cs[-1]
         return {"pipeline": c["pipeline"], "params": c["params"],
                 "clients": c["clients"], "tree_us": c["tree_us"],
-                "flat_us": c["flat_us"], "speedup": c["speedup"]}
+                "flat_us": c["flat_us"], "speedup": c["speedup"],
+                "fused_us": c["fused_us"],
+                "fused_speedup": c["fused_speedup"]}
 
     # headline: the paper's full composition at the largest cell, plus
     # the same composition at the paper's own model scale (SO NWP ~4M)
@@ -301,6 +414,8 @@ def main(argv=None):
                    and c["clients"] == 16])
     best = max((c for c in cells if c["params"] >= 10_000_000
                 and c["clients"] == 16), key=lambda c: c["speedup"])
+    head_cell = [c for c in cells if c["pipeline"] == "full"
+                 and c["params"] >= 10_000_000 and c["clients"] == 16][-1]
     out = {"backend": jax.default_backend(),
            "devices": jax.device_count(),
            "clip": CLIP, "sigma": SIGMA,
@@ -308,11 +423,17 @@ def main(argv=None):
            "headline": head,
            "paper_scale": paper,
            "best_10M_16c": _head([best]),
+           "fused": {"threshold": kernel_ops.AGG_FUSE_THRESHOLD,
+                     "headline_fused_speedup": head["fused_speedup"],
+                     "headline_fused_us": head["fused_us"],
+                     "bytes_moved": head_cell["bytes_moved"],
+                     "tpu_roofline_us": head_cell["tpu_roofline_us"]},
            "cells": cells}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
-    print(f"# full @10M/16c: flat {head['speedup']:.2f}x "
-          f"({head['tree_us']:.0f}us -> {head['flat_us']:.0f}us); "
+    print(f"# full @10M/16c: flat {head['speedup']:.2f}x, "
+          f"fused {head['fused_speedup']:.2f}x "
+          f"({head['tree_us']:.0f}us -> {head['fused_us']:.0f}us); "
           f"full @4M/16c: {paper['speedup']:.2f}x; "
           f"best 10M/16c cell: {best['pipeline']} {best['speedup']:.2f}x; "
           f"wrote {args.out}")

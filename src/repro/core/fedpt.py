@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import repro.core.partition as part
 from repro.core import flat as flat_lib
 from repro.core import sanitize as sanitize_lib
+from repro.kernels import ops as kernel_ops
 from repro.optim import optimizers as opt_lib
 
 
@@ -122,7 +123,7 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
                   donate: bool = True, constrain_fn: Optional[Callable] = None,
                   constrain_flat_fn: Optional[Callable] = None,
                   constrain_batch_fn: Optional[Callable] = None,
-                  plan=None, sanitize=None):
+                  plan=None, sanitize=None, fused_threshold=None):
     """Builds round_step(y, server_state, frozen, batch, weights, rng) —
     or, under a non-trivial trainability ``plan``,
     round_step(y, server_state, frozen, batch, weights, tiers, rng).
@@ -210,61 +211,43 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
                 lambda cb: flat_client(y, cb, None))(batch)
         if constrain_flat_fn is not None:
             deltas = constrain_flat_fn(deltas, clients=True)
-        qinfo = None
-        if sanitize is not None:
-            # quarantine screen: FIRST, before quantize/clip (a NaN row
-            # norm would poison the clip weights); zeroed rows and
-            # weights fall out of every aggregation below
-            deltas, weights, qinfo = sanitize_lib.screen_rows(
-                deltas, weights, sanitize, layout.align)
 
-        # --- aggregation weights ----------------------------------------
-        if rc.uniform_weights or rc.dp_clip_norm > 0:
-            # uniform among *participants*: zero weights mark clients the
-            # grid scheduler dropped (stragglers / mid-round dropouts) and
-            # must stay excluded even under DP's fixed weighting
-            w = (weights > 0).astype(weights.dtype)
-        else:
-            w = weights
-        if rc.dp_clip_norm > 0:
-            # fixed denominator: the Gaussian sigma below is calibrated to
-            # sensitivity C/clients_per_round, so dropped (zero-weight)
-            # participants must shrink the numerator, not the denominator
-            wsum = jnp.asarray(float(rc.clients_per_round), jnp.float32)
-        else:
-            wsum = jnp.maximum(jnp.sum(w), 1e-12)
-
-        # --- lossy uplink + clip + weighted mean over the flat buffer.
-        # Quantization is one fused per-leaf-scale pass (bit-identical
-        # to the old tree sweep); clipping folds its scale into the
-        # aggregation weights (one norm pass, no scaled (C, size) copy);
-        # the mean is a single dot --------------------------------------
-        if rc.uplink_bits:
-            deltas = flat_lib.fake_quantize(deltas, layout, rc.uplink_bits)
-        if rc.dp_clip_norm > 0:
-            norms = flat_lib.row_norms(deltas, layout.align)
-            w = w * jnp.minimum(1.0, rc.dp_clip_norm
-                                / jnp.maximum(norms, 1e-12))
-            metrics = dict(metrics, update_norm=jnp.mean(norms))
-        if tiered and rc.dp_clip_norm <= 0:
-            # per-block mask-weighted mean: blocks a tier froze carry
-            # zero weight for its clients; blocks nobody trained stay 0
-            bmask = jnp.asarray(plan.block_masks())[tiers]     # (C, NB)
-            flat_delta = flat_lib.block_masked_mean(deltas, w, bmask,
-                                                    layout.align)
-        else:
-            # fixed denominator (DP) or single tier: plain weighted mean
-            flat_delta = flat_lib.weighted_mean(deltas, w, wsum)
-        if constrain_flat_fn is not None:
-            flat_delta = constrain_flat_fn(flat_delta, clients=False)
-
-        # --- central Gaussian noise (sensitivity C / n under clipping):
-        # one PRNG call over the flat buffer; pads are dropped at
-        # unflatten, so only the flat vector's norm sees their noise ----
+        # --- the whole server tail — quarantine screen, lossy uplink
+        # quantize, clip fold, weighted/fixed-denominator mean, output
+        # constraint, DP Gaussian noise — as ONE dispatched op
+        # (kernels/ops.agg_tail): staged per-op sequence for small
+        # buffers (bit-identical to the historical tail), the fused
+        # stats/pack/apply sweep above the dispatch threshold. Under DP
+        # the denominator is the fixed clients_per_round (sigma is
+        # calibrated to sensitivity C/n, so dropped zero-weight
+        # participants shrink the numerator, never the denominator) ----
         noised = rc.dp_clip_norm > 0 and rc.dp_noise_multiplier > 0
-        if noised:
-            sigma = rc.dp_noise_multiplier * rc.dp_clip_norm / rc.clients_per_round
-            flat_delta = flat_lib.add_noise(flat_delta, sigma, rng)
+        sigma = (rc.dp_noise_multiplier * rc.dp_clip_norm
+                 / rc.clients_per_round) if noised else 0.0
+        flat_delta, ainfo = kernel_ops.agg_tail(
+            deltas, weights,
+            block_leaf=layout.block_leaf(),
+            n_leaves=len(layout.sizes),
+            align=layout.align,
+            bits=rc.uplink_bits or 0,
+            clip_norm=rc.dp_clip_norm if rc.dp_clip_norm > 0 else 0.0,
+            # uniform among *participants*: zero weights mark clients the
+            # grid scheduler dropped and must stay excluded even under
+            # DP's fixed weighting
+            uniform=bool(rc.uniform_weights or rc.dp_clip_norm > 0),
+            wsum_fixed=(float(rc.clients_per_round)
+                        if rc.dp_clip_norm > 0 else None),
+            sigma=sigma, rng=rng if noised else None,
+            # per-block mask-weighted mean for tiers (blocks a tier froze
+            # carry zero weight for its clients); under DP/clip the mean
+            # keeps the fixed denominator instead
+            bmask=(jnp.asarray(plan.block_masks())[tiers]
+                   if tiered and rc.dp_clip_norm <= 0 else None),
+            block_denom=tiered and rc.dp_clip_norm <= 0,
+            screen=sanitize,
+            constrain_fn=(None if constrain_flat_fn is None else
+                          lambda v: constrain_flat_fn(v, clients=False)),
+            threshold=fused_threshold)
 
         # --- ServerOpt on the pseudo-gradient ---------------------------
         delta = layout.unflatten(flat_delta, dtype=jnp.float32)
@@ -274,12 +257,12 @@ def make_round_fn(loss_fn: Callable, rc: RoundConfig,
                        "delta_norm": opt_lib.tree_global_norm(delta)
                        if noised else jnp.sqrt(
                            flat_lib.sumsq(flat_delta, layout.align))}
-        if "update_norm" in metrics:
-            out_metrics["update_norm"] = jnp.mean(metrics["update_norm"])
-        if qinfo is not None:
-            out_metrics["quarantine_nonfinite"] = qinfo["nonfinite"]
-            out_metrics["quarantine_outlier"] = qinfo["outlier"]
-            out_metrics["quarantine_norms"] = qinfo["norms"]
+        if "update_norms" in ainfo:
+            out_metrics["update_norm"] = jnp.mean(ainfo["update_norms"])
+        if sanitize is not None:
+            out_metrics["quarantine_nonfinite"] = ainfo["nonfinite"]
+            out_metrics["quarantine_outlier"] = ainfo["outlier"]
+            out_metrics["quarantine_norms"] = ainfo["norms"]
         return y_new, server_state, out_metrics
 
     if tiered:
@@ -427,7 +410,7 @@ def make_lane_step(loss_fn: Callable, rc: RoundConfig, lane: int,
 def make_buffered_apply(server_opt: opt_lib.Optimizer,
                         flush_dp=None,
                         constrain_flat_fn: Optional[Callable] = None,
-                        plan=None, sanitize=None):
+                        plan=None, sanitize=None, fused_threshold=None):
     """Server-side flush of an async buffer: apply(y, server_state,
     flat_deltas, weights[, rng]) with ``flat_deltas`` the (K, size) stack
     of flat client deltas and weights (K,) already including the
@@ -483,31 +466,32 @@ def make_buffered_apply(server_opt: opt_lib.Optimizer,
         layout = flat_lib.FlatLayout.of(y)
         if constrain_flat_fn is not None:
             flat_deltas = constrain_flat_fn(flat_deltas, clients=True)
-        qinfo = None
-        if sanitize is not None:
-            flat_deltas, weights, qinfo = sanitize_lib.screen_rows(
-                flat_deltas, weights, sanitize, layout.align)
-        if tiered:
-            bmask = jnp.asarray(plan.block_masks())[tier_ids]   # (K, NB)
-            K = flat_deltas.shape[0]
-            flat_deltas = (flat_deltas.reshape(K, -1, layout.align)
-                           * bmask[:, :, None]).reshape(K, -1)
-        if flush_dp is not None:
-            wsum = jnp.asarray(float(flush_dp.goal_count), jnp.float32)
-            flat_delta = flat_lib.weighted_mean(flat_deltas, weights, wsum)
-        elif tiered:
-            flat_delta = flat_lib.block_masked_mean(flat_deltas, weights,
-                                                    bmask, layout.align)
-        else:
-            wsum = jnp.maximum(jnp.sum(weights), 1e-12)
-            flat_delta = flat_lib.weighted_mean(flat_deltas, weights, wsum)
-        if constrain_flat_fn is not None:
-            flat_delta = constrain_flat_fn(flat_delta, clients=False)
         noised = flush_dp is not None and flush_dp.noise_multiplier > 0
-        if noised:
-            if rng is None:
-                raise ValueError("flush DP noise needs a per-flush rng key")
-            flat_delta = flat_lib.add_noise(flat_delta, flush_dp.sigma, rng)
+        if noised and rng is None:
+            raise ValueError("flush DP noise needs a per-flush rng key")
+        # screen -> tier row re-mask -> mean (fixed goal_count
+        # denominator under flush DP, per-block mask-weighted otherwise
+        # for tiers) -> constraint -> per-flush Gaussian, as ONE
+        # dispatched op — staged per-op sequence below the threshold,
+        # fused stats/apply sweep above it
+        flat_delta, ainfo = kernel_ops.agg_tail(
+            flat_deltas, weights,
+            block_leaf=layout.block_leaf(),
+            n_leaves=len(layout.sizes),
+            align=layout.align,
+            wsum_fixed=(float(flush_dp.goal_count)
+                        if flush_dp is not None else None),
+            sigma=flush_dp.sigma if noised else 0.0,
+            rng=rng if noised else None,
+            bmask=(jnp.asarray(plan.block_masks())[tier_ids]
+                   if tiered else None),
+            remask_rows=tiered,
+            block_denom=tiered and flush_dp is None,
+            screen=sanitize,
+            constrain_fn=(None if constrain_flat_fn is None else
+                          lambda v: constrain_flat_fn(v, clients=False)),
+            threshold=fused_threshold)
+        qinfo = ainfo if sanitize is not None else None
         delta = layout.unflatten(flat_delta, dtype=jnp.float32)
         neg = jax.tree_util.tree_map(lambda d: -d, delta)
         y_new, server_state = server_opt.update(y, neg, server_state)

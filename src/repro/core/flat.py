@@ -282,6 +282,15 @@ def pad_rows(mat: jnp.ndarray, rows: int) -> jnp.ndarray:
     return jnp.concatenate([mat, pad])
 
 
+def draw_noise(rng, size: int, sigma: float) -> jnp.ndarray:
+    """Pre-draw the (size,) Gaussian :func:`add_noise` would add:
+    ``add_noise(v, sigma, rng) == v + draw_noise(rng, v.size, sigma)``
+    bit-for-bit (same single PRNG call, same scaling) — the invariance
+    contract the fused aggregation tail relies on to start its
+    accumulator from the noise vector instead of sweeping again."""
+    return sigma * jax.random.normal(rng, (size,), jnp.float32)
+
+
 def add_noise(vec: jnp.ndarray, sigma: float, rng) -> jnp.ndarray:
     """Add N(0, sigma^2) to the flat vector: ONE PRNG call instead of
     one per leaf. Pad slots receive noise too — ``unflatten`` discards

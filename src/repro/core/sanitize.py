@@ -56,6 +56,46 @@ class SanitizeConfig:
         return not self.nonfinite and self.norm_mult <= 0
 
 
+def screen_from_stats(norms: jnp.ndarray, row_finite: jnp.ndarray,
+                      weights: jnp.ndarray, cfg: SanitizeConfig
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                 Dict[str, jnp.ndarray]]:
+    """Quarantine decisions from precomputed per-row stats.
+
+    ``norms`` are the pre-screen L2 row norms and ``row_finite`` the
+    all-elements-finite flags — :func:`screen_rows` computes both with
+    its own sweeps; the fused aggregation tail
+    (``kernels/agg_tail.py``) reads them off its stats pass so the
+    screen costs no extra pass over the buffer. A row with
+    ``row_finite`` False may carry a NaN/Inf ``norms`` entry: every use
+    below is masked by ``row_finite``, so the value is never observed
+    (the reported ``norms`` are zeroed there, matching the NaN-free
+    view ``screen_rows`` reduces).
+
+    Returns ``(clean_weights, quarantine_mask, info)``. Decisions are
+    bitwise identical to :func:`screen_rows` on the same stats
+    (test-enforced)."""
+    if cfg.nonfinite:
+        nonfinite_q = ~row_finite
+    else:
+        nonfinite_q = jnp.zeros_like(row_finite)
+
+    if cfg.norm_mult > 0:
+        live = (weights > 0) & row_finite & (norms > 0)
+        med = jnp.nanmedian(jnp.where(live, norms, jnp.nan))
+        # no live rows -> med is NaN -> comparisons are False (no
+        # quarantine), which is the right degenerate answer
+        outlier_q = live & (norms > cfg.norm_mult * med)
+    else:
+        outlier_q = jnp.zeros_like(row_finite)
+
+    q = nonfinite_q | outlier_q
+    clean_w = jnp.where(q, 0.0, weights)
+    info = {"nonfinite": nonfinite_q, "outlier": outlier_q,
+            "norms": jnp.where(row_finite, norms, 0.0)}
+    return clean_w, q, info
+
+
 def screen_rows(mat: jnp.ndarray, weights: jnp.ndarray, cfg: SanitizeConfig,
                 align: int = flat_lib.ALIGN
                 ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray]]:
@@ -72,26 +112,8 @@ def screen_rows(mat: jnp.ndarray, weights: jnp.ndarray, cfg: SanitizeConfig,
     # the median either
     safe = jnp.where(finite, mat, 0.0)
     norms = jnp.sqrt(flat_lib.row_sumsq(safe, align))
-
-    if cfg.nonfinite:
-        nonfinite_q = ~row_finite
-    else:
-        nonfinite_q = jnp.zeros_like(row_finite)
-
-    if cfg.norm_mult > 0:
-        live = (weights > 0) & row_finite & (norms > 0)
-        med = jnp.nanmedian(jnp.where(live, norms, jnp.nan))
-        # no live rows -> med is NaN -> comparisons are False (no
-        # quarantine), which is the right degenerate answer
-        outlier_q = live & (norms > cfg.norm_mult * med)
-    else:
-        outlier_q = jnp.zeros_like(row_finite)
-
-    q = nonfinite_q | outlier_q
+    clean_w, q, info = screen_from_stats(norms, row_finite, weights, cfg)
     clean = jnp.where(q[:, None], 0.0, mat)
-    clean_w = jnp.where(q, 0.0, weights)
-    info = {"nonfinite": nonfinite_q, "outlier": outlier_q,
-            "norms": jnp.where(row_finite, norms, 0.0)}
     return clean, clean_w, info
 
 

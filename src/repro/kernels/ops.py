@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import agg_tail as _agg
 from repro.kernels import dp_clip as _dp
 from repro.kernels import quantize as _q
 from repro.kernels import ref as _ref
@@ -20,6 +21,23 @@ from repro.kernels import swa_attention as _swa
 
 _ON_TPU = jax.default_backend() == "tpu"
 _INTERPRET = not _ON_TPU
+
+# agg_tail dispatcher: the fused stats/pack/apply path engages by
+# default only when BOTH hold —
+#   * quantization is on (bits > 0): that is where the staged tail
+#     pays >= 4 sweeps (maxabs, Q->DQ write, norm, mean) and the fused
+#     int8 pack/apply collapses them. The unquantized pipelines are
+#     already minimal-sweep (mean: one GEMV; clip: norm + GEMV), so
+#     the fused stage orchestration is pure overhead there (measured
+#     0.1-0.9x on concrete CPU buffers);
+#   * the buffer has at least this many elements (K * size): below it
+#     the orchestration's fixed cost loses to one well-fused XLA
+#     program even with quantization on. 4M elements puts the bench's
+#     300k-param smoke shapes on the staged side and every
+#     >= 1M x 8-client quantized cell on the fused side.
+# An EXPLICIT threshold routes purely by size (0 forces fused, a huge
+# value forces staged) — that is the test/bench override knob.
+AGG_FUSE_THRESHOLD = 4 << 20
 
 
 @functools.partial(jax.jit, static_argnames=("window", "causal", "bq", "bk"))
@@ -64,3 +82,123 @@ def seed_reconstruct(seed, leaf_id: int, shape, stddev: float,
     """Deterministic on-chip Gaussian tensor from (seed, leaf_id)."""
     return _sr.seed_reconstruct(seed, leaf_id, shape, stddev, dtype=dtype,
                                 interpret=_INTERPRET)
+
+
+# ---------------------------------------------------------------------------
+# Fused server aggregation tail (kernels/agg_tail.py) behind a
+# shape-aware dispatcher.
+
+
+def _fake_quantize(mat, block_leaf, n_leaves, bits, align):
+    # same dispatch as core.flat.fake_quantize, without needing a layout
+    if _ON_TPU and bits == 8:
+        return jax.lax.map(
+            lambda row: fake_quantize_flat(row, block_leaf, n_leaves,
+                                           block=align), mat)
+    return _ref.fake_quantize_flat_ref(mat, block_leaf, bits=bits,
+                                       block=align, n_leaves=n_leaves)
+
+
+def _staged_tail(mat, weights, block_leaf, bmask, rng, *, n_leaves,
+                 align, bits, clip_norm, uniform, wsum_fixed, sigma,
+                 block_denom, remask_rows, screen, constrain_fn=None):
+    """The historical op-by-op tail — what the round engines ran before
+    the fused path existed, verbatim. Small shapes dispatch here (and it
+    is the bit-exactness oracle the fused contract is tested against)."""
+    from repro.core import flat as flat_lib       # lazy: layering
+    from repro.core import sanitize as sanitize_lib
+
+    # no "route" key here: this function runs under jit, and jit outputs
+    # must be arrays — agg_tail stamps the route after the call
+    info = {}
+    if screen is not None:
+        mat, weights, sinfo = sanitize_lib.screen_rows(
+            mat, weights, screen, align)
+        info.update(sinfo)
+    w = (weights > 0).astype(weights.dtype) if uniform else weights
+    if wsum_fixed is not None:
+        wsum = jnp.asarray(float(wsum_fixed), jnp.float32)
+    else:
+        wsum = jnp.maximum(jnp.sum(w), 1e-12)
+    if remask_rows:
+        K = mat.shape[0]
+        mat = (mat.reshape(K, -1, align) * bmask[:, :, None]).reshape(K, -1)
+    if bits > 0:
+        mat = _fake_quantize(mat, block_leaf, n_leaves, bits, align)
+    if clip_norm > 0:
+        norms = jnp.sqrt(_ref.row_sumsq_ref(mat, chunk=align))
+        w = w * jnp.minimum(1.0, clip_norm / jnp.maximum(norms, 1e-12))
+        info["update_norms"] = norms
+    if block_denom:
+        out = flat_lib.block_masked_mean(mat, w, bmask, align)
+    else:
+        out = flat_lib.weighted_mean(mat, w, wsum)
+    if constrain_fn is not None:
+        out = constrain_fn(out)
+    if sigma > 0:
+        out = flat_lib.add_noise(out, sigma, rng)
+    return out, info
+
+
+_staged_tail_jit = jax.jit(
+    _staged_tail,
+    static_argnames=("n_leaves", "align", "bits", "clip_norm", "uniform",
+                     "wsum_fixed", "sigma", "block_denom", "remask_rows",
+                     "screen"))
+
+
+def agg_tail(mat, weights, *, block_leaf, n_leaves: int, align: int = 1024,
+             bits: int = 0, clip_norm: float = 0.0, uniform: bool = False,
+             wsum_fixed=None, sigma: float = 0.0, rng=None, bmask=None,
+             remask_rows: bool = False, block_denom: bool = False,
+             screen=None, constrain_fn=None, threshold=None):
+    """One-sweep server aggregation tail with shape-aware dispatch.
+
+    Computes the full post-training server pipeline over the (K, size)
+    flat delta buffer — quarantine screen, per-leaf int-``bits``
+    fake-quantize, per-row L2 clip folded into the weights, weighted /
+    fixed-denominator mean (per-block denominator for trainability
+    tiers), output sharding constraint, DP Gaussian noise — and returns
+    ``(update, info)`` with the quarantine masks / norms the round
+    engines report as metrics plus the dispatch ``route`` taken.
+
+    Dispatch (shape- AND pipeline-aware): by default the fused
+    stats/pack/apply path of ``kernels/agg_tail.py`` engages only for
+    quantized pipelines (``bits > 0`` — where the staged tail pays its
+    >= 4 sweeps) on buffers of at least :data:`AGG_FUSE_THRESHOLD`
+    elements; everything else runs the staged op sequence,
+    bit-identical to the historical tail. The fused path is Pallas
+    kernels on TPU, python-orchestrated stage jits on concrete CPU
+    buffers, the inlined ref composition under an outer trace. An
+    explicit ``threshold`` routes purely by size: ``0`` forces fused,
+    ``threshold > K*size`` forces staged.
+    """
+    kw = dict(n_leaves=n_leaves, align=align, bits=bits,
+              clip_norm=clip_norm, uniform=uniform, wsum_fixed=wsum_fixed,
+              sigma=sigma, block_denom=block_denom,
+              remask_rows=remask_rows, screen=screen)
+    K, size = mat.shape
+    traced = isinstance(mat, jax.core.Tracer)
+    if threshold is None:
+        fuse = bits > 0 and K * size >= AGG_FUSE_THRESHOLD
+    else:
+        fuse = K * size >= threshold
+    if not fuse:
+        if traced or constrain_fn is not None:
+            out, info = _staged_tail(mat, weights, block_leaf, bmask, rng,
+                                     constrain_fn=constrain_fn, **kw)
+        else:
+            out, info = _staged_tail_jit(mat, weights,
+                                         jnp.asarray(block_leaf, jnp.int32),
+                                         bmask, rng, **kw)
+        info["route"] = "staged"
+        return out, info
+    if _ON_TPU:
+        engine = "tpu"
+    elif traced:
+        engine = "ref"
+    else:
+        engine = "jit"
+    return _agg.compose(mat, weights, block_leaf=block_leaf, rng=rng,
+                        bmask=bmask, constrain_fn=constrain_fn,
+                        engine=engine, **kw)

@@ -149,6 +149,16 @@ class GridConfig:
     # with zero weight (under DP the fixed denominator is untouched);
     # every quarantined row emits a traced "quarantine" event.
     sanitize: Any = None
+    # --- fused aggregation tail (kernels/ops.agg_tail) ---
+    # None = the shape- and pipeline-aware default: quantized delta
+    # buffers (uplink_bits > 0) with at least
+    # kernels.ops.AGG_FUSE_THRESHOLD elements (K x size) take the fused
+    # stats/pack/apply sweep, everything else the staged per-op tail
+    # (bit-identical to the historical sequence). An int overrides it
+    # and routes purely by size: 0 forces fused everywhere, a huge
+    # value forces staged everywhere — both round engines (sync rounds
+    # and async buffered flushes) thread it through.
+    agg_tail_threshold: Optional[int] = None
     # --- mid-run checkpoint / resume (checkpoint/grid_state.py) ---
     # checkpoint_every > 0 snapshots the full execution state into
     # checkpoint_dir every N server updates (async: at flush
@@ -452,7 +462,8 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
     round_fn, sopt = fedpt.make_round_fn(loss_fn, rc, server_opt=server_opt,
                                          constrain_flat_fn=constrain_flat,
                                          constrain_batch_fn=constrain_batch,
-                                         plan=cplan, sanitize=san)
+                                         plan=cplan, sanitize=san,
+                                         fused_threshold=grid.agg_tail_threshold)
     round_fn = prof_lib.annotate(jax.jit(round_fn, donate_argnums=(0, 1)),
                                  "grid/round_fn", enabled=profile)
     sstate = sopt.init(y)
@@ -742,7 +753,8 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
     apply_fn = prof_lib.annotate(
         jax.jit(fedpt.make_buffered_apply(
             server_opt, flush_dp=flush_dp, constrain_flat_fn=constrain_flat,
-            plan=cplan, sanitize=san), donate_argnums=(0, 1)),
+            plan=cplan, sanitize=san,
+            fused_threshold=grid.agg_tail_threshold), donate_argnums=(0, 1)),
         "grid/server_apply", enabled=profile)
     staleness_fn = fedpt.get_staleness_fn(grid.staleness, **grid.staleness_kw)
     if flush_dp is not None:

@@ -1,0 +1,380 @@
+"""Fused one-sweep aggregation tail (kernels/agg_tail.py) vs the staged
+op sequence, and the shape-aware dispatcher in kernels/ops.agg_tail.
+
+The contract (module docstring of kernels/agg_tail.py):
+
+* any pipeline without quantization, and quantize-only, are **bitwise**
+  identical to the staged tail on CPU (the fused apply is a
+  column-chunked GEMV — chunking never reorders the K accumulation);
+* quantize + clip and/or noise agree within fp round-off (the clip
+  weights fold the quantized sum-of-squares and the apply folds
+  scale x clip x weight / denominator into one coefficient).
+
+Quarantine *decisions* must be identical on both routes (the fused path
+reads the screen off its stats pass instead of `screen_rows`' own
+sweep); the reported norms may differ by reassociation ulps only.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flat as flat_lib
+from repro.core import sanitize as sanitize_lib
+from repro.kernels import agg_tail as agg_tail_lib
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref
+
+ALIGN = 256           # small blocks: every test compiles in well under 1s
+BL = np.asarray([0, 0, 0, 1, 2, 2, 3, 3], np.int32)     # 4 leaves, 8 blocks
+NB = len(BL)
+SIZE = NB * ALIGN
+K = 6
+
+STAGED = 1 << 60      # threshold above any K*size: forces the staged path
+FUSED = 0             # forces the fused path
+
+
+def make_mat(seed=0, k=K, nan_row=None, inf_row=None, outlier_row=None):
+    rng = np.random.default_rng(seed)
+    mat = rng.normal(0, 0.5, (k, SIZE)).astype(np.float32)
+    if nan_row is not None:
+        mat[nan_row, 17] = np.nan
+    if inf_row is not None:
+        mat[inf_row, SIZE // 2 + 1] = np.inf
+    if outlier_row is not None:
+        mat[outlier_row] *= 1e6
+    return jnp.asarray(mat)
+
+
+def make_weights(seed=1, k=K, zero=()):
+    w = np.random.default_rng(seed).uniform(0.5, 2.0, (k,)).astype(np.float32)
+    for i in zero:
+        w[i] = 0.0
+    return jnp.asarray(w)
+
+
+def tier_bmask(k=K):
+    """Two tiers: even rows train every block, odd rows only leaves 0/3
+    (a contiguous-sub-layout stand-in: tier-sliced widths)."""
+    masks = np.ones((k, NB), np.float32)
+    masks[1::2] = (BL == 0) | (BL == 3)
+    return jnp.asarray(masks)
+
+
+def run_both(mat, w, rng=None, **kw):
+    kw.setdefault("block_leaf", BL)
+    kw.setdefault("n_leaves", 4)
+    kw.setdefault("align", ALIGN)
+    s_out, s_info = kernel_ops.agg_tail(mat, w, rng=rng, threshold=STAGED,
+                                        **kw)
+    f_out, f_info = kernel_ops.agg_tail(mat, w, rng=rng, threshold=FUSED,
+                                        **kw)
+    assert s_info["route"] == "staged"
+    assert f_info["route"].startswith("fused/")
+    return (np.asarray(s_out), s_info), (np.asarray(f_out), f_info)
+
+
+# ---------------------------------------------------------------------------
+# Bitwise contract: every pipeline without quantize+clip/noise folding
+
+
+BITWISE_CASES = {
+    "mean": dict(),
+    "uniform_mean": dict(uniform=True),
+    "quant_only": dict(bits=8),
+    "tiered_sync": dict(block_denom=True),
+    "tiered_async": dict(remask_rows=True, block_denom=True),
+    "tiered_quant": dict(bits=8, block_denom=True),
+}
+
+# clip fold / noise add: the stage-jit path computes the fold in a
+# different XLA program than the staged tail, and XLA:CPU contracts the
+# multiply-adds (FMA) differently across program boundaries — a couple
+# of ulps, never more (measured ~1e-7 relative)
+ULP_CASES = {
+    "clip": dict(clip_norm=0.5, uniform=True, wsum_fixed=float(K)),
+    "dp_no_quant": dict(clip_norm=0.5, uniform=True, wsum_fixed=float(K),
+                        sigma=0.01),
+    "noise_only": dict(wsum_fixed=float(K), sigma=0.02),
+    "tiered_async_dp": dict(remask_rows=True, wsum_fixed=float(K),
+                            sigma=0.02),
+}
+
+
+def _fill_tiers(kw):
+    if kw.pop("block_denom", False) or kw.get("remask_rows"):
+        kw["bmask"] = tier_bmask()
+        kw["block_denom"] = "wsum_fixed" not in kw
+    return kw
+
+
+@pytest.mark.parametrize("name", sorted(BITWISE_CASES))
+def test_fused_matches_staged_bitwise(name):
+    kw = _fill_tiers(dict(BITWISE_CASES[name]))
+    mat, w = make_mat(seed=hash(name) % 997), make_weights()
+    (s_out, _), (f_out, _) = run_both(mat, w, **kw)
+    assert np.array_equal(s_out, f_out), name
+
+
+@pytest.mark.parametrize("name", sorted(ULP_CASES))
+def test_fused_matches_staged_ulp(name):
+    kw = _fill_tiers(dict(ULP_CASES[name]))
+    rng = jax.random.key(7) if kw.get("sigma") else None
+    mat, w = make_mat(seed=hash(name) % 997), make_weights()
+    (s_out, _), (f_out, _) = run_both(mat, w, rng=rng, **kw)
+    assert np.allclose(s_out, f_out, rtol=1e-5, atol=1e-7), name
+
+
+def test_fused_matches_staged_zero_weight_padding_rows():
+    """Zero-weight rows (scheduler-dropped / flush padding) contribute
+    exact zero on both routes — bitwise, quantized and not."""
+    mat, w = make_mat(seed=5), make_weights(zero=(2, 5))
+    for kw in (dict(), dict(bits=8), dict(uniform=True)):
+        (s_out, _), (f_out, _) = run_both(mat, w, **kw)
+        assert np.array_equal(s_out, f_out), kw
+    # and the padding rows genuinely don't contribute: zeroing their
+    # data changes nothing
+    mat0 = mat.at[2].set(1e9).at[5].set(-1e9)
+    (s_out, _), _ = run_both(mat, w)
+    (s_out0, _), _ = run_both(mat0, w)
+    assert np.array_equal(s_out, s_out0)
+
+
+def test_fused_matches_staged_full_pipeline_fp():
+    """int8 + clip + noise: the coeff route folds dequantize scale x
+    clip x weight / denominator — fp round-off, not bitwise."""
+    mat, w = make_mat(seed=9), make_weights()
+    rng = jax.random.key(3)
+    (s_out, s_info), (f_out, f_info) = run_both(
+        mat, w, rng=rng, bits=8, clip_norm=0.5, uniform=True,
+        wsum_fixed=float(K), sigma=0.01)
+    assert np.allclose(s_out, f_out, rtol=1e-4, atol=1e-5)
+    assert np.allclose(np.asarray(s_info["update_norms"]),
+                       np.asarray(f_info["update_norms"]), rtol=1e-3)
+    assert f_info["route"].endswith("/coeff")
+
+
+# ---------------------------------------------------------------------------
+# Quarantine screen folded into the stats sweep
+
+
+def test_screen_quarantine_decisions_identical_both_routes():
+    """NaN row, Inf row, outlier-norm row, clean rows: the fused route
+    reads the screen off its stats pass — decisions must match
+    screen_rows' standalone sweep exactly (norms up to reassociation)."""
+    cfg = sanitize_lib.SanitizeConfig(nonfinite=True, norm_mult=10.0)
+    mat = make_mat(seed=11, nan_row=1, inf_row=4, outlier_row=2)
+    w = make_weights()
+    for kw in (dict(), dict(bits=8),
+               dict(bits=8, clip_norm=0.5, uniform=True,
+                    wsum_fixed=float(K), sigma=0.01)):
+        rng = jax.random.key(1) if kw.get("sigma") else None
+        (s_out, s_info), (f_out, f_info) = run_both(mat, w, rng=rng,
+                                                    screen=cfg, **kw)
+        for key in ("nonfinite", "outlier"):
+            assert np.array_equal(np.asarray(s_info[key]),
+                                  np.asarray(f_info[key])), (kw, key)
+        assert bool(np.asarray(f_info["nonfinite"])[1])
+        assert bool(np.asarray(f_info["nonfinite"])[4])
+        assert bool(np.asarray(f_info["outlier"])[2])
+        assert np.asarray(f_info["nonfinite"]).sum() == 2
+        assert np.asarray(f_info["outlier"]).sum() == 1
+        # reported norms: zeroed on non-finite rows, reassociation-close
+        assert np.allclose(np.asarray(s_info["norms"]),
+                           np.asarray(f_info["norms"]), rtol=1e-5), kw
+        assert np.all(np.isfinite(f_out)), kw
+        tol = 1e-4 if kw.get("bits") and (kw.get("clip_norm")
+                                          or kw.get("sigma")) else 0.0
+        assert np.allclose(s_out, f_out, rtol=tol, atol=tol), kw
+
+
+def test_screen_from_stats_matches_screen_rows():
+    """Regression for the folded sweep: screen_from_stats fed the fused
+    path's raw stats (NaN norms on non-finite rows and all) must decide
+    exactly like screen_rows' own NaN-free-view sweep."""
+    cfg = sanitize_lib.SanitizeConfig(nonfinite=True, norm_mult=8.0)
+    mat = make_mat(seed=13, nan_row=0, inf_row=3, outlier_row=5)
+    w = make_weights(zero=(4,))
+    _, w_rows, info_rows = sanitize_lib.screen_rows(mat, w, cfg, ALIGN)
+    # the fused path's stats: raw norms (NaN/Inf on poisoned rows),
+    # finiteness off the block max-abs
+    bmax, bsumsq = ref.agg_block_stats_ref(mat, block=ALIGN,
+                                           with_sumsq=True)
+    raw_norms = jnp.sqrt(bsumsq @ jnp.ones((NB,), jnp.float32))
+    row_finite = jnp.all(jnp.isfinite(bmax), axis=-1)
+    w_stats, q, info_stats = sanitize_lib.screen_from_stats(
+        raw_norms, row_finite, w, cfg)
+    assert np.array_equal(np.asarray(info_rows["nonfinite"]),
+                          np.asarray(info_stats["nonfinite"]))
+    assert np.array_equal(np.asarray(info_rows["outlier"]),
+                          np.asarray(info_stats["outlier"]))
+    assert np.array_equal(np.asarray(w_rows), np.asarray(w_stats))
+    assert np.array_equal(np.asarray(q), np.asarray(
+        info_stats["nonfinite"] | info_stats["outlier"]))
+    assert np.allclose(np.asarray(info_rows["norms"]),
+                       np.asarray(info_stats["norms"]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Pre-drawn noise invariance and the stats oracle
+
+
+def test_draw_noise_matches_add_noise_bitwise():
+    rng = jax.random.key(42)
+    v = jnp.asarray(np.random.default_rng(0).normal(size=SIZE), jnp.float32)
+    want = flat_lib.add_noise(v, 0.25, rng)
+    got = v + flat_lib.draw_noise(rng, SIZE, 0.25)
+    assert np.array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_block_stats_match_standalone_sweeps():
+    """bmax == blockwise max|x| (NaN-propagating), bsumsq @ ones ==
+    row_sumsq bitwise — the deleted standalone screen sweep's values."""
+    mat = make_mat(seed=17, nan_row=2)
+    bmax, bsumsq = ref.agg_block_stats_ref(mat, block=ALIGN,
+                                           with_sumsq=True)
+    x3 = np.asarray(mat).reshape(K, NB, ALIGN)
+    want_max = np.max(np.abs(x3), axis=-1)
+    got = np.asarray(bmax)
+    assert np.array_equal(got[np.isfinite(want_max)],
+                          want_max[np.isfinite(want_max)])
+    assert np.isnan(got[2, 0]) and np.isnan(want_max[2, 0])
+    rss = np.asarray(jnp.matmul(bsumsq, jnp.ones((NB,), jnp.float32)))
+    want_rss = np.asarray(ref.row_sumsq_ref(mat, chunk=ALIGN))
+    finite = np.isfinite(want_rss)
+    assert np.array_equal(rss[finite], want_rss[finite])
+
+
+def test_maxabs_chunk_int32_bitcast_matches_float():
+    x = jnp.asarray(np.random.default_rng(3).normal(
+        size=(32, 512)), jnp.float32)
+    got = ref._maxabs_chunk(x)
+    want = jnp.max(jnp.abs(x), axis=-1)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    xn = x.at[7, 100].set(jnp.nan)
+    assert np.isnan(np.asarray(ref._maxabs_chunk(xn))[7])
+
+
+# ---------------------------------------------------------------------------
+# Shape-aware dispatch
+
+
+def test_dispatcher_routes_small_shapes_staged():
+    mat, w = make_mat(), make_weights()
+    assert K * SIZE < kernel_ops.AGG_FUSE_THRESHOLD
+    _, info = kernel_ops.agg_tail(mat, w, block_leaf=BL, n_leaves=4,
+                                  align=ALIGN, bits=8)
+    assert info["route"] == "staged"
+    _, info = kernel_ops.agg_tail(mat, w, block_leaf=BL, n_leaves=4,
+                                  align=ALIGN, bits=8, threshold=0)
+    assert info["route"] == "fused/jit/exact"
+
+
+def test_dispatcher_default_is_pipeline_aware():
+    """Above the size threshold the default dispatch fuses only
+    quantized pipelines — unquantized ones are already minimal-sweep
+    and the stage orchestration measurably loses on them."""
+    k, nb = 4, kernel_ops.AGG_FUSE_THRESHOLD // (4 * ALIGN)
+    big_bl = np.zeros(nb, np.int32)
+    size = nb * ALIGN
+    assert k * size >= kernel_ops.AGG_FUSE_THRESHOLD
+    mat = jnp.asarray(np.random.default_rng(0).normal(
+        0, 0.5, (k, size)).astype(np.float32))
+    w = jnp.ones((k,), jnp.float32)
+    _, info = kernel_ops.agg_tail(mat, w, block_leaf=big_bl, n_leaves=1,
+                                  align=ALIGN)
+    assert info["route"] == "staged"          # bits=0: nothing to fuse
+    _, info = kernel_ops.agg_tail(mat, w, block_leaf=big_bl, n_leaves=1,
+                                  align=ALIGN, bits=8)
+    assert info["route"] == "fused/jit/exact"  # quantized: fuse
+    _, info = kernel_ops.agg_tail(mat, w, block_leaf=big_bl, n_leaves=1,
+                                  align=ALIGN, threshold=0)
+    assert info["route"].startswith("fused/")  # explicit: size only
+
+
+def test_dispatcher_traced_uses_inline_ref_engine():
+    """Under an outer jit (the round engines) the fused path must inline
+    the ref composition — no nested stage jits, no concrete dispatch."""
+    mat, w = make_mat(), make_weights()
+    routes = []
+
+    def f(mat, w, rng):
+        out, info = kernel_ops.agg_tail(
+            mat, w, block_leaf=BL, n_leaves=4, align=ALIGN, bits=8,
+            clip_norm=0.5, uniform=True, wsum_fixed=float(K), sigma=0.01,
+            rng=rng, threshold=0)
+        routes.append(info["route"])
+        return out
+
+    rng = jax.random.key(0)
+    traced = np.asarray(jax.jit(f)(mat, w, rng))
+    assert routes == ["fused/ref/coeff"]
+    concrete = np.asarray(f(mat, w, rng))
+    assert routes[-1] == "fused/jit/coeff"
+    assert np.allclose(traced, concrete, rtol=1e-5, atol=1e-6)
+
+
+def test_dispatcher_traced_small_goes_staged():
+    mat, w = make_mat(), make_weights()
+    routes = []
+
+    def f(mat, w):
+        out, info = kernel_ops.agg_tail(mat, w, block_leaf=BL, n_leaves=4,
+                                        align=ALIGN)
+        routes.append(info["route"])
+        return out
+
+    a = np.asarray(jax.jit(f)(mat, w))
+    assert routes == ["staged"]
+    b = np.asarray(f(mat, w))
+    assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Grid-level acceptance: a DP async run is unchanged by the fused path
+
+
+def test_async_dp_grid_history_unchanged_by_fused_path():
+    """Forcing every flush through the fused tail must not change the
+    run: same history, same model, same FlushAccountant epsilon — the
+    DP guarantee is route-independent."""
+    import dataclasses
+
+    from repro.core import fedpt
+    from repro.data import synthetic as syn
+    from repro.nn import basic
+    from repro.sim import grid as simgrid
+
+    def init_fn(seed):
+        return {"dense": basic.init_dense(seed, "dense", 64, 4, jnp.float32,
+                                          bias=True)}
+
+    def loss_fn(params, b):
+        x = b["images"].reshape(b["images"].shape[0], -1)
+        logits = basic.dense(x, params["dense"])
+        lp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(lp, b["labels"][:, None], 1)), {}
+
+    ds = syn.make_federated_images(10, 30, (8, 8, 1), 4, seed=0,
+                                   test_examples=64)
+    rc = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0,
+                           dp_clip_norm=0.5, dp_noise_multiplier=0.4)
+    gc = simgrid.GridConfig(mode="async", concurrency=5, goal_count=3,
+                            sanitize=True,
+                            agg_tail_threshold=STAGED)
+    staged = simgrid.run_grid(init_fn, loss_fn, ds, rc, 6, grid=gc, seed=4)
+    fused = simgrid.run_grid(init_fn, loss_fn, ds, rc, 6,
+                             grid=dataclasses.replace(
+                                 gc, agg_tail_threshold=FUSED), seed=4)
+    # bits=0 + flush DP takes the exact apply route: bitwise, not just
+    # close — history, model, and the epsilon ledger all identical
+    assert [h["loss"] for h in staged.history] \
+        == [h["loss"] for h in fused.history]
+    assert [h["delta_norm"] for h in staged.history] \
+        == [h["delta_norm"] for h in fused.history]
+    for (pa, la), (pb, lb) in zip(basic.flatten_params(staged.y),
+                                  basic.flatten_params(fused.y)):
+        assert bool(jnp.all(la == lb)), pa
+    assert staged.dp == fused.dp
+    assert staged.dp["epsilon"] == fused.dp["epsilon"]

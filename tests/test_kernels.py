@@ -8,6 +8,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core import sanitize as sanitize_lib
+from repro.kernels import agg_tail
 from repro.kernels import ref
 from repro.kernels.dp_clip import clip_accumulate, sumsq
 from repro.kernels.seed_reconstruct import seed_reconstruct
@@ -97,6 +99,123 @@ def test_sumsq_property(n, scale):
     x = jax.random.normal(jax.random.key(n), (n,)) * scale
     got = sumsq(x, block=2048, interpret=True)
     np.testing.assert_allclose(float(got), float(jnp.sum(x * x)), rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused aggregation tail (agg_tail.py): per-stage Pallas kernels vs the
+# ref.py oracles, then the whole fused composition vs the staged
+# reference on every row pathology the server screen handles
+
+
+_AT_BL = np.asarray([0, 0, 1, 1, 2, 2, 2, 3], np.int32)   # 4 leaves
+_AT_NB = len(_AT_BL)
+_AT_BLOCK = 256
+_AT_SIZE = _AT_NB * _AT_BLOCK
+
+
+def _at_mat(seed=0, k=5, nan_row=None, outlier_row=None):
+    m = np.random.default_rng(seed).normal(0, 0.5, (k, _AT_SIZE))
+    m = m.astype(np.float32)
+    if nan_row is not None:
+        m[nan_row, 33] = np.nan
+    if outlier_row is not None:
+        m[outlier_row] *= 1e6
+    return jnp.asarray(m)
+
+
+@pytest.mark.interpret
+@pytest.mark.parametrize("nan_row", [None, 2])
+def test_agg_stats_kernel_matches_ref(nan_row):
+    mat = _at_mat(seed=1, nan_row=nan_row)
+    bmax, bsumsq = agg_tail.block_stats(mat, block=_AT_BLOCK,
+                                        interpret=True)
+    rmax, rsumsq = ref.agg_block_stats_ref(mat, block=_AT_BLOCK,
+                                           with_sumsq=True)
+    np.testing.assert_array_equal(np.asarray(bmax), np.asarray(rmax))
+    np.testing.assert_allclose(np.asarray(bsumsq), np.asarray(rsumsq),
+                               rtol=1e-6)
+    if nan_row is not None:
+        assert np.isnan(np.asarray(bmax)[nan_row, 0])
+
+
+@pytest.mark.interpret
+def test_agg_pack_kernel_matches_ref():
+    mat = _at_mat(seed=2)
+    bmax, _ = ref.agg_block_stats_ref(mat, block=_AT_BLOCK)
+    sblock = ref.agg_scales_ref(bmax, _AT_BL, 8, 4)
+    q, qss = agg_tail.pack(mat, sblock, bits=8, block=_AT_BLOCK,
+                           interpret=True)
+    want_q = ref.agg_pack_ref(mat, sblock, 8, block=_AT_BLOCK)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(want_q))
+    want_qss = ref.agg_quant_sumsq_ref(want_q, sblock)
+    np.testing.assert_allclose(np.asarray(qss), np.asarray(want_qss),
+                               rtol=1e-5)
+
+
+@pytest.mark.interpret
+def test_agg_apply_kernel_matches_ref():
+    mat = _at_mat(seed=3)
+    k = mat.shape[0]
+    bmax, _ = ref.agg_block_stats_ref(mat, block=_AT_BLOCK)
+    sblock = ref.agg_scales_ref(bmax, _AT_BL, 8, 4)
+    q = ref.agg_pack_ref(mat, sblock, 8, block=_AT_BLOCK)
+    w = jnp.linspace(0.2, 1.4, k)
+    coeff = (w / jnp.sum(w))[:, None] * sblock
+    noise = jnp.asarray(np.random.default_rng(9).normal(
+        0, 0.01, (_AT_SIZE,)), jnp.float32)
+    got = agg_tail.apply_coeff(q, coeff, noise, block=_AT_BLOCK,
+                               interpret=True)
+    want = ref.agg_apply_ref(q, coeff, noise=noise, block=_AT_BLOCK)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-7)
+
+
+_AT_SCREEN = sanitize_lib.SanitizeConfig(nonfinite=True, norm_mult=10.0)
+
+
+@pytest.mark.interpret
+@pytest.mark.parametrize("scenario", [
+    "clean", "nan_rows", "outlier_rows", "tier_sliced", "zero_weight_pad"])
+def test_agg_tail_fused_kernels_match_staged_composition(scenario):
+    """The full fused tail with the Pallas 'tpu' engine (interpret mode)
+    vs the inline ref composition — which tests/test_agg_tail.py pins to
+    the staged op sequence — on every row pathology: clean rows, NaN
+    rows, outlier-norm rows, tier-sliced widths, zero-weight padding."""
+    k = 5
+    kw = dict(block_leaf=_AT_BL, n_leaves=4, align=_AT_BLOCK, bits=8,
+              clip_norm=0.5, uniform=True, wsum_fixed=float(k),
+              sigma=0.01, screen=_AT_SCREEN)
+    mat = _at_mat(seed=4, k=k)
+    w = jnp.linspace(0.5, 1.5, k)
+    if scenario == "nan_rows":
+        mat = _at_mat(seed=4, k=k, nan_row=1)
+    elif scenario == "outlier_rows":
+        mat = _at_mat(seed=4, k=k, outlier_row=3)
+    elif scenario == "tier_sliced":
+        # rows as tier lanes emit them: zero outside the tier's
+        # contiguous block sub-layout — partial-width rows through the
+        # stats/pack/apply kernels
+        masks = np.ones((k, _AT_NB), np.float32)
+        masks[::2] = (_AT_BL == 0) | (_AT_BL == 2)
+        mat = mat * jnp.repeat(jnp.asarray(masks), _AT_BLOCK, axis=1)
+    elif scenario == "zero_weight_pad":
+        w = w.at[0].set(0.0).at[4].set(0.0)
+    rng = jax.random.key(11)
+    tpu_out, tpu_info = agg_tail.compose(mat, w, rng=rng, engine="tpu",
+                                         interpret=True, **kw)
+    ref_out, ref_info = agg_tail.compose(mat, w, rng=rng, engine="ref",
+                                         **kw)
+    assert tpu_info["route"] == "fused/tpu/coeff"
+    np.testing.assert_allclose(np.asarray(tpu_out), np.asarray(ref_out),
+                               rtol=1e-4, atol=1e-6)
+    for key in ("nonfinite", "outlier"):
+        if key in tpu_info:
+            np.testing.assert_array_equal(np.asarray(tpu_info[key]),
+                                          np.asarray(ref_info[key]))
+    if scenario == "nan_rows":
+        assert bool(np.asarray(tpu_info["nonfinite"])[1])
+    if scenario == "outlier_rows":
+        assert bool(np.asarray(tpu_info["outlier"])[3])
 
 
 # ---------------------------------------------------------------------------
