@@ -5,9 +5,11 @@ as markdown tables:
 
     python -m benchmarks.summarize                      # EXPERIMENTS.md
     python -m benchmarks.summarize --metrics snap.json  # stdout tables
+    python -m benchmarks.summarize --bench              # BENCH_*.json
 """
 import argparse
 import json
+import os
 import sys
 
 
@@ -52,6 +54,89 @@ def summarize_metrics(path: str) -> None:
         print(render_snapshot(snap))
 
 
+BENCH_FILES = ("BENCH_agg.json", "BENCH_fleet.json", "BENCH_grid.json")
+
+
+def render_bench(docs: dict) -> str:
+    """One markdown digest over the committed BENCH_*.json results
+    (agg_bench / fleet_bench / grid_sweep), with the headline speedup
+    columns side by side."""
+    out = ["## Benchmark digest\n"]
+    agg = docs.get("BENCH_agg.json")
+    if agg:
+        h = agg.get("headline", {})
+        out.append(f"### Server aggregation (agg_bench, "
+                   f"backend={agg.get('backend')})\n")
+        if h:
+            out.append(f"headline: pipeline={h.get('pipeline')} "
+                       f"params={h.get('params')} clients={h.get('clients')} "
+                       f"— flat-vs-tree speedup **{h.get('speedup', 0):.2f}x**, "
+                       f"fused speedup **{h.get('fused_speedup', 0):.2f}x**\n")
+        rows = agg.get("smoke", [])
+        if rows:
+            out.append("| pipeline | params | clients | tree us | flat us "
+                       "| speedup | fused us | fused speedup | route |")
+            out.append("|---|---|---|---|---|---|---|---|---|")
+            for r in rows:
+                out.append(
+                    f"| {r['pipeline']} | {r['params']} | {r['clients']} "
+                    f"| {r['tree_us']:.0f} | {r['flat_us']:.0f} "
+                    f"| {r['speedup']:.2f}x | {r.get('fused_us', 0):.0f} "
+                    f"| {r.get('fused_speedup', 0):.2f}x "
+                    f"| {r.get('route', '-')} |")
+            out.append("")
+    fleet = docs.get("BENCH_fleet.json")
+    if fleet:
+        h = fleet.get("headline", {})
+        out.append(f"### Fleet state (fleet_bench, "
+                   f"preset={fleet.get('preset')})\n")
+        if h:
+            out.append(f"headline: {h.get('cell')} @ {h.get('clients')} "
+                       f"clients — vectorized speedup "
+                       f"**{h.get('speedup', 0):.1f}x**\n")
+        rows = fleet.get("cells", [])
+        if rows:
+            out.append("| cell | clients | object us | vector us | speedup |")
+            out.append("|---|---|---|---|---|")
+            for r in rows:
+                out.append(f"| {r['cell']} | {r['clients']} "
+                           f"| {r['object_us']:.0f} | {r['vector_us']:.0f} "
+                           f"| {r['speedup']:.1f}x |")
+            out.append("")
+    grid = docs.get("BENCH_grid.json")
+    if grid:
+        out.append(f"### Selection-policy sweep (grid_sweep, "
+                   f"fleet={grid.get('fleet')}, "
+                   f"target loss {grid.get('target')})\n")
+        rows = grid.get("policy_cells", [])
+        if rows:
+            base = rows[0].get("vt_to_target_s") or 0.0
+            out.append("| policy | vt to target (s) | vs uniform | hit "
+                       "| final loss | virtual s | wire MB | uploads |")
+            out.append("|---|---|---|---|---|---|---|---|")
+            for r in rows:
+                vt = r.get("vt_to_target_s")
+                rel = (f"{base / vt:.2f}x" if vt else "-")
+                out.append(
+                    f"| {r['policy']} | {vt:.2f} | {rel} | {r['hit']} "
+                    f"| {r['loss']:.4g} | {r['virtual_s']:.2f} "
+                    f"| {r['wire_mb']:.4f} | {r['uploads']} |")
+            out.append("")
+    if len(out) == 1:
+        out.append("(no BENCH_*.json files found)\n")
+    return "\n".join(out)
+
+
+def summarize_bench(root: str = ".") -> None:
+    docs = {}
+    for name in BENCH_FILES:
+        p = os.path.join(root, name)
+        if os.path.exists(p):
+            with open(p) as f:
+                docs[name] = json.load(f)
+    print(render_bench(docs))
+
+
 def summarize_tables(path: str) -> None:
     rows = json.load(open(path))
     tables = {}
@@ -83,8 +168,15 @@ def main(argv=None):
     ap.add_argument("--metrics", default=None, metavar="SNAPSHOT_JSON",
                     help="render a metrics snapshot (or grid_sweep's "
                          "--metrics-out dump) as tables instead")
+    ap.add_argument("--bench", action="store_true",
+                    help="render the committed BENCH_agg/fleet/grid.json "
+                         "results as one digest with headline speedups")
+    ap.add_argument("--bench-root", default=".",
+                    help="directory holding the BENCH_*.json files")
     args = ap.parse_args(argv)
-    if args.metrics:
+    if args.bench:
+        summarize_bench(args.bench_root)
+    elif args.metrics:
         summarize_metrics(args.metrics)
     else:
         summarize_tables(args.path)

@@ -55,6 +55,21 @@ Works with ``--trace``: the timeline gains ``edge_flush`` markers on
 the server's "edges" track and ``shock`` markers on "faults".
 
     PYTHONPATH=src python examples/async_heterogeneous.py --regions
+
+``--chaos --regions`` together run ONE hostile hierarchical fleet
+(chaos faults + quarantine + 4-region topology) — the CI telemetry job
+uses this as its traced demo. The per-mode assertions (kill/resume,
+flat-vs-one-region) are skipped; the combined run just has to stay
+finite and produce a consistent trace.
+
+``--report out.md`` renders the traced run as a markdown run report
+(obs/report.py: critical path, stragglers, wire ledger, privacy curve,
+fault counts — memory telemetry is enabled automatically), and
+``--metrics-out snap.json`` dumps the run's MetricsRegistry snapshot
+for ``python -m repro.obs.compare`` CI gating.
+
+    PYTHONPATH=src python examples/async_heterogeneous.py \
+        --chaos --regions --report report.md --metrics-out snap.json
 """
 import argparse
 import dataclasses
@@ -94,6 +109,12 @@ parser.add_argument("--trace", default=None, metavar="JSON",
 parser.add_argument("--trace-jsonl", default=None, metavar="JSONL",
                     help="also write the raw schema-versioned event "
                          "stream as JSONL")
+parser.add_argument("--report", default=None, metavar="MD",
+                    help="write a markdown run report of the traced run "
+                         "(obs/report.py; enables memory telemetry)")
+parser.add_argument("--metrics-out", default=None, metavar="JSON",
+                    help="dump the traced run's MetricsRegistry snapshot "
+                         "as JSON (for repro.obs.compare)")
 args = parser.parse_args()
 
 ds = syn.make_federated_images(num_clients=40, examples_per_client=50,
@@ -120,7 +141,17 @@ TIERS = TrainPlan.of({
 })
 
 CKPT_DIR = None
-if args.chaos:
+if args.chaos and args.regions:
+    # the combined hostile-hierarchical demo the CI telemetry job traces:
+    # chaos faults + quarantine screen + 4-region edge topology in one
+    # run; the per-mode assertions below are skipped
+    ASYNC = dict(mode="async", fleet="pareto-mobile", concurrency=12,
+                 goal_count=6, staleness="polynomial")
+    RUNS = {
+        "async chaos + regions": GridConfig(**ASYNC, faults="chaos",
+                                            sanitize=True, topology=4),
+    }
+elif args.chaos:
     CKPT_DIR = tempfile.mkdtemp(prefix="chaos_ckpt_")
     ASYNC = dict(mode="async", fleet="pareto-mobile", concurrency=12,
                  goal_count=6, staleness="polynomial")
@@ -166,9 +197,9 @@ else:
                                       staleness="polynomial"),
     }
 
-if args.trace or args.trace_jsonl:
+if args.trace or args.trace_jsonl or args.report:
     # trace the last (async) run: with --tiers that is the tiered fleet,
-    # otherwise the FedBuff run
+    # otherwise the FedBuff run; --report only needs memory retention
     traced = list(RUNS)[-1]
     RUNS[traced] = dataclasses.replace(
         RUNS[traced], telemetry=TelemetryConfig(
@@ -228,7 +259,7 @@ if args.tiers:
           f"({(1.0 - mixed / max(full, 1)) * 100.0:.0f}% less)")
     assert mixed < full, "tiered fleet must bill fewer uplink bytes"
 
-if args.regions:
+if args.regions and not args.chaos:
     def _flat_y(y):
         return np.concatenate([np.asarray(v).ravel()
                                for _, v in basic.flatten_params(y)])
@@ -268,7 +299,7 @@ if args.regions:
           f"vs {ce['uploads'] or sh.scheduler_stats['uploads']} client "
           "deltas on the first hop")
 
-if args.chaos:
+if args.chaos and not args.regions:
     def _flat(y):
         return np.concatenate([np.asarray(v).ravel()
                                for _, v in basic.flatten_params(y)])
@@ -315,3 +346,33 @@ if args.chaos:
         "resumed model must match the uninterrupted run bitwise"
     print(f"resume OK: {len(resumed.history)} updates, history and final "
           "model match the uninterrupted run exactly")
+
+if args.chaos and args.regions:
+    combined = results["async chaos + regions"]
+    flat_y = np.concatenate([np.asarray(v).ravel()
+                             for _, v in basic.flatten_params(combined.y)])
+    assert np.all(np.isfinite(flat_y)), \
+        "quarantine must keep the hostile hierarchical run finite"
+    es = combined.comm.hop_traffic["edge_server"]
+    print(f"\nchaos+regions: quarantined "
+          f"{combined.faults['quarantined']} corrupt rows, "
+          f"{es['uploads']} edge->server buffers, final loss "
+          f"{combined.history[-1]['loss']:.3f}")
+
+if args.report or args.metrics_out:
+    import json
+
+    traced_res = results[list(RUNS)[-1]]
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(traced_res.metrics.snapshot(), f, indent=1)
+        print(f"\nwrote metrics snapshot -> {args.metrics_out}")
+    if args.report:
+        from repro.obs import report as report_lib
+
+        text = report_lib.build_report(
+            traced_res.telemetry, metrics=traced_res.metrics.snapshot())
+        with open(args.report, "w") as f:
+            f.write(text)
+        print(f"wrote run report -> {args.report} "
+              f"({len(text.splitlines())} lines)")

@@ -136,12 +136,13 @@ class CommReport:
 
     def add_tier_measured(self, tier: str, down_bytes: int, up_bytes: int,
                           transfers: int = 1, uploads: int = 0,
-                          now: float = 0.0) -> None:
+                          now: float = 0.0, parent=None) -> None:
         """Accumulate observed bytes for one trainability tier AND the
         global totals (callers meter through one entry point — never
         call both this and ``add_measured`` for the same transfers).
         ``now`` stamps the tracer's ``tier_upload`` billing instant in
-        virtual time (ignored with the default NULL_TRACER)."""
+        virtual time, ``parent`` links it to the round/flush that billed
+        it (both ignored with the default NULL_TRACER)."""
         rec = self.tier_traffic.setdefault(
             tier, {"down_bytes": 0, "up_bytes": 0, "transfers": 0,
                    "uploads": 0})
@@ -150,7 +151,8 @@ class CommReport:
         rec["transfers"] += int(transfers)
         rec["uploads"] += int(uploads)
         self.add_measured(down_bytes, up_bytes, transfers)
-        self.tracer.instant("tier_upload", now, tier_name=tier,
+        self.tracer.instant("tier_upload", now, parent=parent,
+                            tier_name=tier,
                             down_bytes=int(down_bytes),
                             up_bytes=int(up_bytes),
                             transfers=int(transfers),

@@ -105,7 +105,7 @@ class FlushAccountant:
         self._sum_m2 = 0.0
 
     def record_flush(self, n_real: int, multiplicity: int = 1,
-                     now: float = 0.0) -> None:
+                     now: float = 0.0, parent=None) -> None:
         """One applied server update with ``n_real`` non-padding rows,
         of which at most ``multiplicity`` belong to the same client.
         Padding changes neither sigma nor the accounting — the mechanism
@@ -125,7 +125,7 @@ class FlushAccountant:
         if self.tracer.enabled:
             delta = 1e-5
             self.tracer.instant(
-                "dp_flush", now, flush=self.flushes - 1,
+                "dp_flush", now, parent=parent, flush=self.flushes - 1,
                 n_real=int(n_real), multiplicity=int(multiplicity),
                 sigma=self.cfg.sigma, epsilon=self.epsilon(delta),
                 delta=delta, padded=bool(n_real < self.cfg.goal_count))

@@ -42,6 +42,12 @@ def record_json(rec) -> Dict[str, Any]:
                            "kind": rec.kind, "t": rec.t}
     if rec.dur is not None:
         out["dur"] = rec.dur
+    seq = getattr(rec, "seq", None)
+    if seq is not None:
+        out["seq"] = seq
+    parent = getattr(rec, "parent", None)
+    if parent is not None:
+        out["parent"] = parent
     out.update(rec.payload)
     return out
 
@@ -62,28 +68,62 @@ def _us(t: float) -> float:
 
 def perfetto_trace(records: Iterable) -> Dict[str, Any]:
     """Chrome trace_event document for a record stream (see module
-    docstring for the track layout)."""
-    events: List[Dict[str, Any]] = []
+    docstring for the track layout). Events are stably sorted by
+    ``(ts, seq)`` — the monotone v4 seq breaks ties between
+    zero-duration instants sharing a virtual timestamp, so the export is
+    deterministic regardless of dict/iterator quirks upstream. Records
+    with a ``parent`` additionally emit a flow-event pair (``ph: s/f``)
+    so causal chains render as arrows in ui.perfetto.dev."""
+    keyed: List[tuple] = []           # (ts, tiebreak, event dict)
+    coords: Dict[int, tuple] = {}     # seq -> (pid, tid, start_ts, end_ts)
+    links: List[tuple] = []           # (child seq, parent seq)
     client_tids = set()
-    for rec in records:
+    for i, rec in enumerate(records):
         args = {k: v for k, v in rec.payload.items() if v is not None}
+        seq = getattr(rec, "seq", None)
+        parent = getattr(rec, "parent", None)
+        if seq is not None:
+            args["seq"] = seq
         if rec.kind in ("dispatch", "upload"):
             pid, tid = _CLIENT_PID, int(rec.payload["cid"])
             client_tids.add(tid)
         else:
             pid = _SERVER_PID
             tid = _SERVER_TIDS.get(rec.kind, 0)
+        ts = _us(rec.t)
         if rec.dur is not None:
-            events.append({"name": rec.kind, "cat": rec.kind, "ph": "X",
-                           "ts": _us(rec.t), "dur": _us(rec.dur),
-                           "pid": pid, "tid": tid, "args": args})
+            ev = {"name": rec.kind, "cat": rec.kind, "ph": "X",
+                  "ts": ts, "dur": _us(rec.dur),
+                  "pid": pid, "tid": tid, "args": args}
+            end_ts = ts + _us(rec.dur)
         else:
             # instants: flushes & co. render as global markers on the
             # server tracks, client arrivals as thread-scoped ticks
             scope = "t" if pid == _CLIENT_PID else "g"
-            events.append({"name": rec.kind, "cat": rec.kind, "ph": "i",
-                           "ts": _us(rec.t), "s": scope,
-                           "pid": pid, "tid": tid, "args": args})
+            ev = {"name": rec.kind, "cat": rec.kind, "ph": "i",
+                  "ts": ts, "s": scope,
+                  "pid": pid, "tid": tid, "args": args}
+            end_ts = ts
+        keyed.append((ts, seq if seq is not None else i, ev))
+        if seq is not None:
+            coords[seq] = (pid, tid, ts, end_ts)
+            if parent is not None:
+                links.append((seq, parent))
+    keyed.sort(key=lambda kv: (kv[0], kv[1]))
+    events: List[Dict[str, Any]] = [ev for _, _, ev in keyed]
+    # causal arrows: flow start at the parent's end, flow finish (with
+    # binding point "enclosing slice start") at the child's start —
+    # in child-seq order, so the export stays input-order independent
+    for child, parent in sorted(links):
+        if parent not in coords or child not in coords:
+            continue                     # dangling ref (e.g. post-resume)
+        ppid, ptid, _, pend = coords[parent]
+        cpid, ctid, cstart, _ = coords[child]
+        events.append({"name": "causal", "cat": "causal", "ph": "s",
+                       "id": child, "ts": pend, "pid": ppid, "tid": ptid})
+        events.append({"name": "causal", "cat": "causal", "ph": "f",
+                       "bp": "e", "id": child, "ts": cstart,
+                       "pid": cpid, "tid": ctid})
     meta = [
         {"name": "process_name", "ph": "M", "pid": _SERVER_PID,
          "args": {"name": "server"}},
@@ -105,4 +145,5 @@ def write_perfetto(records: Iterable, path: str) -> int:
     doc = perfetto_trace(records)
     with open(path, "w") as f:
         json.dump(doc, f)
-    return sum(1 for e in doc["traceEvents"] if e.get("ph") != "M")
+    return sum(1 for e in doc["traceEvents"]
+               if e.get("ph") not in ("M", "s", "f"))

@@ -21,12 +21,15 @@ import json
 import math
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 # schema v2 added the fault/quarantine/checkpoint kinds; v3 added the
 # edge_flush/shock kinds and the optional region field on
-# dispatch/upload (sim/topology.py). Earlier streams are strict subsets
-# and stay valid.
-ACCEPTED_VERSIONS = (1, 2, 3)
+# dispatch/upload (sim/topology.py); v4 added the top-level causal ids
+# ``seq`` (monotone per-tracer emission id) / ``parent`` (seq of the
+# causally-upstream record) and the optional ``t_down``/``t_comp``/
+# ``t_up`` phase components on dispatch spans. Earlier streams are
+# strict subsets and stay valid.
+ACCEPTED_VERSIONS = (1, 2, 3, 4)
 
 _NUM = (int, float)
 _INT = (int,)
@@ -42,7 +45,12 @@ EVENT_SCHEMA: Dict[str, Tuple[Dict[str, tuple], Dict[str, tuple]]] = {
     # dur is null when the client never finishes: sync dropout)
     "dispatch": ({"cid": _INT},
                  {"tier": _INT, "region": _INT, "down_bytes": _INT,
-                  "up_bytes": _INT, "version": _INT, "outcome": _STR}),
+                  "up_bytes": _INT, "version": _INT, "outcome": _STR,
+                  # v4: per-phase virtual-time components of the round
+                  # trip (downlink transfer, client compute, uplink
+                  # transfer), so analyze.py can split the span without
+                  # re-deriving link models
+                  "t_down": _NUM, "t_comp": _NUM, "t_up": _NUM}),
     # a delta arriving at the server (instant)
     "upload": ({"cid": _INT, "up_bytes": _INT},
                {"tier": _INT, "region": _INT, "staleness": _INT,
@@ -126,9 +134,18 @@ def validate_record(rec: Any) -> List[str]:
                                 and math.isfinite(dur) and dur >= 0.0):
         errs.append(f"dur={dur!r} is not null or a finite non-negative "
                     "number")
+    # v4 causal ids are top-level (not payload) and optional — pre-v4
+    # streams simply omit them.
+    for name in ("seq", "parent"):
+        val = rec.get(name)
+        if val is not None and not (isinstance(val, int)
+                                    and not isinstance(val, bool)
+                                    and val >= 0):
+            errs.append(f"{name}={val!r} is not null or a non-negative "
+                        "integer")
     required, optional = EVENT_SCHEMA[kind]
     payload = {k: val for k, val in rec.items()
-               if k not in ("v", "kind", "t", "dur")}
+               if k not in ("v", "kind", "t", "dur", "seq", "parent")}
     for name, types in required.items():
         if name not in payload:
             errs.append(f"{kind}: missing required field {name!r}")
@@ -152,6 +169,39 @@ def validate_records(records: Iterable[Any]) -> List[str]:
     errs = []
     for i, rec in enumerate(records):
         errs.extend(f"record {i + 1}: {e}" for e in validate_record(rec))
+    return errs
+
+
+def validate_causal_ids(records: Iterable[Any]) -> List[str]:
+    """v4 id-integrity errors for a decoded record stream: every record
+    must carry a ``seq``, seqs must be strictly increasing (one tracer,
+    emission order), every non-null ``parent`` must reference an
+    already-emitted seq, and at least one parent link must exist (a
+    stream with ids but no edges is a broken chain, not a graph)."""
+    errs: List[str] = []
+    seen: set = set()
+    prev = -1
+    any_parent = False
+    for i, rec in enumerate(records):
+        if not isinstance(rec, dict):
+            continue
+        seq = rec.get("seq")
+        if not (isinstance(seq, int) and not isinstance(seq, bool)):
+            errs.append(f"record {i + 1}: missing seq (ids required)")
+            continue
+        if seq <= prev:
+            errs.append(f"record {i + 1}: seq={seq} not strictly "
+                        f"increasing (previous {prev})")
+        prev = max(prev, seq)
+        parent = rec.get("parent")
+        if parent is not None:
+            any_parent = True
+            if parent not in seen:
+                errs.append(f"record {i + 1}: parent={parent} does not "
+                            "reference an earlier seq")
+        seen.add(seq)
+    if prev >= 0 and not any_parent:
+        errs.append("no parent link anywhere in the stream")
     return errs
 
 
@@ -189,8 +239,10 @@ def validate_perfetto(path: str,
     events = doc.get("traceEvents") if isinstance(doc, dict) else None
     if not isinstance(events, list):
         return 0, ["missing 'traceEvents' list"]
+    # metadata ("M") and v4 causal flow-link pairs ("s"/"f") are derived
+    # decoration, not records — the count must match the JSONL stream
     named = [e for e in events
-             if isinstance(e, dict) and e.get("ph") != "M"]
+             if isinstance(e, dict) and e.get("ph") not in ("M", "s", "f")]
     for e in named:
         ts = e.get("ts")
         if not (isinstance(ts, _NUM) and not isinstance(ts, bool)
@@ -215,22 +267,32 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "export")
     ap.add_argument("--require", nargs="*", default=[], metavar="KIND",
                     help="event kinds that must appear in BOTH files")
+    ap.add_argument("--require-ids", action="store_true",
+                    help="require v4 causal ids: every record carries a "
+                         "strictly-monotone seq, parents resolve, and at "
+                         "least one parent link exists")
     args = ap.parse_args(argv)
     n, errs = validate_jsonl(args.jsonl)
     if n == 0:
         errs.append("no records in the JSONL stream")
     seen = set()
+    decoded = []
     with open(args.jsonl) as f:
         for line in f:
             line = line.strip()
             if line:
                 try:
-                    seen.add(json.loads(line).get("kind"))
+                    rec = json.loads(line)
                 except json.JSONDecodeError:
-                    pass
+                    continue
+                decoded.append(rec)
+                if isinstance(rec, dict):
+                    seen.add(rec.get("kind"))
     for kind in args.require:
         if kind not in seen:
             errs.append(f"jsonl: no {kind!r} record in the stream")
+    if args.require_ids:
+        errs.extend(f"jsonl: {e}" for e in validate_causal_ids(decoded))
     print(f"{args.jsonl}: {n} records, {len(errs)} error(s)")
     if args.perfetto:
         pn, perrs = validate_perfetto(args.perfetto, require=args.require)

@@ -34,6 +34,13 @@ class TraceRecord:
     t: float                        # virtual-time start (seconds)
     dur: Optional[float]            # virtual duration; None = instant
     payload: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # --- schema v4 causal ids ---
+    # seq: monotone per-Tracer emission id; parent: seq of the record
+    # this one is causally downstream of (dispatch -> upload -> flush ->
+    # dp_flush, ...). Both optional so positional construction and
+    # pre-v4 streams stay valid.
+    seq: Optional[int] = None
+    parent: Optional[int] = None
 
     def to_json(self) -> Dict[str, Any]:
         return export_lib.record_json(self)
@@ -63,10 +70,11 @@ class NullTracer:
     events: tuple = ()
 
     def span(self, kind: str, t: float, dur: Optional[float],
-             **payload) -> None:
+             parent: Optional[int] = None, **payload) -> None:
         pass
 
-    def instant(self, kind: str, t: float, **payload) -> None:
+    def instant(self, kind: str, t: float,
+                parent: Optional[int] = None, **payload) -> None:
         pass
 
 
@@ -84,14 +92,20 @@ class Tracer:
         self.config = config or TelemetryConfig()
         self.metrics = metrics or metrics_lib.MetricsRegistry()
         self.events: List[TraceRecord] = []
+        self._next_seq = 0
 
     def span(self, kind: str, t: float, dur: Optional[float],
-             **payload) -> None:
+             parent: Optional[int] = None, **payload) -> int:
+        seq = self._next_seq
+        self._next_seq = seq + 1
         self.events.append(TraceRecord(
-            kind, float(t), None if dur is None else float(dur), payload))
+            kind, float(t), None if dur is None else float(dur), payload,
+            seq=seq, parent=parent))
+        return seq
 
-    def instant(self, kind: str, t: float, **payload) -> None:
-        self.events.append(TraceRecord(kind, float(t), None, payload))
+    def instant(self, kind: str, t: float,
+                parent: Optional[int] = None, **payload) -> int:
+        return self.span(kind, t, None, parent=parent, **payload)
 
     # --- inspection -----------------------------------------------------
     def kind_counts(self) -> Dict[str, int]:

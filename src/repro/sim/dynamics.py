@@ -436,6 +436,28 @@ class BoundDynamics:
                 + compute_seconds * profile.compute_multiplier
                 + lm.transfer_seconds(up_bytes, profile.uplink_bps, z_up))
 
+    def round_trip_components_batch(self, st, cids: np.ndarray, down_bytes,
+                                    up_bytes, compute_seconds,
+                                    z_down: np.ndarray, z_up: np.ndarray):
+        """The three phase terms of :meth:`round_trip_seconds_batch` —
+        ``(down, comp, up)`` arrays whose left-to-right sum is exactly
+        the round-trip time. The tracer records them on dispatch spans
+        (schema v4 ``t_down``/``t_comp``/``t_up``) so ``obs/analyze.py``
+        can split a span into phases without re-deriving link models.
+        Consumes zero RNG draws: ``z_down``/``z_up`` are the caller's
+        already-drawn N(0,1) values."""
+        cids = np.asarray(cids)
+        sig = self.link_sigma[cids]
+        rtt = self.link_rtt[cids]
+        down = (rtt + (np.asarray(down_bytes, np.float64)
+                       / st.downlink_bps[cids])
+                * np.exp(sig * z_down - 0.5 * sig * sig))
+        up = (rtt + (np.asarray(up_bytes, np.float64) / st.uplink_bps[cids])
+              * np.exp(sig * z_up - 0.5 * sig * sig))
+        comp = (np.asarray(compute_seconds, np.float64)
+                * st.compute_multiplier[cids])
+        return down, comp, up
+
     def round_trip_seconds_batch(self, st, cids: np.ndarray, down_bytes,
                                  up_bytes, compute_seconds,
                                  z_down: np.ndarray,
@@ -445,18 +467,9 @@ class BoundDynamics:
         ``st`` is the fleet's :class:`~repro.sim.devices.FleetState`;
         the float64 expression matches the scalar path's association
         elementwise."""
-        cids = np.asarray(cids)
-        sig = self.link_sigma[cids]
-        rtt = self.link_rtt[cids]
-        down = (rtt + (np.asarray(down_bytes, np.float64)
-                       / st.downlink_bps[cids])
-                * np.exp(sig * z_down - 0.5 * sig * sig))
-        up = (rtt + (np.asarray(up_bytes, np.float64) / st.uplink_bps[cids])
-              * np.exp(sig * z_up - 0.5 * sig * sig))
-        return (down
-                + np.asarray(compute_seconds, np.float64)
-                * st.compute_multiplier[cids]
-                + up)
+        down, comp, up = self.round_trip_components_batch(
+            st, cids, down_bytes, up_bytes, compute_seconds, z_down, z_up)
+        return down + comp + up
 
 
 # ---------------------------------------------------------------------------

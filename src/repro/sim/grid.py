@@ -543,6 +543,17 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         if t0 is None:
             jax.block_until_ready(y)
             t0 = time.time()  # exclude compile from the per-round timing
+        vt0, vt = vt, vt + plan.round_seconds
+        # the round span goes out as soon as its wall time is known —
+        # before the quarantine/billing/edge instants it causally
+        # precedes, so they can parent on it. Its own parent is the
+        # upload that closed the round (plan.bound_seq), which links
+        # round -> bounding upload -> dispatch for analyze.py's
+        # critical-path walk.
+        rseq = tracer.span("round", vt0, plan.round_seconds,
+                           parent=plan.bound_seq, round=r,
+                           participants=float(len(kept_cids)),
+                           cohort=int(m), loss=float(rmetrics["loss"]))
         if san is not None:
             # quarantined cohort rows -> traced events + counter (the
             # masks are tiny (C,) vectors; one host sync per round)
@@ -552,14 +563,12 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
             for i in np.nonzero(nonf | outl)[0]:
                 mc("quarantined").inc()
                 tracer.instant(
-                    "quarantine", vt,
+                    "quarantine", vt0, parent=rseq,
                     cause="nonfinite" if nonf[i] else "norm-outlier",
                     cid=int(sel[i]),
                     tier=(int(tiers_now[sel[i]]) if cplan is not None
                           else None),
                     norm=float(norms[i]), round=r)
-
-        vt0, vt = vt, vt + plan.round_seconds
         registry.histogram("round_seconds").observe(plan.round_seconds)
         n_dispatched = int(np.sum(plan.dispatched))
         n_uploads = n_dispatched - plan.dropouts
@@ -585,7 +594,7 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                 if nd or nu:
                     report.add_tier_measured(
                         t.name, down_bytes * nd, int(tier_up[t.index]) * nu,
-                        transfers=nd, uploads=nu, now=vt)
+                        transfers=nd, uploads=nu, now=vt, parent=rseq)
         else:
             report.add_measured(down_bytes * n_dispatched,
                                 up_bytes * n_uploads,
@@ -608,8 +617,8 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                 mc("region_uploads").inc(int(up_counts[k]), label=int(k))
                 mc("edge_flushes").inc(label=int(k))
                 mc("edge_up_bytes").inc(edge_bytes, label=int(k))
-                tracer.instant("edge_flush", vt, region=int(k),
-                               fill=int(up_counts[k]),
+                tracer.instant("edge_flush", vt, parent=rseq,
+                               region=int(k), fill=int(up_counts[k]),
                                up_bytes=edge_bytes, round=r)
             n_down = int(np.sum(disp_counts > 0))
             report.add_hop("edge_server", down_bytes=down_bytes * n_down,
@@ -630,9 +639,6 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
         rec["virtual_seconds"] = vt
         rec["participants"] = float(len(kept_cids))
         history.append(rec)
-        tracer.span("round", vt0, plan.round_seconds, round=r,
-                    participants=float(len(kept_cids)), cohort=int(m),
-                    loss=rec["loss"])
         policy.end_round(r)
         if grid.checkpoint_every > 0 \
                 and (r + 1) % grid.checkpoint_every == 0:
@@ -644,8 +650,8 @@ def _run_sync(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                 gstate_lib.checkpoint_path(grid.checkpoint_dir, r + 1,
                                            "sync"), meta, arrays)
             mc("checkpoints").inc()
-            tracer.instant("checkpoint", vt, path=last_ckpt, round=r,
-                           mode="sync")
+            tracer.instant("checkpoint", vt, parent=rseq, path=last_ckpt,
+                           round=r, mode="sync")
         if log and (r % max(1, rounds // 10) == 0):
             print(f"  round {r}: " + " ".join(
                 f"{k}={v:.4f}" for k, v in rec.items() if k != "round"))
@@ -885,9 +891,13 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
             # may own several rows of this flush; the accountant scales
             # that flush's sensitivity by the observed multiplicity
             counts = Counter(e.work["cid"] for e in entries)
+            # sched is assigned before run() ever calls this closure;
+            # last_flush_seq is the flush instant the scheduler emitted
+            # just before invoking us, i.e. this very flush
             accountant.record_flush(len(entries),
                                     multiplicity=max(counts.values()),
-                                    now=now)
+                                    now=now,
+                                    parent=sched.last_flush_seq)
         y_new, ss, m = apply_fn(*args)
         state["y"], state["sstate"] = y_new, ss
         # ONE host sync per flush for the buffered losses
@@ -904,7 +914,7 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                 registry.counter("quarantined").inc()
                 w = entries[i].work
                 tracer.instant(
-                    "quarantine", now,
+                    "quarantine", now, parent=sched.last_flush_seq,
                     cause="nonfinite" if nonf[i] else "norm-outlier",
                     cid=int(w["cid"]),
                     tier=None if w.get("tier") is None else int(w["tier"]),
@@ -927,7 +937,8 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                                                       label=int(k))
                 registry.counter("edge_down_bytes").inc(down_bytes,
                                                         label=int(k))
-                tracer.instant("edge_flush", now, region=int(k),
+                tracer.instant("edge_flush", now,
+                               parent=sched.last_flush_seq, region=int(k),
                                fill=int(counts[k]), up_bytes=edge_bytes,
                                norm=float(np.linalg.norm(ebuf[k])),
                                flush=applied)
@@ -960,7 +971,8 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
             meta, arrays)
         last_ckpt["path"] = path
         registry.counter("checkpoints").inc()
-        tracer.instant("checkpoint", now, path=path,
+        tracer.instant("checkpoint", now, parent=s.last_flush_seq,
+                       path=path,
                        applied=state["applied"], mode="async",
                        buffer_fill=float(len(s.buffer)),
                        events_in_flight=len(s.q))
@@ -1011,7 +1023,8 @@ def _run_async(y, frozen, loss_fn, dataset, rc, rounds, grid, server_opt, *,
                 report.add_tier_measured(
                     t.name, down_bytes * nd,
                     sched.tier_up_bytes.get(t.index, 0), transfers=nd,
-                    uploads=sched.tier_uploads.get(t.index, 0), now=vt)
+                    uploads=sched.tier_uploads.get(t.index, 0), now=vt,
+                    parent=sched.last_flush_seq)
     else:
         report.add_measured(down_bytes * sched.dispatches,
                             sched.up_bytes_total,

@@ -94,6 +94,11 @@ class SyncRoundPlan:
     # injected crash-mid-compute faults (sim/faults.py): dispatched,
     # consumed downlink + partial compute, never uploads
     crashes: int = 0
+    # trace seq of the upload that closed the round (the slowest counted
+    # arrival) — the grid parents its "round" span on it so analyze.py
+    # can walk round -> bounding upload -> dispatch. None when the round
+    # was deadline-bound (or untraced).
+    bound_seq: Optional[int] = None
 
     def participant_cids(self) -> np.ndarray:
         """Participants in arrival order (dispatch order on ties)."""
@@ -210,30 +215,56 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
         round_seconds = dynamics.redispatch_backoff
         retried = 1
     completed = will_complete & (arrival <= deadline)
+    bound_seq = None
     if tracer.enabled:
+        # per-phase components for the v4 dispatch spans — recomputed
+        # from the already-drawn z values, zero extra PRNG draws
+        if dynamics is None:
+            t_down = np.asarray(down_bytes, np.float64) \
+                / st.downlink_bps[cids]
+            t_comp = comp_arr * st.compute_multiplier[cids]
+            t_up = up_arr / st.uplink_bps[cids]
+        else:
+            t_down, t_comp, t_up = dynamics.round_trip_components_batch(
+                st, cids, down_bytes, up_arr, comp_arr, z_down, z_up)
+        upload_seq = {}               # member index -> upload seq
         for i in range(m):
             if not dispatched[i]:
                 continue
             dur = float(arrival[i]) if math.isfinite(arrival[i]) else None
             outcome = ("ok" if will_complete[i]
                        else "crash" if crashed[i] else "dropout")
-            tracer.span("dispatch", now, dur, cid=int(cids[i]),
-                        tier=None if tiers is None else int(tiers[i]),
-                        down_bytes=int(down_bytes),
-                        up_bytes=int(up_arr[i]), outcome=outcome)
+            dseq = tracer.span(
+                "dispatch", now, dur, cid=int(cids[i]),
+                tier=None if tiers is None else int(tiers[i]),
+                region=None if regions is None else int(regions[i]),
+                down_bytes=int(down_bytes),
+                up_bytes=int(up_arr[i]), outcome=outcome,
+                t_down=float(t_down[i]), t_comp=float(t_comp[i]),
+                t_up=float(t_up[i]))
             if crashed[i]:
                 tracer.instant(
-                    "fault", now, fault="crash_compute", cid=int(cids[i]),
+                    "fault", now, parent=dseq, fault="crash_compute",
+                    cid=int(cids[i]),
                     tier=None if tiers is None else int(tiers[i]))
             if completed[i]:
-                tracer.instant(
-                    "upload", now + float(arrival[i]), cid=int(cids[i]),
+                upload_seq[i] = tracer.instant(
+                    "upload", now + float(arrival[i]), parent=dseq,
+                    cid=int(cids[i]),
                     tier=None if tiers is None else int(tiers[i]),
+                    region=None if regions is None else int(regions[i]),
                     up_bytes=int(up_arr[i]), rtt=float(arrival[i]),
                     participant=bool(participant[i]))
         if retried:
             tracer.instant("retry", now,
                            backoff=float(dynamics.redispatch_backoff))
+        if taken and round_seconds == float(arr_sorted[taken - 1]):
+            # the round closed on its slowest counted arrival (a full
+            # cohort, or every eligible client under an infinite
+            # deadline): that upload bounds the round's virtual wall
+            # time. Deadline-stretched rounds keep bound_seq=None — the
+            # server, not any client, held the clock.
+            bound_seq = upload_seq.get(int(comp_order[taken - 1]))
     return SyncRoundPlan(
         cids=cids, dispatched=dispatched, completed=completed,
         participant=participant, arrival=arrival,
@@ -242,7 +273,7 @@ def plan_sync_round(fleet: dev_lib.Fleet, cids: Sequence[int],
         dropouts=int(np.sum(dispatched & ~will_complete & ~crashed)),
         deadline_drops=int(np.sum(will_complete & (arrival > deadline))),
         excess=int(np.sum(completed & ~participant)), retries=retried,
-        crashes=int(np.sum(crashed)))
+        crashes=int(np.sum(crashed)), bound_seq=bound_seq)
 
 
 # ---------------------------------------------------------------------------
@@ -255,6 +286,10 @@ class BufferEntry:
                                   # delta/loss may be lazy lane handles)
     weight: float                 # staleness_fn(s) * p_i
     staleness: int
+    # trace seq of the upload instant that buffered this entry (None
+    # when untraced or restored from a snapshot — grid-state whitelists
+    # drop it, and the resumed run starts a fresh tracer anyway)
+    seq: Optional[int] = None
 
 
 class BufferedAsyncScheduler:
@@ -387,6 +422,11 @@ class BufferedAsyncScheduler:
         # virtual time when the current dark window started (None = the
         # fleet is not dark): backs the retry budget below
         self._dark_since: Optional[float] = None
+        # trace seq of the most recent flush instant — the grid's
+        # apply_update closure parents its dp_flush/quarantine/
+        # edge_flush/checkpoint instants on it (set by _flush *before*
+        # apply_update runs; None when untraced)
+        self.last_flush_seq: Optional[int] = None
         self.version = 0
         # run state, on the instance so grid-state snapshots can
         # serialize it and restores can pre-seed it (run() initializes
@@ -432,7 +472,12 @@ class BufferedAsyncScheduler:
     def tier_rtt_sum(self) -> Dict[int, float]:
         return self.metrics.counter("tier_rtt_sum").labels
 
-    def _dispatch(self, q: EventQueue, now: float) -> None:
+    def _dispatch(self, q: EventQueue, now: float,
+                  parent: Optional[int] = None) -> None:
+        # ``parent`` is the trace seq of whatever freed this dispatch
+        # slot (a failed/completed round trip, or the previous parked
+        # retry) — threaded onto the span/instant this dispatch emits so
+        # the causal chain survives redispatches. None when untraced.
         # redraw until the availability check passes (bounded, so a fleet
         # of mostly-offline phones can't spin forever)
         for _ in range(1000):
@@ -472,8 +517,9 @@ class BufferedAsyncScheduler:
                     self._consecutive_retries)
                 self._consecutive_retries += 1
                 self.metrics.counter("retries").inc()
-                self.tracer.instant("retry", now, backoff=float(backoff))
-                q.push(now + backoff, "retry")
+                rseq = self.tracer.instant("retry", now, parent=parent,
+                                           backoff=float(backoff))
+                q.push(now + backoff, "retry", seq=rseq)
                 return
             raise RuntimeError("no available client after 1000 draws")
         self._consecutive_retries = 0
@@ -495,16 +541,19 @@ class BufferedAsyncScheduler:
         if self.rng.random() < p.dropout:
             # dies after download + local work, before upload
             if self.dynamics is None:
-                t = now + (self.down_bytes / p.downlink_bps
-                           + comp * p.compute_multiplier)
+                dl = self.down_bytes / p.downlink_bps
             else:
-                t = now + (lm.transfer_seconds(self.down_bytes,
-                                               p.downlink_bps, z_down)
-                           + comp * p.compute_multiplier)
-            self.tracer.span("dispatch", now, t - now, cid=cid, tier=tier,
-                             region=region, down_bytes=self.down_bytes,
-                             version=self.version, outcome="dropout")
-            q.push(t, "failed", cid=cid, tier=tier, region=region)
+                dl = lm.transfer_seconds(self.down_bytes, p.downlink_bps,
+                                         z_down)
+            comp_t = comp * p.compute_multiplier
+            t = now + (dl + comp_t)
+            dseq = self.tracer.span(
+                "dispatch", now, t - now, parent=parent, cid=cid,
+                tier=tier, region=region, down_bytes=self.down_bytes,
+                version=self.version, outcome="dropout",
+                t_down=float(dl), t_comp=float(comp_t))
+            q.push(t, "failed", cid=cid, tier=tier, region=region,
+                   seq=dseq)
             return
         if fault is not None and fault["kind"] == "crash":
             # injected crash-mid-compute: downlink + crash_frac of the
@@ -515,38 +564,70 @@ class BufferedAsyncScheduler:
             else:
                 dl = lm.transfer_seconds(self.down_bytes, p.downlink_bps,
                                          z_down)
-            t = now + dl + (self.faults.cfg.crash_frac * comp
-                            * p.compute_multiplier)
-            self.tracer.span("dispatch", now, t - now, cid=cid, tier=tier,
-                             region=region, down_bytes=self.down_bytes,
-                             version=self.version, outcome="crash")
-            self.tracer.instant("fault", t, fault="crash_compute",
-                                cid=cid, tier=tier)
+            comp_t = (self.faults.cfg.crash_frac * comp
+                      * p.compute_multiplier)
+            t = now + dl + comp_t
+            dseq = self.tracer.span(
+                "dispatch", now, t - now, parent=parent, cid=cid,
+                tier=tier, region=region, down_bytes=self.down_bytes,
+                version=self.version, outcome="crash",
+                t_down=float(dl), t_comp=float(comp_t))
+            self.tracer.instant("fault", t, parent=dseq,
+                                fault="crash_compute", cid=cid, tier=tier)
             q.push(t, "failed", cid=cid, tier=tier, region=region,
-                   cause="crash")
+                   cause="crash", seq=dseq)
             return
         work = self.run_client(cid, self.version)
         if fault is not None:
             # a payload fault (truncate/nan/bitflip/duplicate) rides on
             # the work dict to the arrival/apply stages
             work["fault"] = fault
+        up_bytes = int(work["up_bytes"])
         if self.dynamics is None:
-            rtt = p.round_trip_seconds(self.down_bytes,
-                                       int(work["up_bytes"]), comp)
+            rtt = p.round_trip_seconds(self.down_bytes, up_bytes, comp)
         else:
             rtt = self.dynamics.round_trip_seconds(
-                p, self.down_bytes, int(work["up_bytes"]), comp, cid,
-                z_down, z_up)
-        self.tracer.span("dispatch", now, rtt, cid=cid, tier=tier,
-                         region=region, down_bytes=self.down_bytes,
-                         up_bytes=int(work["up_bytes"]),
-                         version=self.version, outcome="ok")
+                p, self.down_bytes, up_bytes, comp, cid, z_down, z_up)
+        if self.tracer.enabled:
+            # the span's phase components, recomputed from the same
+            # already-drawn z values — zero extra PRNG draws
+            if self.dynamics is None:
+                dl = self.down_bytes / p.downlink_bps
+                ul = up_bytes / p.uplink_bps
+            else:
+                dl = lm.transfer_seconds(self.down_bytes, p.downlink_bps,
+                                         z_down)
+                ul = lm.transfer_seconds(up_bytes, p.uplink_bps, z_up)
+            dseq = self.tracer.span(
+                "dispatch", now, rtt, parent=parent, cid=cid, tier=tier,
+                region=region, down_bytes=self.down_bytes,
+                up_bytes=up_bytes, version=self.version, outcome="ok",
+                t_down=float(dl),
+                t_comp=float(comp * p.compute_multiplier),
+                t_up=float(ul))
+        else:
+            dseq = None
         q.push(now + rtt, "complete", cid=cid, version=self.version,
-               work=work, tier=tier, rtt=rtt, region=region)
+               work=work, tier=tier, rtt=rtt, region=region, seq=dseq)
 
     def _flush(self, buffer, now: float, records) -> None:
-        metrics = self.apply_update(buffer, now, self.version)
         stale = np.array([e.staleness for e in buffer], np.float64)
+        # the flush instant is emitted *before* apply_update so the
+        # accountant/ledger instants the apply emits (dp_flush,
+        # quarantine, edge_flush) can parent on it via last_flush_seq.
+        # Its parent is the buffered upload with the largest seq — seqs
+        # are emission-(= virtual-time-)monotone, so that is the last
+        # arrival, the one that actually triggered this flush.
+        parent = None
+        if self.tracer.enabled:
+            seqs = [e.seq for e in buffer if e.seq is not None]
+            parent = max(seqs) if seqs else None
+        self.last_flush_seq = self.tracer.instant(
+            "flush", now, parent=parent, version=self.version,
+            buffer_fill=float(len(buffer)),
+            staleness_mean=float(stale.mean()),
+            staleness_max=float(stale.max()))
+        metrics = self.apply_update(buffer, now, self.version)
         # buffer_fill < goal_count only for the deadline-drained final
         # flush (the consumer pads it back to the fixed apply shape);
         # recorded so DP audits and tests can see the padding happened
@@ -557,10 +638,6 @@ class BufferedAsyncScheduler:
                "staleness_max": float(stale.max())}
         rec.update(metrics or {})
         records.append(rec)
-        self.tracer.instant("flush", now, version=self.version,
-                            buffer_fill=float(len(buffer)),
-                            staleness_mean=float(stale.mean()),
-                            staleness_max=float(stale.max()))
         self.version += 1
 
     def finish_event(self, now: float) -> None:
@@ -619,21 +696,23 @@ class BufferedAsyncScheduler:
                 break
             if ev.kind == "retry":
                 # a dispatch slot parked by a dark availability window:
-                # try again now that the clock moved
-                self._dispatch(q, ev.time)
+                # try again now that the clock moved (chained to the
+                # parked retry instant, so escalating backoffs link up)
+                self._dispatch(q, ev.time, parent=ev.payload.get("seq"))
                 continue
             if ev.kind == "failed":
                 if ev.payload.get("cause") == "crash":
                     self.metrics.counter("crashes").inc()
                 else:
                     self.metrics.counter("dropouts").inc()
-                self._dispatch(q, ev.time)
+                self._dispatch(q, ev.time, parent=ev.payload.get("seq"))
                 continue
             work = ev.payload["work"]
             fault = work.get("fault")
             cid = int(ev.payload["cid"])
             tier = ev.payload.get("tier")
             region = ev.payload.get("region")
+            dseq = ev.payload.get("seq")
             if fault is not None and fault["kind"] == "truncate":
                 # the upload died partway: the wire carried (and bills)
                 # a fraction of the bytes; the server detects the length
@@ -647,22 +726,23 @@ class BufferedAsyncScheduler:
                 if region is not None:
                     self.metrics.counter("region_up_bytes").inc(
                         arrived, label=region)
-                self.tracer.instant("fault", ev.time,
+                self.tracer.instant("fault", ev.time, parent=dseq,
                                     fault="truncate_upload", cid=cid,
                                     tier=tier, frac=float(fault["frac"]),
                                     up_bytes=arrived)
-                self._dispatch(q, ev.time)
+                self._dispatch(q, ev.time, parent=dseq)
                 continue
             s = self.version - ev.payload["version"]
             self.metrics.counter("uploads").inc()
             self.metrics.counter("up_bytes").inc(int(work["up_bytes"]))
             if self.observe is not None:
                 self.observe(cid, ev.payload["rtt"])
-            self.tracer.instant("upload", ev.time, cid=cid, tier=tier,
-                                region=region,
-                                up_bytes=int(work["up_bytes"]),
-                                staleness=int(s),
-                                rtt=float(ev.payload["rtt"]))
+            useq = self.tracer.instant("upload", ev.time, parent=dseq,
+                                       cid=cid, tier=tier,
+                                       region=region,
+                                       up_bytes=int(work["up_bytes"]),
+                                       staleness=int(s),
+                                       rtt=float(ev.payload["rtt"]))
             if region is not None:
                 self.metrics.counter("region_uploads").inc(label=region)
                 self.metrics.counter("region_up_bytes").inc(
@@ -677,14 +757,14 @@ class BufferedAsyncScheduler:
             entry = BufferEntry(
                 work=work,
                 weight=float(self.staleness_fn(s)) * float(work["weight"]),
-                staleness=int(s))
+                staleness=int(s), seq=useq)
             self.buffer.append(entry)
             if fault is not None and fault["kind"] in ("nan", "bitflip"):
                 # the corrupted payload buffers normally — the apply
                 # stage materializes the damage; the sanitize screen
                 # (core/sanitize.py) is what should catch it
                 self.metrics.counter("corrupted").inc()
-                self.tracer.instant("fault", ev.time,
+                self.tracer.instant("fault", ev.time, parent=useq,
                                     fault="corrupt_" + fault["kind"],
                                     cid=cid, tier=tier)
             elif fault is not None and fault["kind"] == "duplicate":
@@ -701,12 +781,13 @@ class BufferedAsyncScheduler:
                     self.metrics.counter("region_uploads").inc(label=region)
                     self.metrics.counter("region_up_bytes").inc(
                         int(work["up_bytes"]), label=region)
-                self.tracer.instant("fault", ev.time,
+                self.tracer.instant("fault", ev.time, parent=useq,
                                     fault="duplicate_upload", cid=cid,
                                     tier=tier)
                 self.buffer.append(BufferEntry(work=work,
                                                weight=entry.weight,
-                                               staleness=entry.staleness))
+                                               staleness=entry.staleness,
+                                               seq=useq))
             # duplicates can leave the buffer past goal_count: flush in
             # exact goal_count batches and carry the remainder (when
             # faults are off the buffer never exceeds goal_count, so
@@ -719,5 +800,5 @@ class BufferedAsyncScheduler:
                     # flush boundaries are the one point where no lane
                     # work is pending: snapshot-safe
                     self.checkpoint_hook(self, ev.time)
-            self._dispatch(q, ev.time)
+            self._dispatch(q, ev.time, parent=useq)
         return records

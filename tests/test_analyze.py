@@ -1,0 +1,364 @@
+"""Causal trace graph + critical-path attribution (src/repro/obs/
+analyze.py) and the report/compare CLIs over it.
+
+The load-bearing acceptance: on a traced run — sync or async, calm or
+hostile — each round/flush window's phase breakdown (downlink, compute,
+uplink, retry, apply, wait) sums to its virtual wall time *exactly*,
+and the v4 seq/parent chain links every server update back through its
+bounding upload to the dispatch that caused it."""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fedpt
+from repro.data import synthetic as syn
+from repro.nn import basic
+from repro.obs import analyze as analyze_lib
+from repro.obs import compare as compare_lib
+from repro.obs import export as export_lib
+from repro.obs import report as report_lib
+from repro.obs import schema as schema_lib
+from repro.obs import trace as trace_lib
+from repro.sim import grid as simgrid
+
+
+def init_fn(seed):
+    return {"dense": basic.init_dense(seed, "dense", 64, 4, jnp.float32,
+                                      bias=True)}
+
+
+def loss_fn(params, b):
+    x = b["images"].reshape(b["images"].shape[0], -1)
+    logits = basic.dense(x, params["dense"])
+    lp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(lp, b["labels"][:, None], 1)), {}
+
+
+def make_ds(n_clients=10, seed=0):
+    return syn.make_federated_images(n_clients, 30, (8, 8, 1), 4, seed=seed,
+                                     test_examples=64)
+
+
+RC = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0)
+
+DP_RC = fedpt.RoundConfig(4, 2, 8, "sgd", 0.1, "sgd", 1.0,
+                          dp_clip_norm=0.5, dp_noise_multiplier=0.4)
+
+
+def _run(gc, rc=RC, rounds=4, seed=3, n_clients=10):
+    return simgrid.run_grid(init_fn, loss_fn, make_ds(n_clients), rc,
+                            rounds, grid=gc, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# The identity: phases sum to the round's virtual wall time
+
+
+def test_sync_identity_bounded_and_attributed():
+    res = _run(simgrid.GridConfig(fleet="pareto-mobile",
+                                  telemetry="memory"))
+    a = analyze_lib.analyze(res.telemetry)
+    assert a.mode == "sync"
+    assert len(a.breakdowns) == len(res.history)
+    for b in a.breakdowns:
+        assert b.check_identity(), b
+        assert all(v >= 0.0 for v in b.phases.values()), b.phases
+        # no deadline and no over-selection: every round is closed by
+        # its slowest counted arrival, so attribution always lands
+        assert b.bounded_by is not None and b.bounded_by["cid"] is not None
+        # something real happened inside the window
+        assert b.phases["compute"] > 0.0 or b.phases["uplink"] > 0.0
+    assert a.virtual_seconds == pytest.approx(res.virtual_seconds)
+    st = a.stragglers
+    assert st["unattributed"] == 0
+    assert sum(s["count"] for s in st["by_cid"].values()) \
+        == len(a.breakdowns)
+    assert sum(s["seconds"] for s in st["by_cid"].values()) \
+        == pytest.approx(sum(b.span for b in a.breakdowns))
+
+
+def test_sync_deadline_bound_rounds_are_wait():
+    """Deadline-closed rounds have no bounding upload: the window is
+    unattributed wait — and the identity must STILL hold."""
+    res = _run(simgrid.GridConfig(fleet="pareto-mobile",
+                                  over_selection=1.3,
+                                  straggler_deadline=0.02,
+                                  telemetry="memory"))
+    a = analyze_lib.analyze(res.telemetry)
+    assert a.mode == "sync"
+    deadline_bound = [b for b in a.breakdowns if b.bounded_by is None]
+    assert deadline_bound, "a 20ms deadline on pareto-mobile must bind"
+    for b in a.breakdowns:
+        assert b.check_identity(), b
+    for b in deadline_bound:
+        assert b.phases["wait"] == pytest.approx(b.span)
+    assert a.stragglers["unattributed"] == len(deadline_bound)
+
+
+@pytest.mark.chaos
+def test_async_chaos_regions_dp_identity():
+    """The ISSUE's acceptance run: hostile fleet (chaos faults +
+    quarantine) on a 4-region topology with per-flush DP — every
+    inter-flush window's phases sum to its span, each flush is
+    attributed to the arrival that filled the buffer, and the dp_flush
+    chain reproduces the reported budget."""
+    gc = simgrid.GridConfig(mode="async", fleet="pareto-mobile",
+                            concurrency=5, goal_count=3,
+                            telemetry="memory", faults="chaos",
+                            sanitize=True, topology=4)
+    res = _run(gc, rc=DP_RC, rounds=6, seed=0)
+    a = analyze_lib.analyze(res.telemetry)
+    assert a.mode == "async"
+    assert len(a.breakdowns) == len(res.history)
+    for b in a.breakdowns:
+        assert b.check_identity(), b
+        assert all(v >= -1e-12 for v in b.phases.values()), b.phases
+        assert b.bounded_by is not None
+        assert b.bounded_by["region"] is not None
+    # back-to-back windows tile [0, virtual_seconds of the last flush]
+    assert a.breakdowns[0].start == 0.0
+    for prev, nxt in zip(a.breakdowns, a.breakdowns[1:]):
+        assert prev.end == nxt.start
+    # privacy curve == the accountant's own summary
+    assert len(a.privacy) == res.dp["flushes"]
+    assert a.privacy[-1]["epsilon"] == pytest.approx(res.dp["epsilon"])
+    eps = [p["epsilon"] for p in a.privacy]
+    assert eps == sorted(eps)
+    assert all(p["burn_rate"] >= 0.0 for p in a.privacy)
+    # the hostile fleet left fingerprints
+    assert a.counts["faults"], "chaos run must record faults"
+    assert sum(a.counts["quarantine"].values()) \
+        == res.faults["quarantined"]
+
+
+def test_chain_integrity_async():
+    """v4 causal ids: upload -> dispatch, flush -> upload, dp_flush /
+    edge_flush -> flush, and seqs strictly increase."""
+    gc = simgrid.GridConfig(mode="async", fleet="pareto-mobile",
+                            concurrency=5, goal_count=3,
+                            telemetry="memory", topology=2)
+    res = _run(gc, rc=DP_RC, rounds=5, seed=1)
+    recs = [r.to_json() for r in res.telemetry.events]
+    assert schema_lib.validate_causal_ids(recs) == []
+    g = analyze_lib.build_graph(res.telemetry)
+    for u in g.of_kind("upload"):
+        assert g.get(u.parent).kind == "dispatch", u
+    flush_seqs = set()
+    for f in g.of_kind("flush"):
+        flush_seqs.add(f.seq)
+        assert g.get(f.parent).kind == "upload", f
+        # the bounding upload is the LATEST buffered arrival: monotone
+        # seqs make it the max over the flushed batch
+        assert f.parent < f.seq
+    for d in g.of_kind("dp_flush"):
+        assert d.parent in flush_seqs, d
+    for e in g.of_kind("edge_flush"):
+        assert e.parent in flush_seqs, e
+    for t in g.of_kind("tier_upload"):
+        assert t.parent in flush_seqs, t
+
+
+def test_sync_chain_integrity():
+    res = _run(simgrid.GridConfig(fleet="pareto-mobile",
+                                  telemetry="memory"))
+    g = analyze_lib.build_graph(res.telemetry)
+    round_seqs = set()
+    for r in g.of_kind("round"):
+        round_seqs.add(r.seq)
+        up = g.get(r.parent)
+        assert up is not None and up.kind == "upload", r
+        assert g.get(up.parent).kind == "dispatch"
+        # the bounding upload lands exactly at the round's end
+        assert up.t == pytest.approx(r.end)
+    for t in g.of_kind("tier_upload"):
+        assert t.parent in round_seqs
+
+
+def test_jsonl_roundtrip_equals_memory(tmp_path):
+    gc = simgrid.GridConfig(mode="async", fleet="pareto-mobile",
+                            concurrency=5, goal_count=3,
+                            telemetry="memory", faults="chaos",
+                            sanitize=True)
+    res = _run(gc, rounds=5, seed=2)
+    p = str(tmp_path / "run.jsonl")
+    export_lib.write_jsonl(res.telemetry.events, p)
+    via_file = analyze_lib.analyze(p).to_json()
+    in_memory = analyze_lib.analyze(res.telemetry).to_json()
+    assert json.dumps(via_file, sort_keys=True) \
+        == json.dumps(in_memory, sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# Degradation: pre-v4 traces, empty traces, dur=None spans
+
+
+def test_pre_v4_trace_degrades_to_wait():
+    """v1-v3 records (no seq/parent) still build a graph and still
+    satisfy the identity — every round is just unattributed wait."""
+    recs = [
+        {"v": 1, "kind": "dispatch", "t": 0.0, "dur": 2.0, "cid": 1},
+        {"v": 2, "kind": "upload", "t": 2.0, "cid": 1, "up_bytes": 10},
+        {"v": 3, "kind": "round", "t": 0.0, "dur": 4.0, "round": 0},
+        {"v": 1, "kind": "dispatch", "t": 4.0, "dur": None, "cid": 2,
+         "outcome": "dropout"},
+    ]
+    assert schema_lib.validate_records(recs) == []
+    a = analyze_lib.analyze(recs)
+    assert a.mode == "sync"
+    (b,) = a.breakdowns
+    assert b.check_identity()
+    assert b.bounded_by is None
+    assert b.phases["wait"] == pytest.approx(4.0)
+    assert a.stragglers["unattributed"] == 1
+    # ...but the causal-id contract rightly rejects such a stream
+    assert schema_lib.validate_causal_ids(recs) != []
+
+
+def test_empty_trace_everything_is_empty():
+    a = analyze_lib.analyze([])
+    assert a.mode == "empty"
+    assert a.breakdowns == [] and a.virtual_seconds == 0.0
+    assert a.privacy == [] and a.wire == {}
+    assert a.stragglers["unattributed"] == 0
+    doc = export_lib.perfetto_trace([])
+    assert [e for e in doc["traceEvents"] if e.get("ph") not in ("M",)] \
+        == []
+    text = report_lib.build_report([])
+    assert "no rounds/flushes" in text
+
+
+def test_validate_causal_ids_contract():
+    ok = [
+        {"v": 4, "kind": "dispatch", "t": 0.0, "dur": 1.0, "seq": 0},
+        {"v": 4, "kind": "upload", "t": 1.0, "up_bytes": 5, "cid": 1,
+         "seq": 1, "parent": 0},
+    ]
+    assert schema_lib.validate_causal_ids(ok) == []
+    missing = [dict(ok[0]), dict(ok[1])]
+    del missing[1]["seq"]
+    assert any("seq" in e for e in schema_lib.validate_causal_ids(missing))
+    decreasing = [dict(ok[0], seq=5), dict(ok[1], seq=3, parent=None)]
+    assert schema_lib.validate_causal_ids(decreasing) != []
+    dangling = [dict(ok[0]), dict(ok[1], parent=99)]
+    assert any("parent" in e
+               for e in schema_lib.validate_causal_ids(dangling))
+    no_links = [dict(ok[0]), dict(ok[1], parent=None)]
+    assert any("no parent link" in e
+               for e in schema_lib.validate_causal_ids(no_links))
+
+
+def test_perfetto_flow_events_and_stable_sort():
+    """Same-timestamp events sort by seq (deterministic output order
+    regardless of emission order), and parent links become Perfetto
+    flow ("s"/"f") pairs that ui.perfetto.dev draws as arrows."""
+    recs = [
+        trace_lib.TraceRecord("dispatch", 0.0, 2.0, {"cid": 1}, 0, None),
+        # two instants at the SAME t, listed in reverse seq order
+        trace_lib.TraceRecord("flush", 2.0, None, {"version": 0}, 2, 1),
+        trace_lib.TraceRecord("upload", 2.0, None,
+                              {"cid": 1, "up_bytes": 5}, 1, 0),
+        # dangling parent (resumed run): no flow, no crash
+        trace_lib.TraceRecord("dp_flush", 2.0, None, {"flush": 0}, 3, 99),
+    ]
+    doc = export_lib.perfetto_trace(recs)
+    named = [e for e in doc["traceEvents"]
+             if e.get("ph") not in ("M", "s", "f")]
+    same_t = [e["name"] for e in named if e["ts"] == 2.0e6]
+    assert same_t == ["upload", "flush", "dp_flush"]   # seq order, not input
+    flows = [e for e in doc["traceEvents"] if e.get("ph") in ("s", "f")]
+    # two real links (0->1, 1->2); seq 3's parent 99 is dangling
+    assert {(e["ph"], e["id"]) for e in flows} \
+        == {("s", 1), ("f", 1), ("s", 2), ("f", 2)}
+    for e in flows:
+        assert e["cat"] == "causal"
+    # flow starts sit at the parent's coordinates, ends at the child's
+    start1 = next(e for e in flows if e["ph"] == "s" and e["id"] == 1)
+    assert start1["ts"] == 2.0e6                      # dispatch end
+    # reversing input order must not change the export
+    doc2 = export_lib.perfetto_trace(list(reversed(recs)))
+    assert json.dumps(doc, sort_keys=True) \
+        == json.dumps(doc2, sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# Report + compare CLIs
+
+
+def _traced_run_files(tmp_path, seed=7):
+    gc = simgrid.GridConfig(mode="async", fleet="pareto-mobile",
+                            concurrency=5, goal_count=3,
+                            telemetry="memory", faults="chaos",
+                            sanitize=True, topology=2)
+    res = _run(gc, rc=DP_RC, rounds=4, seed=seed)
+    jsonl = str(tmp_path / f"run{seed}.jsonl")
+    export_lib.write_jsonl(res.telemetry.events, jsonl)
+    snap = str(tmp_path / f"snap{seed}.json")
+    with open(snap, "w") as f:
+        json.dump(res.metrics.snapshot(), f)
+    return res, jsonl, snap
+
+
+def test_report_cli_renders_and_cross_checks(tmp_path):
+    res, jsonl, snap = _traced_run_files(tmp_path)
+    out = str(tmp_path / "report.md")
+    assert report_lib.main([jsonl, "--metrics", snap, "-o", out]) == 0
+    text = open(out).read()
+    assert "## Critical path" in text
+    assert "identity" in text and "holds" in text and "VIOLATED" not in text
+    assert "## Straggler attribution" in text
+    assert "## Privacy budget" in text
+    assert f"{res.dp['epsilon']:.4g}" in text
+    assert "## Metrics cross-check" in text and "MISMATCH" not in text
+    assert "## Events" in text
+
+
+def test_compare_cli_gates(tmp_path, capsys):
+    _, jsonl_a, snap_a = _traced_run_files(tmp_path, seed=7)
+    _, jsonl_b, snap_b = _traced_run_files(tmp_path, seed=8)
+    # identical inputs: the strictest gate passes
+    assert compare_lib.main([snap_a, snap_a, "--fail-on", "*"]) == 0
+    # different seeds: counter totals differ -> exact gate trips...
+    assert compare_lib.main([snap_a, snap_b,
+                             "--fail-on", "counter.up_bytes"]) == 1
+    out = capsys.readouterr().out
+    assert "FAIL counter.up_bytes" in out
+    # ...a generous relative tolerance lets the same pair through
+    assert compare_lib.main([snap_a, snap_b,
+                             "--fail-on", "counter.up_bytes:10.0"]) == 0
+    # traces flatten too, and diff against each other
+    diff_md = str(tmp_path / "diff.md")
+    assert compare_lib.main([jsonl_a, jsonl_b, "--changed-only",
+                             "-o", diff_md]) == 0
+    text = open(diff_md).read()
+    assert "Run diff" in text and "virtual_seconds" in text
+    # a trace/snapshot pair shares no names: gating one errors out
+    assert compare_lib.main([jsonl_a, snap_a,
+                             "--fail-on", "kind.flush"]) == 1
+
+
+def test_compare_flatten_shapes(tmp_path):
+    res, jsonl, snap = _traced_run_files(tmp_path, seed=9)
+    flat_t = compare_lib.flatten(jsonl)
+    assert flat_t["kind.flush"] == len(res.history)
+    assert flat_t["privacy.epsilon_final"] \
+        == pytest.approx(res.dp["epsilon"])
+    assert flat_t["virtual_seconds"] > 0
+    flat_s = compare_lib.flatten(snap)
+    assert flat_s["counter.uploads"] \
+        == res.scheduler_stats["uploads"]
+    # labeled counters flatten per label
+    assert any(k.startswith("counter.region_uploads/")
+               for k in flat_s)
+
+
+def test_summarize_bench_digest(capsys):
+    import benchmarks.summarize as summ
+
+    summ.main(["--bench"])
+    out = capsys.readouterr().out
+    assert "Benchmark digest" in out
+    assert "Server aggregation" in out and "fused speedup" in out
+    assert "Fleet state" in out and "vectorized speedup" in out
+    assert "Selection-policy sweep" in out and "vs uniform" in out
